@@ -1,0 +1,33 @@
+"""Figure 1b: achieved attention FLOPS vs CP degree per sequence length.
+
+The paper measures FlashAttention-2 kernel FLOPS under CP in {1,2,4,8} for
+several sequence lengths; the signature result is that higher CP degrades
+achieved FLOPS, brutally so for short sequences. We reproduce the *relative*
+curve from the perf model's efficiency term (which is exactly what DACP's
+scheduling decisions consume), for both evaluation models.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from .common import H100, PAPER, emit
+
+
+def run():
+    for model in ("qwen2.5-0.5b", "qwen2.5-7b"):
+        prof = PAPER[model].to_profile()
+        for seq in (1024, 4096, 8192, 32768):
+            rel = []
+            for cp in (1, 2, 4, 8):
+                eff = H100.efficiency(seq / cp, prof.hidden)
+                rel.append(eff)
+            base = rel[0]
+            derived = " ".join(
+                f"cp{c}={e/base:.3f}" for c, e in zip((1, 2, 4, 8), rel)
+            )
+            emit(f"fig1b/{model}/seq{seq}", 0.0, derived)
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,33 @@
+"""Table 3: collective-latency model fit (Eq. 16) against the paper's
+profiled all-gather numbers."""
+
+from __future__ import annotations
+
+import numpy as np
+
+from .common import emit
+from repro.core.perf_model import _PAPER_TABLE3_ALLGATHER, fit_comm_model
+
+
+def run():
+    alpha, fixed = fit_comm_model()
+    emit(
+        "table3/fit", 0.0,
+        f"alpha={alpha:.3e}s/B T_fixed={fixed*1e6:.1f}us "
+        f"(=> eff bw {1/alpha/1e9:.1f} GB/s)",
+    )
+    worst = 0.0
+    for v, t in _PAPER_TABLE3_ALLGATHER:
+        pred = alpha * v + fixed
+        err = abs(pred - t) / t
+        worst = max(worst, err)
+        emit(
+            f"table3/allgather_{int(v/2**20)}MB",
+            t * 1e6,
+            f"pred={pred*1e6:.1f}us err={err*100:.1f}%",
+        )
+    emit("table3/summary", 0.0, f"worst_rel_err={worst*100:.1f}%")
+
+
+if __name__ == "__main__":
+    run()

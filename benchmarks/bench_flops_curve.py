@@ -1,0 +1,27 @@
+"""Figure 5 / App. A.2: FLOPs vs sequence length for Qwen2.5-0.5B and -7B —
+the quadratic-dominance transition the trade-off analysis (§4.3.1) rests on."""
+
+from __future__ import annotations
+
+from .common import PAPER, emit
+
+
+def run():
+    for model in ("qwen2.5-0.5b", "qwen2.5-7b"):
+        prof = PAPER[model].to_profile()
+        pts = []
+        for s in (1024, 4096, 8192, 16384, 32768):
+            pts.append((s, prof.flops(s)))
+        derived = " ".join(f"S{s//1024}K={f:.3e}" for s, f in pts)
+        # the paper's headline: 0.5B FLOPs(32K)/FLOPs(4K) ~ 30x vs memory 8x
+        r = prof.flops(32768) / prof.flops(4096)
+        emit(f"fig5/{model}", 0.0, derived + f" ratio32K/4K={r:.1f} (memory 8.0)")
+        # quadratic transition point: where attn flops == linear flops
+        h = prof.hidden
+        lin = 20 * h * h + 4 * h * prof.kv_dim
+        s_star = lin / (4 * h)
+        emit(f"fig5/{model}/transition", 0.0, f"S*={int(s_star)} tokens")
+
+
+if __name__ == "__main__":
+    run()

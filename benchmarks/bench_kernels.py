@@ -1,0 +1,62 @@
+"""Kernel micro-benchmarks.
+
+On this CPU container the Pallas kernels run in interpret mode (Python-level
+execution — wall time is NOT TPU-indicative), so we benchmark the XLA paths
+that the dry-run actually lowers (chunked segment attention, jnp SSD) and
+report the Pallas kernels' correctness deltas + their structural stats
+(tiles, skip fraction) instead of fake wall clocks.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .common import emit, timeit
+from repro.kernels.ops import flash_attention
+from repro.kernels.ref import flash_attention_ref
+from repro.models.attention import segment_attention_chunked, segment_attention_dense
+
+
+def run():
+    rng = np.random.default_rng(0)
+    t, hq, hkv, d = 512, 8, 2, 64
+    q = jnp.asarray(rng.normal(size=(t, hq, d)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(t, hkv, d)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(t, hkv, d)), jnp.float32)
+    segs = jnp.asarray(np.repeat([1, 2, 3, 4], t // 4), jnp.int32)
+    pos = jnp.asarray(np.tile(np.arange(t // 4), 4), jnp.int32)
+
+    f_dense = jax.jit(lambda q: segment_attention_dense(q, k, v, segs, segs, pos, pos))
+    f_chunk = jax.jit(
+        lambda q: segment_attention_chunked(q, k, v, segs, segs, pos, pos, kv_chunk=128)
+    )
+    f_dense(q).block_until_ready()
+    f_chunk(q).block_until_ready()
+    emit("kernels/xla_dense_attn_512", timeit(lambda: f_dense(q).block_until_ready()))
+    emit("kernels/xla_chunked_attn_512", timeit(lambda: f_chunk(q).block_until_ready()))
+
+    # pallas (interpret) correctness + block-skip accounting
+    o = flash_attention(q, k, v, segs, segs, pos, pos, block_q=128, block_k=128)
+    o_ref, _ = flash_attention_ref(
+        jnp.transpose(q, (1, 0, 2)), jnp.transpose(k, (1, 0, 2)),
+        jnp.transpose(v, (1, 0, 2)), segs, segs, pos, pos,
+    )
+    err = float(jnp.abs(o - jnp.transpose(o_ref, (1, 0, 2))).max())
+    n_blocks = (t // 128) ** 2
+    live = sum(
+        1
+        for qb in range(t // 128)
+        for kb in range(t // 128)
+        if (qb + 1) * 128 > kb * 128
+    )
+    emit(
+        "kernels/pallas_flash_512", 0.0,
+        f"max_err_vs_ref={err:.2e} live_tiles={live}/{n_blocks} "
+        f"(block-skip saves {100*(1-live/n_blocks):.0f}% of tiles)",
+    )
+
+
+if __name__ == "__main__":
+    run()

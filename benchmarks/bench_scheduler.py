@@ -1,0 +1,29 @@
+"""Scheduling overhead (§4.3 'near-zero cost online scheduling').
+
+Wall-clock latency of the FULL online pipeline (GDS + DACP over the global
+batch) at increasing batch sizes — must stay in the low-millisecond range to
+vanish behind a single device step."""
+
+from __future__ import annotations
+
+import numpy as np
+
+from .common import H100, PAPER, emit, timeit
+from repro.core.gds import schedule_global_batch
+from repro.data.distributions import DATASETS
+
+
+def run():
+    prof = PAPER["qwen2.5-0.5b"].to_profile()
+    dist = DATASETS["chatqa2"]()
+    rng = np.random.default_rng(0)
+    for batch in (64, 256, 1024):
+        lengths = np.minimum(dist.sample(rng, batch), 26_000 * 8)
+        us = timeit(
+            lambda: schedule_global_batch(lengths, 4, 8, 26_000, prof), repeats=5
+        )
+        emit(f"scheduler/batch{batch}", us, f"{us/1e3:.2f}ms_per_iteration")
+
+
+if __name__ == "__main__":
+    run()

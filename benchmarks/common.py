@@ -1,0 +1,41 @@
+"""Shared helpers for the benchmark harness."""
+
+from __future__ import annotations
+
+import sys
+import os
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np
+
+from repro.configs.registry import PAPER, REGISTRY
+from repro.core.perf_model import H100, TPU_V5E
+
+
+def emit(name: str, us_per_call: float, derived: str = "") -> None:
+    """Stub contract: ``name,us_per_call,derived`` CSV rows on stdout."""
+    print(f"{name},{us_per_call:.3f},{derived}")
+
+
+def timeit(fn, repeats: int = 5, warmup: int = 1) -> float:
+    for _ in range(warmup):
+        fn()
+    t0 = time.perf_counter()
+    for _ in range(repeats):
+        fn()
+    return (time.perf_counter() - t0) / repeats * 1e6  # us
+
+
+PAPER_SETTINGS = {
+    # (model, dataset) -> (dp, cp, batch, bucket)  — paper §5
+    ("qwen2.5-0.5b", "wikipedia"): (4, 8, 64, 26_000),
+    ("qwen2.5-0.5b", "lmsyschat"): (4, 8, 64, 26_000),
+    ("qwen2.5-0.5b", "chatqa2"): (4, 8, 64, 26_000),
+    ("qwen2.5-7b", "wikipedia"): (4, 8, 64, 13_000),
+    ("qwen2.5-7b", "lmsyschat"): (4, 8, 64, 13_000),
+    ("qwen2.5-7b", "chatqa2"): (2, 16, 40, 13_000),
+}
+
+__all__ = ["emit", "timeit", "PAPER_SETTINGS", "PAPER", "REGISTRY", "H100", "TPU_V5E"]

@@ -1,0 +1,60 @@
+"""Benchmark harness entry point — one section per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows (stub contract). Sections:
+  fig1a   — dataset length distributions vs Table 1
+  fig1b   — attention efficiency vs CP degree
+  table3  — collective latency model fit
+  fig5    — FLOPs-vs-length curves + quadratic transition
+  fig3    — end-to-end speedup replay (+ step-by-step DACP/GDS/cost-aware)
+  fig4    — speedup vs batch size
+  sched   — online scheduling overhead
+  kernels — kernel microbench + Pallas correctness/structure
+  roofline— summary over the dry-run artifact (if present)
+"""
+
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+def main() -> None:
+    from . import (
+        bench_attn_cp,
+        bench_batchsize,
+        bench_comm_table,
+        bench_distributions,
+        bench_e2e_speedup,
+        bench_flops_curve,
+        bench_kernels,
+        bench_scheduler,
+        bench_v5e_projection,
+    )
+
+    bench_distributions.run()
+    bench_attn_cp.run()
+    bench_comm_table.run()
+    bench_flops_curve.run()
+    bench_e2e_speedup.run()
+    bench_batchsize.run()
+    bench_scheduler.run()
+    bench_kernels.run()
+    bench_v5e_projection.run(iters=6)
+    if os.path.exists("artifacts/dryrun.jsonl"):
+        from . import roofline
+
+        rows = roofline.table()
+        import numpy as np
+
+        live = [r for r in rows if "skipped" not in r]
+        doms = {}
+        for r in live:
+            doms[r["dominant"]] = doms.get(r["dominant"], 0) + 1
+        print(
+            f"roofline/summary,0.0,cells={len(live)} dominants={doms} "
+            f"(full table: artifacts/roofline.md)"
+        )
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,59 @@
+"""Inspect what Skrull actually decides: sample a global batch from each
+Long-SFT distribution, print the GDS/DACP plan, and compare simulated
+iteration time against the DeepSpeed-static baseline and LongAlign.
+
+    PYTHONPATH=src python examples/schedule_explorer.py [--dataset chatqa2]
+"""
+
+import argparse
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np
+
+from repro.configs.registry import PAPER
+from repro.core import H100, schedule_global_batch, simulate_iteration
+from repro.core.baselines import deepspeed_static_schedule, longalign_sorted_schedule
+from repro.core.dacp import DISTRIBUTED
+from repro.data.distributions import DATASETS
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dataset", default="chatqa2", choices=sorted(DATASETS))
+    ap.add_argument("--model", default="qwen2.5-0.5b")
+    ap.add_argument("--batch", type=int, default=64)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    prof = PAPER[args.model].to_profile()
+    dp, cp, bucket = 4, 8, 26_000
+    rng = np.random.default_rng(args.seed)
+    lengths = np.minimum(DATASETS[args.dataset]().sample(rng, args.batch), bucket * cp)
+    print(f"{args.dataset} batch of {args.batch}: "
+          f"min={lengths.min()} median={int(np.median(lengths))} max={lengths.max()}")
+
+    sched = schedule_global_batch(lengths, dp, cp, bucket, prof)
+    for r in sched.ranks:
+        toks = sum(int(lengths[mb].sum()) for mb in r.microbatches)
+        print(f"\nDP rank {r.dp_rank}: {len(r.microbatches)} micro-batches, {toks} tokens")
+        for m, (mb, plan) in enumerate(zip(r.microbatches, r.dacp)):
+            dist = [int(lengths[mb[i]]) for i in plan.dist_indices]
+            local = [int(lengths[mb[i]]) for i in np.nonzero(plan.assignment != DISTRIBUTED)[0]]
+            print(f"  mb{m}: {len(mb)} seqs | local {sorted(local, reverse=True)[:6]}"
+                  f"{'...' if len(local) > 6 else ''} | distributed {dist}")
+
+    for name, policy in (
+        ("skrull", sched),
+        ("deepspeed-static", deepspeed_static_schedule(lengths, dp, cp, bucket, prof)),
+        ("longalign-sorted", longalign_sorted_schedule(lengths, dp, cp, bucket, prof)),
+    ):
+        rep = simulate_iteration(policy, prof, H100)
+        print(f"\n{name:18s} iteration={rep.iteration_s*1e3:8.1f} ms "
+              f"dist_frac={rep.dist_seq_frac:.2f} mbs={rep.n_microbatches.tolist()}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,56 @@
+"""Serving example: batched prefill + autoregressive decode with KV caches
+(ring-buffer bounded for SWA), on a small dense model and a Mamba2 model.
+
+    PYTHONPATH=src python examples/serve_decode.py
+"""
+
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.models.transformer import CallConfig, init_model
+from repro.train.serve import decode_step, prefill
+
+
+def generate(cfg, prompt_len=32, gen_len=16, batch=4):
+    params = init_model(jax.random.PRNGKey(0), cfg)
+    call = CallConfig(attention_impl="dense", remat="none", ssd_chunk=16, kv_chunk=64)
+    rng = np.random.default_rng(0)
+    prompts = jnp.asarray(rng.integers(0, cfg.vocab, (batch, prompt_len)), jnp.int32)
+
+    t0 = time.perf_counter()
+    logits, caches, lens = prefill(params, cfg, call, prompts, max_len=prompt_len + gen_len)
+    tok = jnp.argmax(logits, -1).astype(jnp.int32)
+    out = [tok]
+    step = jax.jit(lambda t, l, c: decode_step(params, cfg, call, t, l, c))
+    for _ in range(gen_len - 1):
+        logits, caches = step(tok, lens, caches)
+        lens = lens + 1
+        tok = jnp.argmax(logits, -1).astype(jnp.int32)
+        out.append(tok)
+    dt = time.perf_counter() - t0
+    gen = jnp.stack(out, axis=1)
+    print(f"{cfg.name}: generated {batch}x{gen_len} tokens in {dt:.1f}s "
+          f"(greedy): {np.asarray(gen[0])[:12]}...")
+
+
+def main():
+    dense = ArchConfig(name="serve-dense", family="dense", modality="text",
+                       n_layers=2, d_model=128, n_heads=4, kv_heads=2,
+                       head_dim=32, d_ff=256, vocab=512, window=24)
+    generate(dense)
+    mamba = ArchConfig(name="serve-mamba2", family="ssm", modality="text",
+                       n_layers=2, d_model=128, n_heads=0, kv_heads=0, d_ff=0,
+                       vocab=512, ssm_state=16, ssm_heads=4)
+    generate(mamba)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,134 @@
+"""Checkpointing: atomic, asynchronous, keep-k, topology-agnostic.
+
+Layout:  <dir>/step_<n>/{arrays.npz, meta.json}  +  <dir>/LATEST (atomic
+pointer written last — a crash mid-save can never corrupt the restore path).
+
+Arrays are saved as host numpy (gathered from any sharding), so a checkpoint
+written on a 4x8 mesh restores onto 2x16, 1x1, or the 512-chip production
+mesh — the ELASTIC substrate: reload + re-shard is the whole rescale story
+(ft/elastic.py). The async writer moves serialization off the training thread;
+``wait()`` joins before the next save or shutdown.
+
+State captured: params, AdamW (step, m, v), loader state (epoch/cursor/seed),
+RNG key, user metadata. Restore is bit-exact (test_checkpoint.py).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import tempfile
+import threading
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+
+def _flatten(tree: Any) -> Tuple[List[np.ndarray], Any]:
+    leaves, treedef = jax.tree.flatten(tree)
+    return [np.asarray(x) for x in leaves], treedef
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, keep: int = 3, async_save: bool = True):
+        self.directory = directory
+        self.keep = keep
+        self.async_save = async_save
+        self._thread: Optional[threading.Thread] = None
+        os.makedirs(directory, exist_ok=True)
+
+    # -- save ---------------------------------------------------------------
+    def save(self, step: int, state_tree: Any, meta: Optional[Dict] = None) -> None:
+        leaves, _ = _flatten(state_tree)
+        meta = dict(meta or {})
+        meta["step"] = int(step)
+        self.wait()
+        if self.async_save:
+            self._thread = threading.Thread(
+                target=self._write, args=(step, leaves, meta), daemon=True
+            )
+            self._thread.start()
+        else:
+            self._write(step, leaves, meta)
+
+    def _write(self, step: int, leaves: List[np.ndarray], meta: Dict) -> None:
+        final = os.path.join(self.directory, f"step_{step:010d}")
+        tmp = tempfile.mkdtemp(dir=self.directory, prefix=".tmp_")
+        try:
+            np.savez(os.path.join(tmp, "arrays.npz"), *leaves)
+            with open(os.path.join(tmp, "meta.json"), "w") as f:
+                json.dump(meta, f)
+            if os.path.exists(final):
+                shutil.rmtree(final)
+            os.rename(tmp, final)  # atomic publish of the step dir
+            latest_tmp = os.path.join(self.directory, ".LATEST.tmp")
+            with open(latest_tmp, "w") as f:
+                f.write(os.path.basename(final))
+            os.replace(latest_tmp, os.path.join(self.directory, "LATEST"))
+            self._gc()
+        finally:
+            if os.path.exists(tmp):
+                shutil.rmtree(tmp, ignore_errors=True)
+
+    def _gc(self) -> None:
+        steps = sorted(
+            d for d in os.listdir(self.directory) if d.startswith("step_")
+        )
+        for d in steps[: -self.keep] if self.keep else []:
+            shutil.rmtree(os.path.join(self.directory, d), ignore_errors=True)
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    # -- restore --------------------------------------------------------------
+    def latest_step(self) -> Optional[int]:
+        pointer = os.path.join(self.directory, "LATEST")
+        if not os.path.exists(pointer):
+            return None
+        with open(pointer) as f:
+            name = f.read().strip()
+        if not os.path.isdir(os.path.join(self.directory, name)):
+            return None
+        return int(name.split("_")[1])
+
+    def restore(
+        self,
+        template_tree: Any,
+        step: Optional[int] = None,
+        shardings: Any = None,
+    ) -> Tuple[Any, Dict]:
+        """Rebuild ``template_tree``-shaped state; optionally placed onto
+        ``shardings`` (a matching tree of jax.sharding.Sharding — the elastic
+        re-shard path)."""
+        if step is None:
+            step = self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoint in {self.directory}")
+        d = os.path.join(self.directory, f"step_{step:010d}")
+        with open(os.path.join(d, "meta.json")) as f:
+            meta = json.load(f)
+        data = np.load(os.path.join(d, "arrays.npz"))
+        leaves = [data[k] for k in data.files]
+        tmpl_leaves, treedef = jax.tree.flatten(template_tree)
+        if len(leaves) != len(tmpl_leaves):
+            raise ValueError(
+                f"checkpoint has {len(leaves)} arrays, template needs {len(tmpl_leaves)}"
+            )
+        if shardings is not None:
+            shard_leaves = treedef.flatten_up_to(shardings)
+            leaves = [
+                jax.device_put(x.astype(t.dtype), s)
+                for x, t, s in zip(leaves, tmpl_leaves, shard_leaves)
+            ]
+        else:
+            leaves = [
+                jax.numpy.asarray(x, dtype=t.dtype) for x, t in zip(leaves, tmpl_leaves)
+            ]
+        return treedef.unflatten(leaves), meta
+
+
+__all__ = ["CheckpointManager"]

@@ -1,0 +1,5 @@
+"""Architecture configs: one module per assigned arch + the paper's models."""
+
+from .base import SHAPES, ArchConfig, ShapeSpec, supports_long_context
+
+__all__ = ["SHAPES", "ArchConfig", "ShapeSpec", "supports_long_context"]

@@ -1,0 +1,207 @@
+"""Architecture configuration schema + input-shape registry.
+
+``ArchConfig`` is the single source of truth consumed by the model zoo, the
+perf model (``to_profile``), the sharding rules and the dry-run. One file per
+assigned architecture lives next to this module; ``registry.py`` resolves
+``--arch <id>``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional, Tuple
+
+from ..core.perf_model import ModelProfile, estimate_bytes_per_token
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchConfig:
+    name: str
+    family: str  # dense | moe | ssm | hybrid
+    modality: str  # text | audio | vlm
+    n_layers: int
+    d_model: int
+    n_heads: int  # 0 for attention-free
+    kv_heads: int
+    d_ff: int
+    vocab: int
+    head_dim: int = 0  # 0 -> d_model // n_heads
+    qkv_bias: bool = False
+    window: Optional[int] = None  # sliding-window attention
+    # MoE
+    n_experts: int = 0
+    top_k: int = 0
+    expert_d_ff: int = 0  # fine-grained experts; 0 -> d_ff
+    moe_every: int = 1  # MoE in every k-th layer
+    # SSM / hybrid
+    ssm_state: int = 0
+    ssm_conv: int = 4
+    ssm_heads: int = 0  # 0 -> d_inner // 64
+    attn_every: int = 0  # hybrid: one attention layer per this many (0 = all attn)
+    # modality stub
+    n_frontend_tokens: int = 0  # VLM patch / audio frame embeddings per sample
+    # misc
+    rope_theta: float = 1_000_000.0
+    norm_eps: float = 1e-5
+    tie_embeddings: bool = False
+    glu: bool = True  # gated MLP (SwiGLU); False -> plain GELU MLP
+
+    # ---- derived -----------------------------------------------------------
+    @property
+    def head_dim_(self) -> int:
+        if self.head_dim:
+            return self.head_dim
+        return self.d_model // max(self.n_heads, 1)
+
+    @property
+    def kv_dim(self) -> int:
+        return self.kv_heads * self.head_dim_
+
+    @property
+    def d_inner(self) -> int:
+        return 2 * self.d_model  # mamba2 expansion
+
+    @property
+    def ssm_heads_(self) -> int:
+        return self.ssm_heads or max(self.d_inner // 64, 1)
+
+    @property
+    def attn_layer_frac(self) -> float:
+        if self.family == "ssm":
+            return 0.0
+        if self.family == "hybrid" and self.attn_every:
+            return 1.0 / self.attn_every
+        return 1.0
+
+    def param_count(self) -> int:
+        """Total parameters (embedding + layers + head)."""
+        h, ff = self.d_model, self.d_ff
+        emb = self.vocab * h * (1 if self.tie_embeddings else 2)
+        per_layer = 0
+        attn = h * (self.n_heads * self.head_dim_) * 2 + h * self.kv_dim * 2
+        if self.qkv_bias:
+            attn += self.n_heads * self.head_dim_ + 2 * self.kv_dim
+        mlp_ff = self.expert_d_ff or ff
+        dense_mlp = h * ff * (3 if self.glu else 2)
+        moe_mlp = self.n_experts * h * mlp_ff * (3 if self.glu else 2) + h * self.n_experts
+        d_in = self.d_inner
+        ssm = (
+            h * (2 * d_in + 2 * self.ssm_state * 2 + self.ssm_heads_)  # in_proj(ish)
+            + d_in * h  # out_proj
+            + self.ssm_conv * (d_in + 2 * self.ssm_state * 2)
+        )
+        for li in range(self.n_layers):
+            is_attn = self.layer_is_attention(li)
+            is_moe = self.layer_is_moe(li)
+            per_layer += 2 * h  # norms
+            if is_attn:
+                per_layer += attn
+            elif self.family in ("ssm", "hybrid"):
+                per_layer += ssm
+            if self.family in ("moe", "hybrid") and is_moe and self.n_experts:
+                per_layer += moe_mlp
+            elif not (self.family == "ssm"):
+                per_layer += dense_mlp
+            elif self.family == "ssm":
+                pass  # mamba2 blocks have no separate MLP
+        return emb + per_layer + h  # final norm
+
+    def active_param_count(self) -> int:
+        """Activated parameters per token (MoE: top_k of n_experts)."""
+        if not self.n_experts:
+            return self.param_count()
+        full = self.param_count()
+        mlp_ff = self.expert_d_ff or self.d_ff
+        moe_total = 0
+        moe_active = 0
+        for li in range(self.n_layers):
+            if self.layer_is_moe(li):
+                moe_total += self.n_experts * self.d_model * mlp_ff * (3 if self.glu else 2)
+                moe_active += self.top_k * self.d_model * mlp_ff * (3 if self.glu else 2)
+        return full - moe_total + moe_active
+
+    def layer_is_attention(self, li: int) -> bool:
+        if self.family == "ssm":
+            return False
+        if self.family == "hybrid" and self.attn_every:
+            return li % self.attn_every == self.attn_every // 2
+        return True
+
+    def layer_is_moe(self, li: int) -> bool:
+        if not self.n_experts:
+            return False
+        return li % self.moe_every == (1 if self.moe_every > 1 else 0)
+
+    def to_profile(self, remat: str = "selective") -> ModelProfile:
+        """Perf-model view for the Skrull scheduler (core.perf_model)."""
+        if self.family == "moe":
+            moe_active_ff: Optional[int] = self.top_k * (self.expert_d_ff or self.d_ff)
+        else:
+            moe_active_ff = None
+        return ModelProfile(
+            hidden=self.d_model,
+            kv_dim=max(self.kv_dim, 1),
+            n_layers=self.n_layers,
+            d_ff=self.d_ff,
+            vocab=self.vocab,
+            family=self.family,
+            window=self.window,
+            moe_active_ff=moe_active_ff,
+            attn_layer_frac=self.attn_layer_frac,
+            ssm_state=self.ssm_state,
+            bytes_per_token=estimate_bytes_per_token(self.d_model, self.n_layers, remat=remat),
+        )
+
+    def reduced(self, **overrides) -> "ArchConfig":
+        """Tiny same-family config for CPU smoke tests."""
+        shrink = dict(
+            n_layers=2 if self.family != "hybrid" else max(self.attn_every, 2),
+            d_model=64,
+            n_heads=4 if self.n_heads else 0,
+            kv_heads=min(self.kv_heads, 2) if self.n_heads else 0,
+            head_dim=16 if self.n_heads else 0,
+            d_ff=128,
+            vocab=256,
+            n_experts=min(self.n_experts, 4),
+            top_k=min(self.top_k, 2),
+            expert_d_ff=64 if self.expert_d_ff else 0,
+            ssm_state=min(self.ssm_state, 16),
+            ssm_heads=2 if self.family in ("ssm", "hybrid") else 0,
+            window=min(self.window, 64) if self.window else None,
+            n_frontend_tokens=min(self.n_frontend_tokens, 16),
+            name=self.name + "-reduced",
+        )
+        shrink.update(overrides)
+        return dataclasses.replace(self, **shrink)
+
+
+# ---------------------------------------------------------------------------
+# Input-shape registry (assigned LM shapes; seq_len x global_batch)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # "train" | "prefill" | "decode"
+
+
+SHAPES = {
+    "train_4k": ShapeSpec("train_4k", 4_096, 256, "train"),
+    "prefill_32k": ShapeSpec("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": ShapeSpec("decode_32k", 32_768, 128, "decode"),
+    "long_500k": ShapeSpec("long_500k", 524_288, 1, "decode"),
+}
+
+# long_500k needs sub-quadratic attention: SSM, hybrid, or SWA archs only.
+SUBQUADRATIC_FAMILIES = ("ssm", "hybrid")
+
+
+def supports_long_context(cfg: ArchConfig) -> bool:
+    return cfg.family in SUBQUADRATIC_FAMILIES or cfg.window is not None
+
+
+__all__ = ["ArchConfig", "ShapeSpec", "SHAPES", "supports_long_context"]

@@ -1,0 +1,24 @@
+"""DBRX-132B [moe] — 16 experts top-4, fine-grained MoE in every layer.
+
+[hf:databricks/dbrx-base; unverified] 40L d_model=6144 48H (GQA kv=8)
+d_ff=10752 (per expert) vocab=100352.
+"""
+
+from .base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="dbrx-132b",
+    family="moe",
+    modality="text",
+    n_layers=40,
+    d_model=6144,
+    n_heads=48,
+    kv_heads=8,
+    d_ff=10752,
+    vocab=100352,
+    n_experts=16,
+    top_k=4,
+    expert_d_ff=10752,
+    moe_every=1,
+    rope_theta=500_000.0,
+)

@@ -1,0 +1,24 @@
+"""Granite-MoE 3B-A800M [moe] — 40 fine-grained experts, top-8.
+
+[hf:ibm-granite/granite-3.0-1b-a400m-base family; hf] 32L d_model=1536
+24H (GQA kv=8) expert d_ff=512 vocab=49155, MoE in every layer.
+"""
+
+from .base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="granite-moe-3b-a800m",
+    family="moe",
+    modality="text",
+    n_layers=32,
+    d_model=1536,
+    n_heads=24,
+    kv_heads=8,
+    d_ff=512,
+    vocab=49155,
+    n_experts=40,
+    top_k=8,
+    expert_d_ff=512,
+    moe_every=1,
+    rope_theta=10_000.0,
+)

@@ -1,0 +1,21 @@
+"""H2O-Danube3-4B [dense] — llama+mistral mix with sliding-window attention.
+
+[arXiv:2401.16818 family; unverified] 24L d_model=3840 32H (GQA kv=8)
+d_ff=10240 vocab=32000, SWA window 4096 (sub-quadratic: runs long_500k).
+"""
+
+from .base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="h2o-danube-3-4b",
+    family="dense",
+    modality="text",
+    n_layers=24,
+    d_model=3840,
+    n_heads=32,
+    kv_heads=8,
+    d_ff=10240,
+    vocab=32000,
+    window=4096,
+    rope_theta=10_000.0,
+)

@@ -1,0 +1,28 @@
+"""Jamba-v0.1-52B [hybrid] — Mamba+attention 1:7 interleave, MoE 16e top-2.
+
+[arXiv:2403.19887; hf] 32L d_model=4096 32H (GQA kv=8) d_ff=14336
+vocab=65536; one attention layer per 8, MoE every other layer,
+ssm_state=16 (mamba1-style in paper; we use the SSD block with state 16).
+"""
+
+from .base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="jamba-v0.1-52b",
+    family="hybrid",
+    modality="text",
+    n_layers=32,
+    d_model=4096,
+    n_heads=32,
+    kv_heads=8,
+    d_ff=14336,
+    vocab=65536,
+    n_experts=16,
+    top_k=2,
+    expert_d_ff=14336,
+    moe_every=2,
+    attn_every=8,
+    ssm_state=16,
+    ssm_heads=128,
+    rope_theta=10_000.0,
+)

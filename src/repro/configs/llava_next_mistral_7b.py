@@ -1,0 +1,24 @@
+"""LLaVA-NeXT (Mistral-7B backbone) [vlm] — anyres tiling frontend stubbed.
+
+[hf:llava-hf/llava-v1.6-mistral-7b-hf; unverified] Backbone: 32L
+d_model=4096 32H (GQA kv=8) d_ff=14336 vocab=32000. The anyres vision
+tower is a STUB: input_specs provide precomputed patch embeddings
+(n_frontend_tokens = 2304 ~ 4 tiles + base of 576 - overlap budget)
+prepended to the text stream.
+"""
+
+from .base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="llava-next-mistral-7b",
+    family="dense",
+    modality="vlm",
+    n_layers=32,
+    d_model=4096,
+    n_heads=32,
+    kv_heads=8,
+    d_ff=14336,
+    vocab=32000,
+    n_frontend_tokens=2304,
+    rope_theta=1_000_000.0,
+)

@@ -1,0 +1,23 @@
+"""Mamba2-1.3B [ssm] — SSD (state-space duality), attention-free.
+
+[arXiv:2405.21060; unverified] 48L d_model=2048 ssm_state=128
+vocab=50280; d_inner = 2*d_model = 4096, 64 SSD heads of head_p=64.
+Sub-quadratic: runs long_500k.
+"""
+
+from .base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="mamba2-1.3b",
+    family="ssm",
+    modality="text",
+    n_layers=48,
+    d_model=2048,
+    n_heads=0,
+    kv_heads=0,
+    d_ff=0,
+    vocab=50280,
+    ssm_state=128,
+    ssm_heads=64,
+    tie_embeddings=True,
+)

@@ -1,0 +1,24 @@
+"""MusicGen-Large [audio] — decoder-only over EnCodec tokens.
+
+[arXiv:2306.05284; hf] 48L d_model=2048 32H (kv=32, MHA) d_ff=8192
+vocab=2048 (EnCodec codebook). Modality frontend (EnCodec encoder +
+codebook delay interleave) is a STUB: input_specs provide precomputed
+frame embeddings (n_frontend_tokens prefix).
+"""
+
+from .base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="musicgen-large",
+    family="dense",
+    modality="audio",
+    n_layers=48,
+    d_model=2048,
+    n_heads=32,
+    kv_heads=32,
+    d_ff=8192,
+    vocab=2048,
+    glu=False,  # musicgen uses plain GELU MLPs
+    n_frontend_tokens=256,  # conditioning frames (stubbed embeddings)
+    rope_theta=10_000.0,
+)

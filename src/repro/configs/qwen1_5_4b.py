@@ -1,0 +1,22 @@
+"""Qwen1.5-4B [dense] — QKV bias, near-MHA (kv=20).
+
+[hf:Qwen/Qwen1.5 family; hf] 40L d_model=2560 20H (kv=20) d_ff=6912
+vocab=151936. The MHA-like kv makes this the most collective-bound dense
+arch of the pool (CP volume ~ d_model).
+"""
+
+from .base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="qwen1.5-4b",
+    family="dense",
+    modality="text",
+    n_layers=40,
+    d_model=2560,
+    n_heads=20,
+    kv_heads=20,
+    d_ff=6912,
+    vocab=151936,
+    qkv_bias=True,
+    rope_theta=1_000_000.0,
+)

@@ -1,0 +1,18 @@
+"""Qwen2.5-0.5B — the paper's small evaluation model (§5, BucketSize 26K)."""
+
+from .base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="qwen2.5-0.5b",
+    family="dense",
+    modality="text",
+    n_layers=24,
+    d_model=896,
+    n_heads=14,
+    kv_heads=2,
+    d_ff=4864,
+    vocab=151936,
+    qkv_bias=True,
+    tie_embeddings=True,
+    rope_theta=1_000_000.0,
+)

@@ -1,0 +1,17 @@
+"""Qwen2.5-7B — the paper's large evaluation model (§5, BucketSize 13K)."""
+
+from .base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="qwen2.5-7b",
+    family="dense",
+    modality="text",
+    n_layers=28,
+    d_model=3584,
+    n_heads=28,
+    kv_heads=4,
+    d_ff=18944,
+    vocab=152064,
+    qkv_bias=True,
+    rope_theta=1_000_000.0,
+)

@@ -1,0 +1,40 @@
+"""--arch lookup: every assigned architecture + the paper's own models."""
+
+from __future__ import annotations
+
+from typing import Dict
+
+from .base import ArchConfig
+from .dbrx_132b import CONFIG as DBRX
+from .granite_moe_3b_a800m import CONFIG as GRANITE
+from .musicgen_large import CONFIG as MUSICGEN
+from .jamba_v0_1_52b import CONFIG as JAMBA
+from .mistral_large_123b import CONFIG as MISTRAL_LARGE
+from .h2o_danube_3_4b import CONFIG as DANUBE
+from .starcoder2_7b import CONFIG as STARCODER2
+from .qwen1_5_4b import CONFIG as QWEN15_4B
+from .llava_next_mistral_7b import CONFIG as LLAVA
+from .mamba2_1_3b import CONFIG as MAMBA2
+from .qwen2_5_0_5b import CONFIG as QWEN25_05B
+from .qwen2_5_7b import CONFIG as QWEN25_7B
+
+ASSIGNED: Dict[str, ArchConfig] = {
+    c.name: c
+    for c in (
+        DBRX, GRANITE, MUSICGEN, JAMBA, MISTRAL_LARGE,
+        DANUBE, STARCODER2, QWEN15_4B, LLAVA, MAMBA2,
+    )
+}
+
+PAPER: Dict[str, ArchConfig] = {c.name: c for c in (QWEN25_05B, QWEN25_7B)}
+
+REGISTRY: Dict[str, ArchConfig] = {**ASSIGNED, **PAPER}
+
+
+def get_arch(name: str) -> ArchConfig:
+    if name not in REGISTRY:
+        raise KeyError(f"unknown arch {name!r}; choose from {sorted(REGISTRY)}")
+    return REGISTRY[name]
+
+
+__all__ = ["ASSIGNED", "PAPER", "REGISTRY", "get_arch"]

@@ -1,0 +1,21 @@
+"""StarCoder2-7B [dense] — GQA kv=4, RoPE.
+
+[arXiv:2402.19173; hf] 32L d_model=4608 36H (GQA kv=4) d_ff=18432
+vocab=49152.
+"""
+
+from .base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="starcoder2-7b",
+    family="dense",
+    modality="text",
+    n_layers=32,
+    d_model=4608,
+    n_heads=36,
+    kv_heads=4,
+    d_ff=18432,
+    vocab=49152,
+    glu=False,  # starcoder2 uses plain GELU MLPs
+    rope_theta=1_000_000.0,
+)

@@ -1,0 +1,60 @@
+"""Skrull core — the paper's contribution as a composable library.
+
+Public surface:
+  perf_model  — Eqs. 12-16 cost model + hardware profiles (H100, TPU v5e)
+  dacp        — Algorithm 1/3 (micro-batch sequence classification/placement)
+  gds         — Algorithm 2 (global-batch -> per-DP-rank micro-batches)
+  cost        — Eq. 1-5 TDACP evaluator
+  simulator   — Eq. 8 iteration-time simulator for any schedule
+  baselines   — DeepSpeed-static and LongAlign-sorted comparison policies
+  solver      — brute-force Eq. 1 optimum for tiny instances (test oracle)
+"""
+
+from .cost import microbatch_tokens, tdacp
+from .dacp import DISTRIBUTED, DACPResult, DACPSchedulingError, feasible, schedule_dacp
+from .gds import (
+    GDSSchedulingError,
+    GlobalSchedule,
+    RankSchedule,
+    binpack_flops,
+    schedule_global_batch,
+    schedule_rank,
+)
+from .perf_model import (
+    H100,
+    HARDWARE,
+    TPU_V5E,
+    HardwareProfile,
+    ModelProfile,
+    derive_bucket_size,
+    estimate_bytes_per_token,
+    fit_comm_model,
+)
+from .simulator import IterationReport, simulate_iteration, speedup
+
+__all__ = [
+    "DISTRIBUTED",
+    "DACPResult",
+    "DACPSchedulingError",
+    "feasible",
+    "schedule_dacp",
+    "GDSSchedulingError",
+    "GlobalSchedule",
+    "RankSchedule",
+    "binpack_flops",
+    "schedule_global_batch",
+    "schedule_rank",
+    "H100",
+    "HARDWARE",
+    "TPU_V5E",
+    "HardwareProfile",
+    "ModelProfile",
+    "derive_bucket_size",
+    "estimate_bytes_per_token",
+    "fit_comm_model",
+    "IterationReport",
+    "simulate_iteration",
+    "speedup",
+    "tdacp",
+    "microbatch_tokens",
+]

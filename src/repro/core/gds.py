@@ -1,0 +1,188 @@
+"""GDS — Global Data Scheduling (paper §4.2, Alg. 2).
+
+Per iteration: take the global batch of K sequence lengths and produce, for
+every DP rank, an ordered list of micro-batches (each a list of sequence
+indices) such that
+
+  * FLOPs are bin-packed evenly across DP ranks (principle i),
+  * long and short sequences are interleaved inside each rank's micro-batches
+    via strided slicing of the ascending-sorted subset (principle ii),
+  * the number of micro-batches is the smallest for which every micro-batch
+    fits C*N tokens AND schedules under DACP (principle iii + roll-back).
+
+Scope = global batch: the largest scope preserving AdamW equivalence (§4.2).
+
+Beyond-paper: ``speed_factors`` (per-DP-rank relative throughput from the FT
+telemetry layer) bias the bin-packing — a straggling rank receives
+proportionally fewer FLOPs, turning GDS into the straggler-mitigation layer.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import List, Optional, Sequence
+
+import numpy as np
+
+from .dacp import DACPResult, DACPSchedulingError, schedule_dacp
+from .perf_model import ModelProfile
+
+
+class GDSSchedulingError(RuntimeError):
+    """No micro-batch count up to K+1 admits a feasible DACP schedule."""
+
+
+@dataclasses.dataclass
+class RankSchedule:
+    """Micro-batches for one DP rank: global-batch indices + DACP results."""
+
+    dp_rank: int
+    microbatches: List[np.ndarray]  # each: (k_j,) global indices
+    dacp: List[DACPResult]
+
+
+@dataclasses.dataclass
+class GlobalSchedule:
+    ranks: List[RankSchedule]
+    lengths: np.ndarray
+    bucket_size: int
+    n_cp: int
+
+    @property
+    def ws(self) -> int:
+        return len(self.ranks)
+
+    def validate(self) -> None:
+        """Eq. 9 (each sequence exactly once) + per-micro-batch Eq. 7/10."""
+        seen = np.zeros(len(self.lengths), dtype=np.int64)
+        for r in self.ranks:
+            for mb, d in zip(r.microbatches, r.dacp):
+                seen[mb] += 1
+                if self.lengths[mb].sum() > self.bucket_size * self.n_cp + 1e-6:
+                    raise AssertionError("Eq.10 violated")
+                d.validate()
+        if not np.all(seen == 1):
+            bad = np.nonzero(seen != 1)[0]
+            raise AssertionError(f"Eq.9 violated for sequences {bad.tolist()}")
+
+
+def binpack_flops(
+    lengths: np.ndarray,
+    ws: int,
+    profile: Optional[ModelProfile] = None,
+    speed_factors: Optional[Sequence[float]] = None,
+) -> List[np.ndarray]:
+    """Alg. 2 line 1: LPT greedy bin-packing of FLOPs into ``ws`` DP bins.
+
+    With ``speed_factors`` the bin load is normalised by rank speed, so the
+    min-max objective of Eq. 8 is on *time*, not FLOPs (straggler-aware).
+    """
+    speed = np.ones(ws) if speed_factors is None else np.asarray(speed_factors, float)
+    if np.any(speed <= 0):
+        raise ValueError("speed factors must be positive")
+    if profile is None:
+        cost = lengths.astype(np.float64) ** 2
+    else:
+        cost = np.array([profile.flops_train(float(s)) for s in lengths])
+    bins: List[List[int]] = [[] for _ in range(ws)]
+    loads = np.zeros(ws)
+    for i in np.argsort(-cost, kind="stable"):  # longest processing time first
+        # loads[j]/speed[j] is projected time; choose argmin of time-after-add
+        j = int(np.argmin((loads + cost[i]) / speed))
+        bins[j].append(int(i))
+        loads[j] += cost[i]
+    return [np.asarray(b, dtype=np.int64) for b in bins]
+
+
+def schedule_rank(
+    subset: np.ndarray,
+    lengths: np.ndarray,
+    bucket_size: int,
+    n_cp: int,
+    profile: Optional[ModelProfile] = None,
+    rollback_policy: str = "first",
+    max_extra_microbatches: Optional[int] = None,
+) -> "tuple[List[np.ndarray], List[DACPResult]]":
+    """Alg. 2 lines 2-12 for one DP rank's subset of the global batch."""
+    k = len(subset)
+    if k == 0:
+        return [], []
+    sub_lengths = lengths[subset]
+    order = np.argsort(sub_lengths, kind="stable")  # line 3: ascending
+    sorted_subset = subset[order]
+    cap = bucket_size * n_cp
+
+    total = float(sub_lengths.sum())
+    init = max(int(math.ceil(total / cap)) - 1, 0)  # line 2
+    limit = k + 1 if max_extra_microbatches is None else init + 1 + max_extra_microbatches
+    n_mb = init
+    while n_mb <= limit:  # line 4 (paper: while init <= K+1)
+        n_mb += 1  # line 5
+        mbs: List[np.ndarray] = []
+        dacps: List[DACPResult] = []
+        ok = True
+        for j in range(n_mb):  # line 6
+            mb = sorted_subset[j::n_mb]  # line 7: interleave long/short
+            if len(mb) == 0:
+                continue
+            if lengths[mb].sum() >= cap:  # line 8: overload -> roll back
+                ok = False
+                break
+            try:
+                d = schedule_dacp(
+                    lengths[mb], bucket_size, n_cp, profile, rollback_policy
+                )
+            except DACPSchedulingError:  # line 8: DACP failure -> roll back
+                ok = False
+                break
+            mbs.append(mb)
+            dacps.append(d)
+        if ok and mbs:
+            return mbs, dacps
+    raise GDSSchedulingError(
+        f"no feasible micro-batching for subset of {k} seqs "
+        f"(total={int(total)} tokens, C*N={cap})"
+    )
+
+
+def schedule_global_batch(
+    lengths: Sequence[int],
+    ws: int,
+    n_cp: int,
+    bucket_size: int,
+    profile: Optional[ModelProfile] = None,
+    speed_factors: Optional[Sequence[float]] = None,
+    rollback_policy: str = "first",
+) -> GlobalSchedule:
+    """Full Skrull scheduling: GDS (Alg. 2) over DP ranks + DACP (Alg. 1) per
+    micro-batch. Near-zero cost: O(K log K) sort + greedy passes."""
+    s = np.asarray(lengths, dtype=np.int64)
+    if np.any(s <= 0):
+        raise ValueError("sequence lengths must be positive")
+    too_big = s[s > bucket_size * n_cp]
+    if too_big.size:
+        raise GDSSchedulingError(
+            f"sequence of {int(too_big.max())} tokens exceeds C*N="
+            f"{bucket_size * n_cp}; increase BucketSize (PEFT/recompute) or CP"
+        )
+    bins = binpack_flops(s, ws, profile, speed_factors)
+    ranks = []
+    for dp_rank, subset in enumerate(bins):
+        mbs, dacps = schedule_rank(
+            subset, s, bucket_size, n_cp, profile, rollback_policy
+        )
+        ranks.append(RankSchedule(dp_rank=dp_rank, microbatches=mbs, dacp=dacps))
+    sched = GlobalSchedule(ranks=ranks, lengths=s, bucket_size=bucket_size, n_cp=n_cp)
+    sched.validate()
+    return sched
+
+
+__all__ = [
+    "GDSSchedulingError",
+    "RankSchedule",
+    "GlobalSchedule",
+    "binpack_flops",
+    "schedule_rank",
+    "schedule_global_batch",
+]

@@ -1,0 +1,120 @@
+"""Beyond-paper scheduling refinements.
+
+The paper's Alg. 1 distributes a sequence only under *memory* pressure
+(principle i: "avoid sharding"). On mixtures with mid-length sequences that
+fit the bucket (e.g. bimodal sets with many 8-26K sequences under C=26K), a
+single local long sequence becomes an indivisible unit of load and dominates
+the Eq. 1 min-max, while distributing it would cost S/N compute + cheap linear
+comm. ``cost_aware_refine`` closes this gap with a greedy local search driven
+by the SAME Eq. 1-5 cost model the paper already uses:
+
+  repeat:
+    j*   <- argmax_j local compute time
+    k*   <- the local sequence on j* whose conversion to distributed lowers
+            the TDACP estimate the most (and keeps Eq. 7 feasible)
+    stop when no conversion improves TDACP
+
+Monotone on the Eq. 1 objective and never violates Eq. 7, so it can only
+improve on Alg. 1's plan under the model. Recorded in EXPERIMENTS.md §Perf as
+a beyond-paper optimization (scheduling side).
+"""
+
+from __future__ import annotations
+
+import copy
+from typing import Optional, Sequence
+
+import numpy as np
+
+from .cost import tdacp
+from .dacp import DISTRIBUTED, DACPResult, schedule_dacp
+from .perf_model import HardwareProfile, ModelProfile
+
+
+def _feasible_after(res: DACPResult) -> bool:
+    try:
+        res.validate()
+        return True
+    except AssertionError:
+        return False
+
+
+def cost_aware_refine(
+    result: DACPResult,
+    profile: ModelProfile,
+    hw: HardwareProfile,
+    train: bool = True,
+    max_rounds: int = 64,
+) -> DACPResult:
+    """Greedy bidirectional local search on Eq. 1.
+
+    Moves tried per round: (a) convert a large *local* sequence to
+    distributed (fixes Alg. 1's min-max blow-up on mid-length sequences);
+    (b) convert a *distributed* sequence to local on the least-loaded rank
+    (fixes Alg. 1's rollback cascades that end with everything sharded and
+    every short paying CP overheads). Accept the best strictly-improving
+    feasible move; stop at a local optimum.
+    """
+    best = DACPResult(
+        assignment=result.assignment.copy(),
+        lengths=result.lengths,
+        n_cp=result.n_cp,
+        bucket_size=result.bucket_size,
+    )
+    best_cost = tdacp(best, profile, hw, train=train)
+
+    def try_move(assign) -> tuple:
+        cand = DACPResult(
+            assignment=assign, lengths=best.lengths,
+            n_cp=best.n_cp, bucket_size=best.bucket_size,
+        )
+        if not _feasible_after(cand):
+            return None, np.inf
+        return cand, tdacp(cand, profile, hw, train=train)
+
+    for _ in range(max_rounds):
+        moves = []
+        local_idx = np.nonzero(best.assignment != DISTRIBUTED)[0]
+        # (a) largest locals -> distributed
+        for i in local_idx[np.argsort(-best.lengths[local_idx])][:6]:
+            a = best.assignment.copy()
+            a[i] = DISTRIBUTED
+            moves.append(a)
+        # (b) distributed -> local on the rank with most remaining bucket
+        dist_idx = best.dist_indices
+        if dist_idx.size:
+            loads = np.array(
+                [best.lengths[best.assignment == j].sum() for j in range(best.n_cp)]
+            )
+            target = int(np.argmin(loads))
+            for i in dist_idx[np.argsort(best.lengths[dist_idx])][:6]:
+                a = best.assignment.copy()
+                a[i] = target
+                moves.append(a)
+        scored = [try_move(a) for a in moves]
+        scored = [(c, cost) for c, cost in scored if c is not None]
+        if not scored:
+            break
+        cand, cost = min(scored, key=lambda t: t[1])
+        if cost < best_cost * (1.0 - 1e-9):
+            best, best_cost = cand, cost
+        else:
+            break
+    return best
+
+
+def schedule_dacp_cost_aware(
+    lengths: Sequence[int],
+    bucket_size: int,
+    n_cp: int,
+    profile: ModelProfile,
+    hw: HardwareProfile,
+    train: bool = True,
+    rollback_policy: str = "first",
+) -> DACPResult:
+    """Alg. 1 followed by the cost-aware refinement pass."""
+    base = schedule_dacp(lengths, bucket_size, n_cp, profile, rollback_policy)
+    return cost_aware_refine(base, profile, hw, train=train)
+
+
+__all__ = ["cost_aware_refine", "schedule_dacp_cost_aware"]

@@ -1,0 +1,58 @@
+"""Exact reference solver for the DACP optimization problem (Eqs. 1-7).
+
+The paper notes exact solvers (SCIP [4]) are too slow for online use; Skrull's
+heuristic replaces them. We keep a brute-force solver for *tiny* instances
+(K <= ~8, N <= 4) as the ground-truth oracle in tests: it enumerates every
+classification D in {0,1}^K and every assignment of local sequences to ranks,
+scores each feasible plan with the same Eq. 1-5 cost, and returns the optimum.
+Used to bound the heuristic's optimality gap (test_solver_optimality).
+"""
+
+from __future__ import annotations
+
+import itertools
+from typing import Optional, Sequence, Tuple
+
+import numpy as np
+
+from .cost import tdacp
+from .dacp import DISTRIBUTED, DACPResult
+from .perf_model import HardwareProfile, ModelProfile
+
+
+def solve_dacp_exact(
+    lengths: Sequence[int],
+    bucket_size: int,
+    n_cp: int,
+    profile: ModelProfile,
+    hw: HardwareProfile,
+) -> Tuple[Optional[DACPResult], float]:
+    """Exhaustive Eq. 1 optimum. Returns (best_plan, best_cost);
+    (None, inf) if no feasible plan exists."""
+    s = np.asarray(lengths, dtype=np.int64)
+    k = len(s)
+    if k > 12:
+        raise ValueError("exact solver is for tiny instances only")
+    best: Optional[DACPResult] = None
+    best_cost = float("inf")
+    for dist_mask in itertools.product([0, 1], repeat=k):
+        local_idx = [i for i in range(k) if not dist_mask[i]]
+        # assign each local sequence to one of n_cp ranks
+        for ranks in itertools.product(range(n_cp), repeat=len(local_idx)):
+            assignment = np.full(k, DISTRIBUTED, dtype=np.int64)
+            for i, r in zip(local_idx, ranks):
+                assignment[i] = r
+            cand = DACPResult(
+                assignment=assignment, lengths=s, n_cp=n_cp, bucket_size=bucket_size
+            )
+            try:
+                cand.validate()  # Eq. 7
+            except AssertionError:
+                continue
+            cost = tdacp(cand, profile, hw)
+            if cost < best_cost:
+                best, best_cost = cand, cost
+    return best, best_cost
+
+
+__all__ = ["solve_dacp_exact"]

@@ -1,0 +1,26 @@
+"""Data pipeline: synthetic Long-SFT corpora, packing, and the Skrull loader."""
+
+from .distributions import (
+    DATASETS,
+    LengthDistribution,
+    chatqa2_like,
+    lmsyschat_like,
+    wikipedia_like,
+)
+from .dataset import SyntheticSFTDataset
+from .packing import BucketSpec, PackedMicrobatch, pack_microbatch
+from .loader import LoaderState, SkrullDataLoader
+
+__all__ = [
+    "DATASETS",
+    "LengthDistribution",
+    "chatqa2_like",
+    "lmsyschat_like",
+    "wikipedia_like",
+    "SyntheticSFTDataset",
+    "BucketSpec",
+    "PackedMicrobatch",
+    "pack_microbatch",
+    "LoaderState",
+    "SkrullDataLoader",
+]

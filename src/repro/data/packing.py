@@ -1,0 +1,244 @@
+"""Materialise a DACP plan into fixed-shape packed device buffers.
+
+XLA needs static shapes, so a Skrull micro-batch becomes two fixed-capacity
+token buffers per CP rank (the TPU re-think of the paper's dynamic NCCL
+launches — DESIGN.md §2/§4):
+
+  * local  buffer  [n_cp, c_loc]  — each rank's wholly-local sequences, packed
+  * dist   buffer  [n_cp, c_dist] — contiguous rank-shards of the concatenated
+                                    distributed sequences
+
+A ladder of ``(c_loc, c_dist)`` bucket shapes (c_loc + c_dist = C_budget,
+c_loc a multiple of C/8) keeps ONE compiled step per ladder entry while
+bounding padding waste; the scheduler runs with C_sched = C_budget * 7/8 so
+any feasible plan maps onto some ladder entry (proof in choose_bucket).
+
+Each buffer carries tokens, next-token labels (segment-aware), segment ids
+(0 = padding), restart position ids, and loss weights. Loss normalisation is
+by the *global batch* valid-token count, so any partition of the global batch
+produces identical gradients (test_grad_equivalence).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from ..core.dacp import DISTRIBUTED, DACPResult
+
+
+@dataclasses.dataclass(frozen=True)
+class BucketSpec:
+    n_cp: int
+    c_loc: int
+    c_dist: int  # per-rank shard capacity of the distributed pack
+
+    @property
+    def tokens_per_rank(self) -> int:
+        return self.c_loc + self.c_dist
+
+
+def bucket_ladder(c_budget: int, n_cp: int, steps: int = 8) -> List[BucketSpec]:
+    """Bucket shapes for the compiled-step cache.
+
+    Full-budget splits (c_loc = k*unit, c_dist = C - c_loc, k = 0..steps)
+    guarantee coverage of every feasible plan (see choose_bucket); additional
+    sub-budget totals (C/2, C/4, C/8 with coarse splits) cut padding compute
+    for small micro-batches — all entries allocate <= the C_budget activation
+    bound, so Eq. 7 memory safety is shape-independent. Entries are ordered
+    smallest-total-first, then least-c_loc, so choose_bucket's first match is
+    the cheapest covering shape.
+    """
+    unit = max(c_budget // steps, 1)
+    specs = set()
+    for k in range(steps + 1):
+        c_loc = min(unit * k, c_budget)
+        specs.add((c_loc, c_budget - c_loc))
+    for denom, subsplits in ((8, 2), (4, 2), (2, 4)):
+        total = c_budget // denom
+        if total < unit:
+            continue
+        for k in range(subsplits + 1):
+            c_loc = total * k // subsplits
+            specs.add((c_loc, total - c_loc))
+    ordered = sorted(specs, key=lambda p: (p[0] + p[1], p[0]))
+    return [BucketSpec(n_cp=n_cp, c_loc=a, c_dist=b) for a, b in ordered]
+
+
+def scheduler_bucket_size(c_budget: int, steps: int = 8) -> int:
+    """C_sched handed to Alg. 1/2: one ladder unit of slack guarantees a
+    ladder entry covers any feasible (local, dist) split."""
+    return c_budget - max(c_budget // steps, 1)
+
+
+def choose_bucket(
+    ladder: Sequence[BucketSpec], loc_needed: int, dist_needed: int
+) -> BucketSpec:
+    """Smallest-c_loc ladder entry covering the micro-batch.
+
+    For any plan with loc + dist <= C_sched = C - unit: the chosen
+    c_loc = ceil(loc/unit)*unit >= loc and c_dist = C - c_loc >=
+    C - loc - unit >= dist. Hence coverage always exists.
+    """
+    for spec in ladder:  # ladder is ascending in c_loc
+        if spec.c_loc >= loc_needed and spec.c_dist >= dist_needed:
+            return spec
+    raise ValueError(
+        f"no bucket covers loc={loc_needed}, dist={dist_needed} "
+        f"(ladder max loc={ladder[-1].c_loc})"
+    )
+
+
+@dataclasses.dataclass
+class PackedMicrobatch:
+    """Numpy buffers for one compiled Skrull micro-step (one CP group)."""
+
+    spec: BucketSpec
+    loc_tokens: np.ndarray  # (n_cp, c_loc) int32
+    loc_labels: np.ndarray  # (n_cp, c_loc) int32, -1 = ignore
+    loc_segs: np.ndarray  # (n_cp, c_loc) int32, 0 = pad
+    loc_pos: np.ndarray  # (n_cp, c_loc) int32
+    dist_tokens: np.ndarray  # (n_cp, c_dist) int32
+    dist_labels: np.ndarray
+    dist_segs: np.ndarray
+    dist_pos: np.ndarray
+    n_local: int
+    n_dist: int
+
+    @property
+    def valid_tokens(self) -> int:
+        return int((self.loc_labels >= 0).sum() + (self.dist_labels >= 0).sum())
+
+    def as_arrays(self) -> Dict[str, np.ndarray]:
+        return {
+            "loc_tokens": self.loc_tokens,
+            "loc_labels": self.loc_labels,
+            "loc_segs": self.loc_segs,
+            "loc_pos": self.loc_pos,
+            "dist_tokens": self.dist_tokens,
+            "dist_labels": self.dist_labels,
+            "dist_segs": self.dist_segs,
+            "dist_pos": self.dist_pos,
+        }
+
+
+def empty_microbatch(spec: BucketSpec) -> PackedMicrobatch:
+    """All-padding micro-batch (used to lock-step DP ranks with fewer mbs)."""
+    z = lambda c: np.zeros((spec.n_cp, c), dtype=np.int32)
+    neg = lambda c: np.full((spec.n_cp, c), -1, dtype=np.int32)
+    return PackedMicrobatch(
+        spec=spec,
+        loc_tokens=z(spec.c_loc),
+        loc_labels=neg(spec.c_loc),
+        loc_segs=z(spec.c_loc),
+        loc_pos=z(spec.c_loc),
+        dist_tokens=z(spec.c_dist),
+        dist_labels=neg(spec.c_dist),
+        dist_segs=z(spec.c_dist),
+        dist_pos=z(spec.c_dist),
+        n_local=0,
+        n_dist=0,
+    )
+
+
+def _labels_for(tokens: np.ndarray, loss_mask: np.ndarray) -> np.ndarray:
+    """Next-token labels inside one sequence; last token has no target."""
+    labels = np.full(len(tokens), -1, dtype=np.int32)
+    labels[:-1] = tokens[1:]
+    # only positions whose TARGET is a response token contribute to the loss
+    tgt_mask = np.zeros(len(tokens), dtype=bool)
+    tgt_mask[:-1] = loss_mask[1:] > 0
+    labels = np.where(tgt_mask, labels, -1)
+    return labels
+
+
+def microbatch_needs(plan: DACPResult) -> Tuple[int, int]:
+    """(loc_needed, dist_needed) buffer capacities for this plan.
+
+    Uses ``plan.lengths`` (micro-batch-local order) — the plan's own view.
+    """
+    n_cp = plan.n_cp
+    lengths = plan.lengths
+    loc_needed = 0
+    for j in range(n_cp):
+        loc_needed = max(
+            loc_needed, int(sum(int(lengths[i]) for i in plan.local_indices(j)))
+        )
+    dist_total = int(sum(int(lengths[i]) for i in plan.dist_indices))
+    dist_needed = math.ceil(dist_total / n_cp) if dist_total else 0
+    return loc_needed, dist_needed
+
+
+def ladder_fits(ladder: Sequence[BucketSpec], loc: int, dist: int) -> bool:
+    """Does any ladder entry cover (loc, dist)?"""
+    return any(s.c_loc >= loc and s.c_dist >= dist for s in ladder)
+
+
+def pack_microbatch(
+    samples: Sequence[Tuple[np.ndarray, np.ndarray]],
+    plan: DACPResult,
+    spec: BucketSpec,
+) -> PackedMicrobatch:
+    """Fill fixed buffers of shape ``spec`` according to Alg. 1's assignment.
+
+    ``samples[k]`` = (tokens, loss_mask) for the plan's k-th sequence.
+    The caller guarantees ``spec`` covers ``microbatch_needs``.
+    """
+    n_cp = plan.n_cp
+    dist_total = int(sum(len(samples[i][0]) for i in plan.dist_indices))
+
+    mb = empty_microbatch(spec)
+    # -- local sequences: pack per rank ------------------------------------
+    seg = 0
+    for j in range(n_cp):
+        cursor = 0
+        for i in plan.local_indices(j):
+            tokens, mask = samples[i]
+            n = len(tokens)
+            seg += 1
+            sl = slice(cursor, cursor + n)
+            mb.loc_tokens[j, sl] = tokens
+            mb.loc_labels[j, sl] = _labels_for(tokens, mask)
+            mb.loc_segs[j, sl] = seg
+            mb.loc_pos[j, sl] = np.arange(n, dtype=np.int32)
+            cursor += n
+            mb.n_local += 1
+    # -- distributed sequences: concatenate, shard contiguously ------------
+    if dist_total:
+        cat_tokens = np.zeros(spec.c_dist * n_cp, dtype=np.int32)
+        cat_labels = np.full(spec.c_dist * n_cp, -1, dtype=np.int32)
+        cat_segs = np.zeros(spec.c_dist * n_cp, dtype=np.int32)
+        cat_pos = np.zeros(spec.c_dist * n_cp, dtype=np.int32)
+        cursor = 0
+        for i in plan.dist_indices:
+            tokens, mask = samples[i]
+            n = len(tokens)
+            seg += 1
+            sl = slice(cursor, cursor + n)
+            cat_tokens[sl] = tokens
+            cat_labels[sl] = _labels_for(tokens, mask)
+            cat_segs[sl] = seg
+            cat_pos[sl] = np.arange(n, dtype=np.int32)
+            cursor += n
+            mb.n_dist += 1
+        mb.dist_tokens[:] = cat_tokens.reshape(n_cp, spec.c_dist)
+        mb.dist_labels[:] = cat_labels.reshape(n_cp, spec.c_dist)
+        mb.dist_segs[:] = cat_segs.reshape(n_cp, spec.c_dist)
+        mb.dist_pos[:] = cat_pos.reshape(n_cp, spec.c_dist)
+    return mb
+
+
+__all__ = [
+    "BucketSpec",
+    "bucket_ladder",
+    "scheduler_bucket_size",
+    "choose_bucket",
+    "ladder_fits",
+    "microbatch_needs",
+    "PackedMicrobatch",
+    "empty_microbatch",
+    "pack_microbatch",
+]

@@ -1,0 +1,6 @@
+"""Fault tolerance: health monitoring, elastic rescale, straggler-aware GDS."""
+
+from .elastic import rescale
+from .health import HealthMonitor
+
+__all__ = ["rescale", "HealthMonitor"]

@@ -1,0 +1,62 @@
+"""Failure detection + straggler telemetry (single-host simulation of the
+multi-pod control plane).
+
+On a real cluster each host heartbeats to a coordinator; here ``HealthMonitor``
+is that coordinator, fed by per-rank step timings (real measurements in the
+training loop, or injected faults in tests). Policy outputs:
+
+  * ``failed_ranks``   — ranks whose heartbeat exceeded the timeout -> the
+                         loop triggers elastic rescale (ft/elastic.py)
+  * ``speed_factors``  — EMA of relative rank throughput -> fed STRAIGHT into
+                         GDS's bin-packing (core/gds.py): the scheduler IS the
+                         straggler-mitigation mechanism, no separate machinery
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class HealthMonitor:
+    ws: int
+    heartbeat_timeout_s: float = 60.0
+    ema: float = 0.7
+
+    def __post_init__(self):
+        self._last_beat = {i: time.monotonic() for i in range(self.ws)}
+        self._speed = np.ones(self.ws)
+
+    def beat(self, rank: int, step_time_s: Optional[float] = None, now: Optional[float] = None):
+        self._last_beat[rank] = time.monotonic() if now is None else now
+        if step_time_s is not None and step_time_s > 0:
+            # relative speed: inverse step time, normalised below
+            inv = 1.0 / step_time_s
+            self._speed[rank] = self.ema * self._speed[rank] + (1 - self.ema) * inv
+
+    def failed_ranks(self, now: Optional[float] = None) -> List[int]:
+        t = time.monotonic() if now is None else now
+        return [
+            r
+            for r, last in self._last_beat.items()
+            if t - last > self.heartbeat_timeout_s
+        ]
+
+    def speed_factors(self) -> np.ndarray:
+        s = self._speed / max(self._speed.mean(), 1e-9)
+        return np.clip(s, 0.2, 5.0)
+
+    def remove_rank(self, rank: int):
+        self._last_beat.pop(rank, None)
+
+    def resize(self, ws: int):
+        self.ws = ws
+        self._last_beat = {i: time.monotonic() for i in range(ws)}
+        self._speed = np.ones(ws)
+
+
+__all__ = ["HealthMonitor"]

@@ -1,0 +1,11 @@
+"""Pallas TPU kernels (validated in interpret mode on CPU; Mosaic on TPU).
+
+flash_attention.py — segment-masked flash attention fwd + two-sweep bwd
+ssd_scan.py        — Mamba2 SSD chunked scan fwd
+ops.py             — jit'd + custom_vjp public wrappers
+ref.py             — pure-jnp oracles
+"""
+
+from .ops import flash_attention, ssd_scan_op
+
+__all__ = ["flash_attention", "ssd_scan_op"]

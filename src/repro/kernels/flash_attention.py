@@ -1,0 +1,354 @@
+"""Pallas TPU flash attention with segment-id masking (packed Skrull buckets).
+
+TPU-native adaptation of FlashAttention-2 (DESIGN.md §2): BlockSpec tiling
+with MXU-aligned (128, 128) score blocks held in VMEM, online softmax carried
+in VMEM scratch across the sequential k-block grid dimension, block-level
+skipping of fully-masked tiles (packing contiguity makes buffer order causal
+inside a segment, so any tile with q_block entirely before k_block is dead —
+~2x FLOP saving on causal workloads).
+
+Layouts: q (Hq, T, D); k, v (Hkv, S, D); segment/position metadata (T, 1) /
+(S, 1) int32 (2D for TPU lane tiling). Forward also emits the logsumexp
+(Hq, T) consumed by the two backward kernels (dq-pass and dkv-pass — the
+standard two-sweep flash backward; no atomics on TPU).
+
+Validated in interpret mode against kernels/ref.py over shape/dtype sweeps
+(tests/test_kernels_flash.py) — this container has no TPU; on a real v5e the
+same pallas_call lowers through Mosaic unchanged.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG = -1e30
+DEFAULT_BLOCK_Q = 128
+DEFAULT_BLOCK_K = 128
+
+
+def _mask_block(qs, ks, qp, kp, window: Optional[int]):
+    """(BQ,1)x(BK,1) int32 meta -> (BQ, BK) bool mask."""
+    same = qs == ks.T
+    live = (qs > 0) & (ks.T > 0)
+    causal = qp >= kp.T
+    m = same & live & causal
+    if window is not None:
+        m &= (qp - kp.T) < window
+    return m
+
+
+# ---------------------------------------------------------------------------
+# Forward
+# ---------------------------------------------------------------------------
+
+
+def _fwd_kernel(
+    q_ref, k_ref, v_ref, qs_ref, ks_ref, qp_ref, kp_ref,  # inputs
+    o_ref, lse_ref,  # outputs
+    m_scr, l_scr, acc_scr,  # scratch
+    *, scale: float, window: Optional[int], block_q: int, block_k: int, n_kb: int,
+):
+    kb = pl.program_id(3)
+
+    @pl.when(kb == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    qb = pl.program_id(2)
+    # block-skip: all q tokens strictly before all k tokens in buffer order
+    # => causally dead for packed layouts (same-seg needs kpos<=qpos).
+    live_block = (qb + 1) * block_q > kb * block_k
+
+    @pl.when(live_block)
+    def _compute():
+        q = q_ref[0].astype(jnp.float32)  # (BQ, D)
+        k = k_ref[0].astype(jnp.float32)  # (BK, D)
+        v = v_ref[0].astype(jnp.float32)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        ) * scale  # (BQ, BK)
+        mask = _mask_block(qs_ref[...], ks_ref[...], qp_ref[...], kp_ref[...], window)
+        s = jnp.where(mask, s, NEG)
+
+        m_prev = m_scr[...][:, :1]  # (BQ, 1)
+        m_cur = jnp.max(s, axis=1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(s - m_new) * mask  # (BQ, BK)
+        corr = jnp.exp(m_prev - m_new)  # (BQ, 1)
+        l_new = l_scr[...][:, :1] * corr + jnp.sum(p, axis=1, keepdims=True)
+        acc_scr[...] = acc_scr[...] * corr + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+        )
+        m_scr[...] = jnp.broadcast_to(m_new, m_scr.shape)
+        l_scr[...] = jnp.broadcast_to(l_new, l_scr.shape)
+
+    @pl.when(kb == n_kb - 1)
+    def _finalize():
+        l = l_scr[...][:, :1]
+        o = jnp.where(l > 0, acc_scr[...] / jnp.maximum(l, 1e-30), 0.0)
+        o_ref[0] = o.astype(o_ref.dtype)
+        m = m_scr[...][:, :1]
+        lse = jnp.where(l > 0, m + jnp.log(jnp.maximum(l, 1e-30)), NEG)
+        lse_ref[0] = lse[:, 0].astype(lse_ref.dtype)
+
+
+def flash_attention_fwd(
+    q: jnp.ndarray,  # (Hq, T, D)
+    k: jnp.ndarray,  # (Hkv, S, D)
+    v: jnp.ndarray,
+    q_seg: jnp.ndarray,  # (T,) int32
+    kv_seg: jnp.ndarray,  # (S,)
+    q_pos: jnp.ndarray,
+    kv_pos: jnp.ndarray,
+    window: Optional[int] = None,
+    block_q: int = DEFAULT_BLOCK_Q,
+    block_k: int = DEFAULT_BLOCK_K,
+    interpret: bool = True,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    hq, t, d = q.shape
+    hkv, s, _ = k.shape
+    g = hq // hkv
+    block_q = min(block_q, t)
+    block_k = min(block_k, s)
+    assert t % block_q == 0 and s % block_k == 0, "pad T/S to block multiples"
+    n_qb, n_kb = t // block_q, s // block_k
+    scale = 1.0 / math.sqrt(d)
+
+    qs2 = q_seg.reshape(t, 1).astype(jnp.int32)
+    ks2 = kv_seg.reshape(s, 1).astype(jnp.int32)
+    qp2 = q_pos.reshape(t, 1).astype(jnp.int32)
+    kp2 = kv_pos.reshape(s, 1).astype(jnp.int32)
+
+    grid = (hkv, g, n_qb, n_kb)
+    kernel = functools.partial(
+        _fwd_kernel,
+        scale=scale,
+        window=window,
+        block_q=block_q,
+        block_k=block_k,
+        n_kb=n_kb,
+    )
+    out, lse = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_q, d), lambda h, gi, qb, kb: (h * g + gi, qb, 0)),
+            pl.BlockSpec((1, block_k, d), lambda h, gi, qb, kb: (h, kb, 0)),
+            pl.BlockSpec((1, block_k, d), lambda h, gi, qb, kb: (h, kb, 0)),
+            pl.BlockSpec((block_q, 1), lambda h, gi, qb, kb: (qb, 0)),
+            pl.BlockSpec((block_k, 1), lambda h, gi, qb, kb: (kb, 0)),
+            pl.BlockSpec((block_q, 1), lambda h, gi, qb, kb: (qb, 0)),
+            pl.BlockSpec((block_k, 1), lambda h, gi, qb, kb: (kb, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, block_q, d), lambda h, gi, qb, kb: (h * g + gi, qb, 0)),
+            pl.BlockSpec((1, block_q), lambda h, gi, qb, kb: (h * g + gi, qb)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((hq, t, d), q.dtype),
+            jax.ShapeDtypeStruct((hq, t), jnp.float32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 128), jnp.float32),
+            pltpu.VMEM((block_q, 128), jnp.float32),
+            pltpu.VMEM((block_q, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v, qs2, ks2, qp2, kp2)
+    return out, lse
+
+
+# ---------------------------------------------------------------------------
+# Backward: pass 1 (dq), gridded over q blocks, loops k blocks
+# ---------------------------------------------------------------------------
+
+
+def _bwd_dq_kernel(
+    q_ref, k_ref, v_ref, qs_ref, ks_ref, qp_ref, kp_ref, do_ref, lse_ref, delta_ref,
+    dq_ref,
+    dq_scr,
+    *, scale: float, window: Optional[int], block_q: int, block_k: int, n_kb: int,
+):
+    kb = pl.program_id(3)
+
+    @pl.when(kb == 0)
+    def _init():
+        dq_scr[...] = jnp.zeros_like(dq_scr)
+
+    qb = pl.program_id(2)
+    live_block = (qb + 1) * block_q > kb * block_k
+
+    @pl.when(live_block)
+    def _compute():
+        q = q_ref[0].astype(jnp.float32)
+        k = k_ref[0].astype(jnp.float32)
+        v = v_ref[0].astype(jnp.float32)
+        do = do_ref[0].astype(jnp.float32)
+        lse = lse_ref[0].reshape(block_q, 1)
+        delta = delta_ref[0].reshape(block_q, 1)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        ) * scale
+        mask = _mask_block(qs_ref[...], ks_ref[...], qp_ref[...], kp_ref[...], window)
+        p = jnp.where(mask, jnp.exp(s - lse), 0.0)
+        dp = jax.lax.dot_general(
+            do, v, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        )
+        ds = p * (dp - delta) * scale
+        dq_scr[...] += jax.lax.dot_general(
+            ds, k, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+        )
+
+    @pl.when(kb == n_kb - 1)
+    def _finalize():
+        dq_ref[0] = dq_scr[...].astype(dq_ref.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Backward: pass 2 (dk, dv), gridded over k blocks, loops q blocks
+# ---------------------------------------------------------------------------
+
+
+def _bwd_dkv_kernel(
+    q_ref, k_ref, v_ref, qs_ref, ks_ref, qp_ref, kp_ref, do_ref, lse_ref, delta_ref,
+    dk_ref, dv_ref,
+    dk_scr, dv_scr,
+    *, scale: float, window: Optional[int], block_q: int, block_k: int, n_qb: int,
+):
+    qb = pl.program_id(3)
+
+    @pl.when(qb == 0)
+    def _init():
+        dk_scr[...] = jnp.zeros_like(dk_scr)
+        dv_scr[...] = jnp.zeros_like(dv_scr)
+
+    kb = pl.program_id(2)
+    live_block = (qb + 1) * block_q > kb * block_k
+
+    @pl.when(live_block)
+    def _compute():
+        q = q_ref[0].astype(jnp.float32)
+        k = k_ref[0].astype(jnp.float32)
+        v = v_ref[0].astype(jnp.float32)
+        do = do_ref[0].astype(jnp.float32)
+        lse = lse_ref[0].reshape(block_q, 1)
+        delta = delta_ref[0].reshape(block_q, 1)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        ) * scale
+        mask = _mask_block(qs_ref[...], ks_ref[...], qp_ref[...], kp_ref[...], window)
+        p = jnp.where(mask, jnp.exp(s - lse), 0.0)  # (BQ, BK)
+        dv_scr[...] += jax.lax.dot_general(
+            p, do, (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32
+        )
+        dp = jax.lax.dot_general(
+            do, v, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        )
+        ds = p * (dp - delta) * scale
+        dk_scr[...] += jax.lax.dot_general(
+            ds, q, (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32
+        )
+
+    @pl.when(qb == n_qb - 1)
+    def _finalize():
+        dk_ref[0, 0] = dk_scr[...].astype(dk_ref.dtype)
+        dv_ref[0, 0] = dv_scr[...].astype(dv_ref.dtype)
+
+
+def flash_attention_bwd(
+    q, k, v, q_seg, kv_seg, q_pos, kv_pos, out, lse, do,
+    window: Optional[int] = None,
+    block_q: int = DEFAULT_BLOCK_Q,
+    block_k: int = DEFAULT_BLOCK_K,
+    interpret: bool = True,
+):
+    hq, t, d = q.shape
+    hkv, s, _ = k.shape
+    g = hq // hkv
+    block_q = min(block_q, t)
+    block_k = min(block_k, s)
+    n_qb, n_kb = t // block_q, s // block_k
+    scale = 1.0 / math.sqrt(d)
+
+    delta = jnp.sum(out.astype(jnp.float32) * do.astype(jnp.float32), axis=-1)  # (Hq, T)
+    qs2 = q_seg.reshape(t, 1).astype(jnp.int32)
+    ks2 = kv_seg.reshape(s, 1).astype(jnp.int32)
+    qp2 = q_pos.reshape(t, 1).astype(jnp.int32)
+    kp2 = kv_pos.reshape(s, 1).astype(jnp.int32)
+
+    common_in = [
+        pl.BlockSpec((1, block_q, d), lambda h, gi, a, b: (h * g + gi, a, 0)),  # q
+        pl.BlockSpec((1, block_k, d), lambda h, gi, a, b: (h, b, 0)),  # k
+        pl.BlockSpec((1, block_k, d), lambda h, gi, a, b: (h, b, 0)),  # v
+        pl.BlockSpec((block_q, 1), lambda h, gi, a, b: (a, 0)),
+        pl.BlockSpec((block_k, 1), lambda h, gi, a, b: (b, 0)),
+        pl.BlockSpec((block_q, 1), lambda h, gi, a, b: (a, 0)),
+        pl.BlockSpec((block_k, 1), lambda h, gi, a, b: (b, 0)),
+        pl.BlockSpec((1, block_q, d), lambda h, gi, a, b: (h * g + gi, a, 0)),  # do
+        pl.BlockSpec((1, block_q), lambda h, gi, a, b: (h * g + gi, a)),  # lse
+        pl.BlockSpec((1, block_q), lambda h, gi, a, b: (h * g + gi, a)),  # delta
+    ]
+
+    dq = pl.pallas_call(
+        functools.partial(
+            _bwd_dq_kernel, scale=scale, window=window,
+            block_q=block_q, block_k=block_k, n_kb=n_kb,
+        ),
+        grid=(hkv, g, n_qb, n_kb),
+        in_specs=common_in,
+        out_specs=pl.BlockSpec((1, block_q, d), lambda h, gi, qb, kb: (h * g + gi, qb, 0)),
+        out_shape=jax.ShapeDtypeStruct((hq, t, d), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((block_q, d), jnp.float32)],
+        interpret=interpret,
+    )(q, k, v, qs2, ks2, qp2, kp2, do, lse, delta)
+
+    # dkv pass: grid loops (kb outer static dim, qb innermost sequential)
+    dkv_in = [
+        pl.BlockSpec((1, block_q, d), lambda h, gi, kb, qb: (h * g + gi, qb, 0)),  # q
+        pl.BlockSpec((1, block_k, d), lambda h, gi, kb, qb: (h, kb, 0)),  # k
+        pl.BlockSpec((1, block_k, d), lambda h, gi, kb, qb: (h, kb, 0)),  # v
+        pl.BlockSpec((block_q, 1), lambda h, gi, kb, qb: (qb, 0)),
+        pl.BlockSpec((block_k, 1), lambda h, gi, kb, qb: (kb, 0)),
+        pl.BlockSpec((block_q, 1), lambda h, gi, kb, qb: (qb, 0)),
+        pl.BlockSpec((block_k, 1), lambda h, gi, kb, qb: (kb, 0)),
+        pl.BlockSpec((1, block_q, d), lambda h, gi, kb, qb: (h * g + gi, qb, 0)),  # do
+        pl.BlockSpec((1, block_q), lambda h, gi, kb, qb: (h * g + gi, qb)),  # lse
+        pl.BlockSpec((1, block_q), lambda h, gi, kb, qb: (h * g + gi, qb)),  # delta
+    ]
+    dk_g, dv_g = pl.pallas_call(
+        functools.partial(
+            _bwd_dkv_kernel, scale=scale, window=window,
+            block_q=block_q, block_k=block_k, n_qb=n_qb,
+        ),
+        grid=(hkv, g, n_kb, n_qb),
+        in_specs=dkv_in,
+        out_specs=[
+            pl.BlockSpec((1, 1, block_k, d), lambda h, gi, kb, qb: (h, gi, kb, 0)),
+            pl.BlockSpec((1, 1, block_k, d), lambda h, gi, kb, qb: (h, gi, kb, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((hkv, g, s, d), jnp.float32),
+            jax.ShapeDtypeStruct((hkv, g, s, d), jnp.float32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((block_k, d), jnp.float32),
+            pltpu.VMEM((block_k, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v, qs2, ks2, qp2, kp2, do, lse, delta)
+
+    dk = dk_g.sum(axis=1)  # reduce GQA group contributions
+    dv = dv_g.sum(axis=1)
+    return dq.astype(q.dtype), dk.astype(k.dtype), dv.astype(v.dtype)
+
+
+__all__ = ["flash_attention_fwd", "flash_attention_bwd", "DEFAULT_BLOCK_Q", "DEFAULT_BLOCK_K"]

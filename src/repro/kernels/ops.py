@@ -1,0 +1,95 @@
+"""jit'd public wrappers for the Pallas kernels.
+
+``flash_attention`` is differentiable (custom_vjp binding the fwd kernel to
+the two backward-sweep kernels) and drop-in compatible with
+models/attention.py's (T, H, D) convention. ``INTERPRET`` flips Pallas
+interpret mode: True on this CPU container (validation), False on real TPUs.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .flash_attention import flash_attention_bwd, flash_attention_fwd
+from .ssd_scan import ssd_scan
+
+INTERPRET = True  # CPU container: execute kernel bodies in Python
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(7, 8, 9))
+def _flash_hTD(q, k, v, q_seg, kv_seg, q_pos, kv_pos, window, block_q, block_k):
+    out, _ = flash_attention_fwd(
+        q, k, v, q_seg, kv_seg, q_pos, kv_pos,
+        window=window, block_q=block_q, block_k=block_k, interpret=INTERPRET,
+    )
+    return out
+
+
+def _flash_fwd_rule(q, k, v, q_seg, kv_seg, q_pos, kv_pos, window, block_q, block_k):
+    out, lse = flash_attention_fwd(
+        q, k, v, q_seg, kv_seg, q_pos, kv_pos,
+        window=window, block_q=block_q, block_k=block_k, interpret=INTERPRET,
+    )
+    return out, (q, k, v, q_seg, kv_seg, q_pos, kv_pos, out, lse)
+
+
+def _flash_bwd_rule(window, block_q, block_k, res, do):
+    q, k, v, q_seg, kv_seg, q_pos, kv_pos, out, lse = res
+    dq, dk, dv = flash_attention_bwd(
+        q, k, v, q_seg, kv_seg, q_pos, kv_pos, out, lse, do,
+        window=window, block_q=block_q, block_k=block_k, interpret=INTERPRET,
+    )
+    return dq, dk, dv, None, None, None, None
+
+
+_flash_hTD.defvjp(_flash_fwd_rule, _flash_bwd_rule)
+
+
+def flash_attention(
+    q: jnp.ndarray,  # (T, Hq, D) — models/attention.py convention
+    k: jnp.ndarray,  # (S, Hkv, D)
+    v: jnp.ndarray,
+    q_seg: jnp.ndarray,
+    kv_seg: jnp.ndarray,
+    q_pos: jnp.ndarray,
+    kv_pos: jnp.ndarray,
+    window: Optional[int] = None,
+    block_q: int = 128,
+    block_k: int = 128,
+) -> jnp.ndarray:
+    """Differentiable segment-masked flash attention (Pallas)."""
+    t = q.shape[0]
+    s = k.shape[0]
+    bq = min(block_q, t)
+    bk = min(block_k, s)
+    pad_q = (-t) % bq
+    pad_k = (-s) % bk
+    if pad_q:
+        q = jnp.pad(q, ((0, pad_q), (0, 0), (0, 0)))
+        q_seg = jnp.pad(q_seg, (0, pad_q))
+        q_pos = jnp.pad(q_pos, (0, pad_q))
+    if pad_k:
+        k = jnp.pad(k, ((0, pad_k), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, pad_k), (0, 0), (0, 0)))
+        kv_seg = jnp.pad(kv_seg, (0, pad_k))
+        kv_pos = jnp.pad(kv_pos, (0, pad_k))
+    out = _flash_hTD(
+        jnp.transpose(q, (1, 0, 2)),
+        jnp.transpose(k, (1, 0, 2)),
+        jnp.transpose(v, (1, 0, 2)),
+        q_seg, kv_seg, q_pos, kv_pos, window, bq, bk,
+    )
+    out = jnp.transpose(out, (1, 0, 2))
+    return out[:t] if pad_q else out
+
+
+def ssd_scan_op(x, dt, a_neg, b, c, seg, chunk: int = 128):
+    """Pallas SSD chunked scan (forward-only serving path)."""
+    return ssd_scan(x, dt, a_neg, b, c, seg, chunk=chunk, interpret=INTERPRET)
+
+
+__all__ = ["flash_attention", "ssd_scan_op", "INTERPRET"]

@@ -1,0 +1,95 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose ground truth)."""
+
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+_NEG = -1e30
+
+
+def flash_attention_ref(
+    q: jnp.ndarray,  # (Hq, T, D)
+    k: jnp.ndarray,  # (Hkv, S, D)
+    v: jnp.ndarray,  # (Hkv, S, D)
+    q_seg: jnp.ndarray,  # (T,)
+    kv_seg: jnp.ndarray,  # (S,)
+    q_pos: jnp.ndarray,  # (T,)
+    kv_pos: jnp.ndarray,  # (S,)
+    window: Optional[int] = None,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Dense segment-masked causal GQA attention.
+
+    Returns (out (Hq, T, D), lse (Hq, T)). lse = logsumexp of masked scores
+    (== -inf rows give lse = _NEG-ish; out rows give 0)."""
+    hq, t, d = q.shape
+    hkv = k.shape[0]
+    g = hq // hkv
+    kr = jnp.repeat(k, g, axis=0)
+    vr = jnp.repeat(v, g, axis=0)
+    scores = jnp.einsum("htd,hsd->hts", q.astype(jnp.float32), kr.astype(jnp.float32))
+    scores = scores / math.sqrt(d)
+    mask = (
+        (q_seg[:, None] == kv_seg[None, :])
+        & (q_seg[:, None] > 0)
+        & (kv_seg[None, :] > 0)
+        & (q_pos[:, None] >= kv_pos[None, :])
+    )
+    if window is not None:
+        mask &= (q_pos[:, None] - kv_pos[None, :]) < window
+    scores = jnp.where(mask[None], scores, _NEG)
+    m = scores.max(axis=-1)
+    p = jnp.exp(scores - m[..., None]) * mask[None]
+    l = p.sum(axis=-1)
+    out = jnp.einsum("hts,hsd->htd", p, vr.astype(jnp.float32))
+    out = jnp.where(l[..., None] > 0, out / jnp.maximum(l[..., None], 1e-30), 0.0)
+    lse = jnp.where(l > 0, m + jnp.log(jnp.maximum(l, 1e-30)), _NEG)
+    return out.astype(q.dtype), lse
+
+
+def ssd_scan_ref(
+    x: jnp.ndarray,  # (T, H, P)
+    dt: jnp.ndarray,  # (T, H)
+    a_neg: jnp.ndarray,  # (H,)
+    b: jnp.ndarray,  # (T, N)
+    c: jnp.ndarray,  # (T, N)
+    seg: jnp.ndarray,  # (T,)
+) -> jnp.ndarray:
+    """Sequential (exact) SSD recurrence with segment resets.
+
+    h_t = a_t * h_{t-1} * [seg_t == seg_{t-1}] + dt_t B_t (x) x_t
+    y_t = C_t . h_t
+    """
+    t_len, n_heads, head_p = x.shape
+    n_state = b.shape[-1]
+
+    def step(h, inp):
+        xt, dtt, bt, ct, reset = inp
+        a = jnp.exp(dtt * a_neg)  # (H,)
+        h = jnp.where(reset, 0.0, h * a[:, None, None])
+        h = h + jnp.einsum("h,n,hp->hnp", dtt, bt, xt)
+        y = jnp.einsum("n,hnp->hp", ct, h)
+        return h, y
+
+    resets = jnp.concatenate(
+        [jnp.ones((1,), bool), seg[1:] != seg[:-1]]
+    )
+    h0 = jnp.zeros((n_heads, n_state, head_p), jnp.float32)
+    _, ys = jax.lax.scan(
+        step,
+        h0,
+        (
+            x.astype(jnp.float32),
+            dt.astype(jnp.float32),
+            b.astype(jnp.float32),
+            c.astype(jnp.float32),
+            resets,
+        ),
+    )
+    return ys
+
+
+__all__ = ["flash_attention_ref", "ssd_scan_ref"]

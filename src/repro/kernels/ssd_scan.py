@@ -1,0 +1,146 @@
+"""Pallas TPU kernel for the Mamba2 SSD chunked scan (forward).
+
+One grid step processes one (head, chunk) tile: the (L, L) intra-chunk
+decay-masked matmul runs on the MXU from VMEM-resident tiles, and the
+(N, P) inter-chunk state is carried in VMEM scratch across the sequential
+chunk grid dimension (TPU grids execute in order — the same property the
+flash kernel uses for online softmax).
+
+Segment resets use the boundary-count masking of models/ssm.py (exact, no
+-inf logs): the chunk-local cumulative count of segment starts gates every
+pairwise interaction, the carried state is consumed only before the first
+boundary of a chunk, and the carry decays to zero whenever a chunk contains
+a boundary.
+
+Training uses the differentiable jnp SSD (models/ssm.py) — this kernel is the
+serving/prefill hot path. Oracle: kernels/ref.py::ssd_scan_ref (sequential
+recurrence), swept in tests/test_kernels_ssd.py.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_CHUNK = 128
+
+
+def _ssd_kernel(
+    x_ref,  # (1, L, P)
+    dt_ref,  # (1, L)  (head-major: (H, T) blocked)
+    a_ref,  # (1, 1)   per-head decay coefficient (negative)
+    b_ref,  # (L, N)
+    c_ref,  # (L, N)
+    start_ref,  # (L, 1) int32 is-segment-start
+    y_ref,  # (1, L, P)
+    h_scr,  # (N, P) carried state
+    *, chunk: int,
+):
+    cb = pl.program_id(1)
+
+    @pl.when(cb == 0)
+    def _init():
+        h_scr[...] = jnp.zeros_like(h_scr)
+
+    x = x_ref[0].astype(jnp.float32)  # (L, P)
+    dt = dt_ref[0].astype(jnp.float32).reshape(chunk, 1)  # (L, 1)
+    a_neg = a_ref[0, 0].astype(jnp.float32)
+    b = b_ref[...].astype(jnp.float32)  # (L, N)
+    c = c_ref[...].astype(jnp.float32)
+    start = start_ref[...].astype(jnp.int32)  # (L, 1)
+
+    log_a = dt * a_neg  # (L, 1) <= 0
+    l_cum = jnp.cumsum(log_a, axis=0)  # (L, 1)
+    bcount = jnp.cumsum(start, axis=0)  # (L, 1)
+
+    # intra-chunk (L, L): M[t, s] = (C_t.B_s) exp(l_t - l_s) dt_s, causal+seg
+    decay = jnp.exp(l_cum - l_cum.T)  # (L, L)
+    cbm = jax.lax.dot_general(
+        c, b, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )  # (L, L)
+    row = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+    col = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    mask = (row >= col) & (bcount == bcount.T)
+    m = jnp.where(mask, cbm * decay * dt.T, 0.0)
+    y = jax.lax.dot_general(
+        m, x, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )  # (L, P)
+
+    # inter-chunk: carried state visible before the first boundary only
+    no_boundary_yet = (bcount == 0).astype(jnp.float32)  # (L, 1)
+    inter_scale = jnp.exp(l_cum) * no_boundary_yet  # (L, 1)
+    y_inter = jax.lax.dot_general(
+        c, h_scr[...], (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )  # (L, P)
+    y = y + y_inter * inter_scale
+
+    # state update: contributions from the LAST segment in the chunk
+    last_count = bcount[chunk - 1, 0]
+    tail = (bcount == last_count).astype(jnp.float32)  # (L, 1)
+    state_decay = jnp.exp(l_cum[chunk - 1, 0] - l_cum) * tail  # (L, 1)
+    weighted_b = b * (state_decay * dt)  # (L, N)
+    new_state = jax.lax.dot_general(
+        weighted_b, x, (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )  # (N, P)
+    carry_decay = jnp.exp(l_cum[chunk - 1, 0]) * (last_count == 0).astype(jnp.float32)
+    h_scr[...] = h_scr[...] * carry_decay + new_state
+
+    y_ref[0] = y.astype(y_ref.dtype)
+
+
+def ssd_scan(
+    x: jnp.ndarray,  # (T, H, P)
+    dt: jnp.ndarray,  # (T, H)
+    a_neg: jnp.ndarray,  # (H,)
+    b: jnp.ndarray,  # (T, N)
+    c: jnp.ndarray,  # (T, N)
+    seg: jnp.ndarray,  # (T,)
+    chunk: int = DEFAULT_CHUNK,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """Pallas SSD scan -> (T, H, P) float32 (no D-skip; caller adds it)."""
+    t_len, n_heads, head_p = x.shape
+    n_state = b.shape[-1]
+    pad = (-t_len) % chunk
+    if pad:
+        x = jnp.pad(x, ((0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, pad), (0, 0)))
+        b = jnp.pad(b, ((0, pad), (0, 0)))
+        c = jnp.pad(c, ((0, pad), (0, 0)))
+        seg = jnp.pad(seg, (0, pad), constant_values=-1)
+    t_pad = t_len + pad
+    n_chunks = t_pad // chunk
+
+    is_start = jnp.concatenate(
+        [jnp.ones((1,), jnp.int32), (seg[1:] != seg[:-1]).astype(jnp.int32)]
+    ).reshape(t_pad, 1)
+
+    xh = jnp.transpose(x, (1, 0, 2))  # (H, T, P)
+    dth = jnp.transpose(dt, (1, 0))  # (H, T)
+    a2 = a_neg.reshape(n_heads, 1).astype(jnp.float32)
+
+    y = pl.pallas_call(
+        functools.partial(_ssd_kernel, chunk=chunk),
+        grid=(n_heads, n_chunks),
+        in_specs=[
+            pl.BlockSpec((1, chunk, head_p), lambda h, cb: (h, cb, 0)),
+            pl.BlockSpec((1, chunk), lambda h, cb: (h, cb)),
+            pl.BlockSpec((1, 1), lambda h, cb: (h, 0)),
+            pl.BlockSpec((chunk, n_state), lambda h, cb: (cb, 0)),
+            pl.BlockSpec((chunk, n_state), lambda h, cb: (cb, 0)),
+            pl.BlockSpec((chunk, 1), lambda h, cb: (cb, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, chunk, head_p), lambda h, cb: (h, cb, 0)),
+        out_shape=jax.ShapeDtypeStruct((n_heads, t_pad, head_p), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((n_state, head_p), jnp.float32)],
+        interpret=interpret,
+    )(xh, dth, a2, b, c, is_start)
+    return jnp.transpose(y, (1, 0, 2))[:t_len]
+
+
+__all__ = ["ssd_scan", "DEFAULT_CHUNK"]

@@ -1,0 +1,373 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run (deliverable e).
+
+For every (architecture x input shape) cell, lower + compile the real step
+function — ``train_step`` for train shapes, ``prefill`` / ``serve (decode)
+step`` for inference shapes — against the production mesh with ShapeDtypeStruct
+inputs (no allocation), and record:
+
+  * memory_analysis()        — proves the cell fits per-device HBM
+  * cost_analysis()          — HLO FLOPs / bytes for §Roofline
+  * collective bytes         — parsed from the partitioned HLO (hlo_stats)
+
+Meshes: single-pod 16x16 ("data","model") and multi-pod 2x16x16
+("pod","data","model"). The 512 placeholder host devices exist ONLY here
+(XLA_FLAGS above, set before any jax import).
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch all --shape all \
+      --mesh both --out artifacts/dryrun.jsonl
+"""
+
+import argparse
+import json
+import time
+import traceback
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..configs.base import SHAPES, ArchConfig, ShapeSpec, supports_long_context
+from ..configs.registry import REGISTRY
+from ..dist.sharding import shard_params
+from ..launch.hlo_stats import analyze_hlo
+from ..launch.mesh import make_production_mesh
+from ..models.transformer import CallConfig, init_model
+from ..optim.schedule import linear_warmup_cosine
+from ..train.serve import decode_step, init_caches, prefill
+from ..train.state import init_train_state
+from ..train.step import make_dense_train_step
+
+V5E_HBM = 16e9
+
+
+def _dp_axes(mesh):
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+def _div(n, k):
+    return n % k == 0
+
+
+def _axis_size(mesh, names):
+    s = 1
+    d = dict(zip(mesh.axis_names, mesh.devices.shape))
+    for n in names if isinstance(names, tuple) else (names,):
+        s *= d.get(n, 1)
+    return s
+
+
+def _sds(shape, dtype, mesh, spec):
+    return jax.ShapeDtypeStruct(shape, dtype, sharding=NamedSharding(mesh, spec))
+
+
+def _batch_spec(mesh, b):
+    dp = _dp_axes(mesh)
+    return dp if _div(b, _axis_size(mesh, dp)) else None
+
+
+def make_shard_fn(mesh):
+    """Activation sharding hook for CallConfig (perf iterations 1-2):
+    activations and logits stay (DP, CP, local) sharded; the DACP gathered-KV
+    is replicated over the CP axis (that IS the all-gather)."""
+    dp = _dp_axes(mesh)
+    model = _axis_size(mesh, "model")
+
+    def f(x, kind):
+        try:
+            if kind in ("activation", "logits") and x.ndim >= 3:
+                spec = [None] * x.ndim
+                if _div(x.shape[0], _axis_size(mesh, dp)):
+                    spec[0] = dp
+                if _div(x.shape[1], model):
+                    spec[1] = "model"
+                return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, P(*spec)))
+            if kind == "gathered_kv":
+                return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, P()))
+            if kind == "kv_rows" and x.ndim == 4:
+                # (rows, S, Hkv, D): rows stay on DP, sequence gathered over CP
+                spec = [None] * 4
+                if _div(x.shape[0], _axis_size(mesh, dp)):
+                    spec[0] = dp
+                return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, P(*spec)))
+            if kind == "ssm_rows" and x.ndim in (2, 3):
+                spec = [None] * x.ndim
+                if _div(x.shape[0], _axis_size(mesh, dp)):
+                    spec[0] = dp
+                return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, P(*spec)))
+            if kind == "moe_groups" and x.ndim == 3:
+                # (G, group, d): shard groups over every mesh axis that divides
+                all_axes = dp + ("model",)
+                if _div(x.shape[0], _axis_size(mesh, all_axes)):
+                    return jax.lax.with_sharding_constraint(
+                        x, NamedSharding(mesh, P(all_axes, None, None))
+                    )
+                if _div(x.shape[0], _axis_size(mesh, dp)):
+                    return jax.lax.with_sharding_constraint(
+                        x, NamedSharding(mesh, P(dp, None, None))
+                    )
+        except Exception:
+            return x
+        return x
+
+    return f
+
+
+def call_config(cfg: ArchConfig, shape: ShapeSpec, mesh=None) -> CallConfig:
+    big = cfg.param_count() > 20e9
+    # align the kv-chunk scan with the CP shard size: each scan step then
+    # consumes exactly one rank's shard (perf iteration 2 — misaligned
+    # chunks forced per-chunk re-shard all-reduces)
+    model = _axis_size(mesh, "model") if mesh is not None else 16
+    kv_chunk = max(shape.seq_len // model, 128)
+    # dispatch/combine einsum FLOPs scale with group_size (2*g*k*cf*d per
+    # token): fine-grained-expert archs (small d_ff) use smaller groups
+    # (§Perf iteration 10)
+    moe_group = 1024 if (cfg.n_experts and (cfg.expert_d_ff or cfg.d_ff) <= 2048) else 4096
+    return CallConfig(
+        attention_impl="chunked",
+        remat="full" if big or shape.seq_len >= 32_768 else "selective",
+        kv_chunk=min(kv_chunk, 2048),
+        ssd_chunk=128,
+        logits_chunk=0,
+        moe_group=moe_group,
+        shard_fn=make_shard_fn(mesh) if mesh is not None else (lambda x, k: x),
+    )
+
+
+def n_micro_for(cfg: ArchConfig, shape: ShapeSpec, mesh) -> int:
+    """Smallest grad-accum split whose activations fit the HBM left after
+    params/optimizer/grads. Fewer micro-steps = fewer FSDP weight regathers
+    (the dominant collective for mega-dense models — §Perf iteration 9:
+    mistral-large 8 -> 4 micro-steps halves 8.4 TB of gathers)."""
+    devs = mesh.devices.size
+    # weights are replicated across pods: shard factor is one pod's chips
+    pod_devs = 256 if devs >= 256 else devs
+    static = cfg.param_count() * 16.0 / pod_devs  # f32 m/v/master + grads + bf16
+    budget = max((V5E_HBM * 0.9 - static) * 0.6, 2e8)  # temps safety margin
+    tokens_per_dev = shape.seq_len * shape.global_batch / devs
+    live = cfg.d_model * 2.0 * (cfg.n_layers * 1.3 + 24)
+    act = tokens_per_dev * live
+    if cfg.n_experts:
+        act *= 1.6  # routing buffers
+    n = 1
+    while act / n > budget and n < shape.global_batch:
+        n *= 2
+    while shape.global_batch % n:
+        n *= 2
+    return min(n, shape.global_batch)
+
+
+def abstract_state(cfg: ArchConfig, mesh):
+    a_params = jax.eval_shape(lambda k: init_model(k, cfg), jax.random.PRNGKey(0))
+    a_state = jax.eval_shape(init_train_state, a_params)
+    p_sh = shard_params(a_params, mesh)
+
+    def with_sh(a, s):
+        return jax.ShapeDtypeStruct(a.shape, a.dtype, sharding=s)
+
+    params = jax.tree.map(with_sh, a_state.params, p_sh)
+    m = jax.tree.map(with_sh, a_state.opt.m, p_sh)
+    v = jax.tree.map(with_sh, a_state.opt.v, p_sh)
+    step = jax.ShapeDtypeStruct((), jnp.int32, sharding=NamedSharding(mesh, P()))
+    return a_state._replace(
+        params=params, opt=a_state.opt._replace(step=step, m=m, v=v)
+    )
+
+
+def abstract_caches(cfg: ArchConfig, mesh, batch: int, max_len: int):
+    a_params = jax.eval_shape(lambda k: init_model(k, cfg), jax.random.PRNGKey(0))
+    a_caches = jax.eval_shape(lambda: init_caches(a_params, cfg, batch, max_len))
+    model = _axis_size(mesh, "model")
+    bspec = _batch_spec(mesh, batch)
+
+    def spec_for(a):
+        # ranks: kv (n_rep,B,S,H,D); ssm h (n_rep,B,H,N,P); conv (n_rep,B,K,C)
+        dims = [None] * len(a.shape)
+        if len(a.shape) >= 2 and bspec is not None:
+            dims[1] = bspec
+        if len(a.shape) == 5 and _div(a.shape[2], model):
+            dims[2] = "model"  # cache sequence dim (kv) or SSM heads
+        return jax.ShapeDtypeStruct(
+            a.shape, a.dtype, sharding=NamedSharding(mesh, P(*dims))
+        )
+
+    return jax.tree.map(spec_for, a_caches)
+
+
+def lower_cell(cfg: ArchConfig, shape: ShapeSpec, mesh, mesh_name: str):
+    call = call_config(cfg, shape, mesh)
+    dp = _dp_axes(mesh)
+    b, s = shape.global_batch, shape.seq_len
+    seq_spec = "model" if _div(s, _axis_size(mesh, "model")) else None
+    bspec = _batch_spec(mesh, b)
+
+    if shape.kind == "train":
+        state_sds = abstract_state(cfg, mesh)
+        tokens = _sds((b, s), jnp.int32, mesh, P(bspec, seq_spec))
+        labels = _sds((b, s), jnp.int32, mesh, P(bspec, seq_spec))
+        lr_fn = partial(linear_warmup_cosine, base_lr=3e-4, warmup=100, total_steps=10_000)
+        n_micro = n_micro_for(cfg, shape, mesh)
+        with_frontend = cfg.n_frontend_tokens > 0
+        step = make_dense_train_step(
+            cfg, call, lr_fn, n_micro=n_micro, with_frontend=with_frontend,
+            grad_shardings=shard_params(
+                jax.eval_shape(lambda k: init_model(k, cfg), jax.random.PRNGKey(0)),
+                mesh,
+            ),
+        )
+        args = [state_sds, tokens, labels]
+        if with_frontend:
+            args.append(
+                _sds(
+                    (b, cfg.n_frontend_tokens, cfg.d_model), jnp.float32, mesh,
+                    P(bspec, None, None),
+                )
+            )
+        fn = jax.jit(step, donate_argnums=(0,))
+        extra = {"n_micro": n_micro}
+    elif shape.kind == "prefill":
+        state_sds = abstract_state(cfg, mesh)
+        tokens = _sds((b, s), jnp.int32, mesh, P(bspec, seq_spec))
+        fn = jax.jit(
+            lambda params, tok: prefill(params, cfg, call, tok, max_len=s)
+        )
+        args = [state_sds.params, tokens]
+        extra = {}
+    else:  # decode: one new token against a seq_len cache
+        state_sds = abstract_state(cfg, mesh)
+        token = _sds((b,), jnp.int32, mesh, P(bspec))
+        lengths = _sds((b,), jnp.int32, mesh, P(bspec))
+        caches = abstract_caches(cfg, mesh, b, s)
+        fn = jax.jit(
+            lambda params, tok, lens, c: decode_step(params, cfg, call, tok, lens, c),
+            donate_argnums=(3,),
+        )
+        args = [state_sds.params, token, lengths, caches]
+        extra = {}
+
+    t0 = time.time()
+    lowered = fn.lower(*args)
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    rec = {"lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1), **extra}
+    try:
+        mem = compiled.memory_analysis()
+        rec["memory"] = {
+            k: int(getattr(mem, k))
+            for k in (
+                "argument_size_in_bytes",
+                "output_size_in_bytes",
+                "temp_size_in_bytes",
+                "generated_code_size_in_bytes",
+            )
+            if hasattr(mem, k)
+        }
+        arg_b = rec["memory"].get("argument_size_in_bytes", 0)
+        tmp_b = rec["memory"].get("temp_size_in_bytes", 0)
+        rec["memory"]["per_device_total"] = arg_b + tmp_b
+        rec["memory"]["fits_v5e"] = bool(arg_b + tmp_b < V5E_HBM)
+    except Exception as e:  # pragma: no cover - backend-dependent
+        rec["memory_error"] = str(e)
+    try:
+        ca = compiled.cost_analysis()
+        rec["cost_raw"] = {
+            "flops": float(ca.get("flops", -1)),
+            "bytes_accessed": float(ca.get("bytes accessed", -1)),
+        }
+    except Exception as e:  # pragma: no cover
+        rec["cost_error"] = str(e)
+    try:
+        stats = analyze_hlo(compiled.as_text())
+        rec["hlo"] = {
+            "dot_flops": stats["dot_flops"],  # per-device, trip-count corrected
+            "collectives": stats["collectives"],
+        }
+        # scale raw bytes_accessed by the same while-undercount factor
+        raw_f = rec.get("cost_raw", {}).get("flops", 0.0)
+        if raw_f and stats["dot_flops"]:
+            factor = max(stats["dot_flops"] / raw_f, 1.0)
+            rec["hlo"]["bytes_accessed_est"] = (
+                rec["cost_raw"]["bytes_accessed"] * factor
+            )
+            rec["hlo"]["while_undercount_factor"] = factor
+    except Exception as e:  # pragma: no cover
+        rec["hlo_error"] = str(e)
+    # analytic model FLOPs for the roofline "useful compute" ratio
+    tokens = shape.seq_len * shape.global_batch
+    n_active = cfg.active_param_count()
+    if shape.kind == "train":
+        model_flops = 6.0 * n_active * tokens
+    elif shape.kind == "prefill":
+        model_flops = 2.0 * n_active * tokens
+    else:  # decode: one token per slot
+        model_flops = 2.0 * n_active * shape.global_batch
+    rec["model_flops_global"] = model_flops
+    rec["model_flops_per_device"] = model_flops / mesh.devices.size
+    return rec
+
+
+def run(arch_filter: str, shape_filter: str, mesh_filter: str, out_path: str):
+    os.makedirs(os.path.dirname(out_path) or ".", exist_ok=True)
+    meshes = []
+    if mesh_filter in ("single", "both"):
+        meshes.append(("pod16x16", make_production_mesh(multi_pod=False)))
+    if mesh_filter in ("multi", "both"):
+        meshes.append(("pods2x16x16", make_production_mesh(multi_pod=True)))
+    archs = (
+        list(REGISTRY) if arch_filter == "all" else [a for a in arch_filter.split(",")]
+    )
+    shapes = (
+        list(SHAPES) if shape_filter == "all" else [s for s in shape_filter.split(",")]
+    )
+    with open(out_path, "a") as f:
+        for arch in archs:
+            cfg = REGISTRY[arch]
+            for shape_name in shapes:
+                shape = SHAPES[shape_name]
+                for mesh_name, mesh in meshes:
+                    rec = {
+                        "arch": arch,
+                        "shape": shape_name,
+                        "mesh": mesh_name,
+                        "params": cfg.param_count(),
+                        "active_params": cfg.active_param_count(),
+                    }
+                    if shape_name == "long_500k" and not supports_long_context(cfg):
+                        rec["skipped"] = (
+                            "pure full-attention arch: 512K dense-causal decode "
+                            "is sub-quadratic-only (DESIGN.md §Arch-applicability)"
+                        )
+                        f.write(json.dumps(rec) + "\n")
+                        f.flush()
+                        print(f"[skip] {arch} x {shape_name} x {mesh_name}")
+                        continue
+                    print(f"[cell] {arch} x {shape_name} x {mesh_name} ...", flush=True)
+                    try:
+                        rec.update(lower_cell(cfg, shape, mesh, mesh_name))
+                        rec["ok"] = True
+                    except Exception as e:
+                        rec["ok"] = False
+                        rec["error"] = f"{type(e).__name__}: {e}"
+                        rec["traceback"] = traceback.format_exc()[-2000:]
+                        print(f"  FAILED: {rec['error']}", flush=True)
+                    f.write(json.dumps(rec) + "\n")
+                    f.flush()
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
+    ap.add_argument("--out", default="artifacts/dryrun.jsonl")
+    a = ap.parse_args()
+    run(a.arch, a.shape, a.mesh, a.out)

@@ -1,0 +1,32 @@
+"""Production mesh construction.
+
+A FUNCTION (not a module-level constant) so importing this module never
+touches jax device state — the dry-run sets XLA_FLAGS before any jax init.
+
+Axis semantics (DESIGN.md §6):
+  pod   — cross-pod data parallelism (DCN); gradient all-reduce hierarchy
+  data  — intra-pod data parallelism (GDS bin-packs over pod*data DP ranks)
+  model — the CP axis of the paper's DP x CP grid; also the second weight-
+          shard axis (ZeRO-3-style flattened ("data","model") sharding) and
+          the EP axis for divisible expert counts
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_mesh(dp: int, cp: int, pods: int = 1):
+    """Arbitrary topology (tests, elastic rescale, paper's 4x8 testbed)."""
+    if pods > 1:
+        return jax.make_mesh((pods, dp, cp), ("pod", "data", "model"))
+    return jax.make_mesh((dp, cp), ("data", "model"))
+
+
+__all__ = ["make_production_mesh", "make_mesh"]

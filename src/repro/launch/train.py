@@ -1,0 +1,79 @@
+"""Production training launcher.
+
+    PYTHONPATH=src python -m repro.launch.train --arch qwen2.5-0.5b \
+        --dataset chatqa2 --dp 4 --cp 8 --batch 64 --bucket 26000 \
+        --steps 1000 --ckpt-dir /ckpt/run1
+
+On a real TPU cluster this binary runs once per host under the multi-pod
+launch script (launch_multipod.sh); jax.distributed.initialize() picks up the
+coordinator from the environment. On this CPU container it runs single-host
+(reduced sizes recommended — see examples/longsft_train.py).
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--dataset", default="chatqa2", choices=["wikipedia", "lmsyschat", "chatqa2"])
+    ap.add_argument("--dp", type=int, default=4)
+    ap.add_argument("--cp", type=int, default=8)
+    ap.add_argument("--pods", type=int, default=1)
+    ap.add_argument("--batch", type=int, default=64)
+    ap.add_argument("--bucket", type=int, default=26_000)
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--seq-cap", type=int, default=0, help="truncate samples (CPU testing)")
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--cost-aware", action="store_true")
+    ap.add_argument("--reduced", action="store_true", help="use the smoke-size config")
+    ap.add_argument("--distributed", action="store_true", help="multi-host: jax.distributed.initialize()")
+    args = ap.parse_args()
+
+    if args.distributed:
+        import jax
+
+        jax.distributed.initialize()
+
+    import jax
+
+    from ..configs.registry import get_arch
+    from ..core.perf_model import TPU_V5E
+    from ..data import DATASETS, SkrullDataLoader, SyntheticSFTDataset
+    from ..models.transformer import CallConfig
+    from ..train.loop import Trainer, TrainerConfig
+
+    cfg = get_arch(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    print(f"arch={cfg.name} params={cfg.param_count()/1e9:.2f}B "
+          f"devices={len(jax.devices())} dp={args.dp} cp={args.cp} pods={args.pods}")
+
+    dataset = SyntheticSFTDataset(
+        DATASETS[args.dataset](), vocab_size=cfg.vocab, seed=0, size=1_000_000,
+        max_len=args.seq_cap or 0,
+    )
+    loader = SkrullDataLoader(
+        dataset, global_batch=args.batch, ws=args.dp * args.pods, n_cp=args.cp,
+        c_budget=args.bucket, profile=cfg.to_profile(), hw=TPU_V5E,
+        cost_aware=args.cost_aware,
+    )
+    trainer = Trainer(
+        cfg,
+        CallConfig(attention_impl="chunked", remat="selective"),
+        loader,
+        TrainerConfig(
+            total_steps=args.steps, lr=args.lr,
+            ckpt_dir=args.ckpt_dir, ckpt_every=max(args.steps // 10, 1),
+        ),
+    )
+    trainer.maybe_resume()
+    trainer.run()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,21 @@
+"""Model stack: composable decoder supporting dense/MoE/SSM/hybrid families."""
+
+from .transformer import (
+    CallConfig,
+    block_pattern,
+    forward,
+    init_model,
+    lm_head,
+    lm_loss,
+    param_count,
+)
+
+__all__ = [
+    "CallConfig",
+    "block_pattern",
+    "forward",
+    "init_model",
+    "lm_head",
+    "lm_loss",
+    "param_count",
+]

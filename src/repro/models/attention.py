@@ -1,0 +1,177 @@
+"""Segment-masked GQA attention: dense reference, memory-efficient chunked
+(production XLA path), and KV-cache decode.
+
+All variants share one masking rule for packed buckets:
+
+    visible(q, k) = same_segment & seg != 0 & pos_q >= pos_k
+                    [& pos_q - pos_k < window]        (SWA)
+
+Positions restart per packed sequence, so causal-by-position inside a segment
+is exactly causal-by-buffer-order (packing is contiguous). Masking is applied
+*after* exp() with finite scores, so fully-masked (padding) rows produce zeros
+with zero gradients rather than NaNs.
+
+Shape convention: q (T, Hq, D); k, v (S, Hkv, D); segments/positions (T,)/(S,).
+Batch/CP-rank dims are vmapped by the caller (models/transformer.py), which is
+also where the DACP local/distributed split and the CP all-gather live.
+"""
+
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+_NEG = -1e30
+
+
+def _mask(
+    q_seg: jnp.ndarray,
+    kv_seg: jnp.ndarray,
+    q_pos: jnp.ndarray,
+    kv_pos: jnp.ndarray,
+    window: Optional[int],
+) -> jnp.ndarray:
+    """(T, S) bool visibility mask."""
+    same = q_seg[:, None] == kv_seg[None, :]
+    live = (q_seg[:, None] > 0) & (kv_seg[None, :] > 0)
+    causal = q_pos[:, None] >= kv_pos[None, :]
+    m = same & live & causal
+    if window is not None:
+        m &= (q_pos[:, None] - kv_pos[None, :]) < window
+    return m
+
+
+def _expand_gqa(q: jnp.ndarray, n_kv: int) -> jnp.ndarray:
+    """(T, Hq, D) -> (T, Hkv, G, D)."""
+    t, hq, d = q.shape
+    return q.reshape(t, n_kv, hq // n_kv, d)
+
+
+def segment_attention_dense(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    q_seg: jnp.ndarray,
+    kv_seg: jnp.ndarray,
+    q_pos: jnp.ndarray,
+    kv_pos: jnp.ndarray,
+    window: Optional[int] = None,
+) -> jnp.ndarray:
+    """O(T*S) memory reference. Small shapes / test oracle."""
+    d = q.shape[-1]
+    qg = _expand_gqa(q, k.shape[1]).astype(jnp.float32)
+    scores = jnp.einsum("thgd,shd->hgts", qg, k.astype(jnp.float32)) / math.sqrt(d)
+    mask = _mask(q_seg, kv_seg, q_pos, kv_pos, window)  # (T, S)
+    scores = jnp.where(mask[None, None], scores, _NEG)
+    m = jnp.max(scores, axis=-1, keepdims=True)
+    p = jnp.exp(scores - m) * mask[None, None]
+    l = jnp.sum(p, axis=-1, keepdims=True)
+    o = jnp.einsum("hgts,shd->thgd", p, v.astype(jnp.float32))
+    l_t = l.transpose(2, 0, 1, 3)  # (T, Hkv, G, 1)
+    o = jnp.where(l_t > 0, o / jnp.maximum(l_t, 1e-30), 0.0)
+    return o.reshape(q.shape).astype(q.dtype)
+
+
+def segment_attention_chunked(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    q_seg: jnp.ndarray,
+    kv_seg: jnp.ndarray,
+    q_pos: jnp.ndarray,
+    kv_pos: jnp.ndarray,
+    window: Optional[int] = None,
+    kv_chunk: int = 1024,
+) -> jnp.ndarray:
+    """Flash-style online-softmax scan over KV chunks: O(T * kv_chunk) memory.
+
+    Differentiable (pure lax.scan); this is the production XLA attention for
+    long sequences and the default train/dry-run path (DESIGN.md §7 — the
+    Pallas kernel is the TPU-native version of the same algorithm).
+    """
+    t_len, hq, d = q.shape
+    s_len, hkv, _ = k.shape
+    if s_len % kv_chunk:
+        pad = kv_chunk - s_len % kv_chunk
+        k = jnp.pad(k, ((0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, pad), (0, 0), (0, 0)))
+        kv_seg = jnp.pad(kv_seg, (0, pad))  # pad seg 0 = masked
+        kv_pos = jnp.pad(kv_pos, (0, pad))
+        s_len += pad
+    n_chunks = s_len // kv_chunk
+
+    qg = _expand_gqa(q, hkv).astype(jnp.float32)  # (T, Hkv, G, D)
+    scale = 1.0 / math.sqrt(d)
+
+    k_c = k.reshape(n_chunks, kv_chunk, hkv, d)
+    v_c = v.reshape(n_chunks, kv_chunk, hkv, d)
+    seg_c = kv_seg.reshape(n_chunks, kv_chunk)
+    pos_c = kv_pos.reshape(n_chunks, kv_chunk)
+
+    def body(carry, chunk):
+        m_prev, l_prev, acc = carry
+        kc, vc, sc, pc = chunk
+        scores = (
+            jnp.einsum("thgd,shd->thgs", qg, kc.astype(jnp.float32)) * scale
+        )  # (T, Hkv, G, C)
+        mask = _mask(q_seg, sc, q_pos, pc, window)  # (T, C)
+        scores = jnp.where(mask[:, None, None], scores, _NEG)
+        m_new = jnp.maximum(m_prev, scores.max(axis=-1))
+        p = jnp.exp(scores - m_new[..., None]) * mask[:, None, None]
+        corr = jnp.exp(m_prev - m_new)
+        l_new = l_prev * corr + p.sum(axis=-1)
+        acc = acc * corr[..., None] + jnp.einsum(
+            "thgs,shd->thgd", p, vc.astype(jnp.float32)
+        )
+        return (m_new, l_new, acc), None
+
+    init = (
+        jnp.full((t_len, hkv, hq // hkv), _NEG, jnp.float32),
+        jnp.zeros((t_len, hkv, hq // hkv), jnp.float32),
+        jnp.zeros((t_len, hkv, hq // hkv, d), jnp.float32),
+    )
+    (m, l, acc), _ = jax.lax.scan(body, init, (k_c, v_c, seg_c, pos_c))
+    out = jnp.where(l[..., None] > 0, acc / jnp.maximum(l[..., None], 1e-30), 0.0)
+    return out.reshape(q.shape).astype(q.dtype)
+
+
+def decode_attention(
+    q: jnp.ndarray,  # (Hq, D) one new token
+    k_cache: jnp.ndarray,  # (S, Hkv, D)
+    v_cache: jnp.ndarray,  # (S, Hkv, D)
+    cache_len: jnp.ndarray,  # () int32 — number of valid cache entries
+    window: Optional[int] = None,
+) -> jnp.ndarray:
+    """Single-token decode against a (ragged) KV cache slot."""
+    hq, d = q.shape
+    s, hkv, _ = k_cache.shape
+    qg = q.reshape(hkv, hq // hkv, d).astype(jnp.float32)
+    scores = jnp.einsum("hgd,shd->hgs", qg, k_cache.astype(jnp.float32)) / math.sqrt(d)
+    idx = jnp.arange(s)
+    mask = idx < cache_len
+    if window is not None:
+        mask &= idx >= (cache_len - window)
+    scores = jnp.where(mask[None, None], scores, _NEG)
+    m = scores.max(axis=-1, keepdims=True)
+    p = jnp.exp(scores - m) * mask[None, None]
+    l = p.sum(axis=-1, keepdims=True)
+    o = jnp.einsum("hgs,shd->hgd", p, v_cache.astype(jnp.float32))
+    o = jnp.where(l > 0, o / jnp.maximum(l, 1e-30), 0.0)
+    return o.reshape(hq, d).astype(q.dtype)
+
+
+ATTENTION_IMPLS = {
+    "dense": segment_attention_dense,
+    "chunked": segment_attention_chunked,
+}
+
+__all__ = [
+    "segment_attention_dense",
+    "segment_attention_chunked",
+    "decode_attention",
+    "ATTENTION_IMPLS",
+]

@@ -1,0 +1,131 @@
+"""Pure-JAX building blocks (no flax): params are nested dicts of arrays.
+
+Initialisers take an explicit PRNG key and return param pytrees; apply
+functions are pure. dtype policy: params float32 (master), compute bf16 via
+``cast`` at entry — matching mixed-precision training practice.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Params = Dict[str, Any]
+
+
+def dense_init(key, d_in: int, d_out: int, bias: bool = False, scale: float = 1.0) -> Params:
+    std = scale / math.sqrt(d_in)
+    p = {"w": jax.random.normal(key, (d_in, d_out), jnp.float32) * std}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), jnp.float32)
+    return p
+
+
+def dense(p: Params, x: jnp.ndarray) -> jnp.ndarray:
+    y = x @ p["w"].astype(x.dtype)
+    if "b" in p:
+        y = y + p["b"].astype(x.dtype)
+    return y
+
+
+def rmsnorm_init(d: int) -> Params:
+    return {"g": jnp.ones((d,), jnp.float32)}
+
+
+def rmsnorm(p: Params, x: jnp.ndarray, eps: float = 1e-5) -> jnp.ndarray:
+    # compute the variance in f32 for stability, cast back
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * p["g"]).astype(x.dtype)
+
+
+def embed_init(key, vocab: int, d: int) -> Params:
+    return {"e": jax.random.normal(key, (vocab, d), jnp.float32) * 0.02}
+
+
+def embed(p: Params, ids: jnp.ndarray, dtype=jnp.bfloat16) -> jnp.ndarray:
+    return p["e"].astype(dtype)[ids]
+
+
+# ---------------------------------------------------------------------------
+# RoPE (positions are explicit — packed buckets restart per segment)
+# ---------------------------------------------------------------------------
+
+
+def rope(x: jnp.ndarray, pos: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """x: (..., T, H, D), pos: (..., T) int32. Rotates pairs (D/2)."""
+    d = x.shape[-1]
+    half = d // 2
+    freqs = jnp.exp(
+        -math.log(theta) * jnp.arange(0, half, dtype=jnp.float32) / half
+    )  # (half,)
+    angles = pos[..., None].astype(jnp.float32) * freqs  # (..., T, half)
+    cos = jnp.cos(angles)[..., None, :]  # (..., T, 1, half)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate(
+        [
+            x1 * cos.astype(x.dtype) - x2 * sin.astype(x.dtype),
+            x2 * cos.astype(x.dtype) + x1 * sin.astype(x.dtype),
+        ],
+        axis=-1,
+    )
+    return out
+
+
+# ---------------------------------------------------------------------------
+# MLP (SwiGLU or GELU)
+# ---------------------------------------------------------------------------
+
+
+def mlp_init(key, d: int, d_ff: int, glu: bool = True) -> Params:
+    k1, k2, k3 = jax.random.split(key, 3)
+    p = {"up": dense_init(k1, d, d_ff), "down": dense_init(k2, d_ff, d)}
+    if glu:
+        p["gate"] = dense_init(k3, d, d_ff)
+    return p
+
+
+def mlp(p: Params, x: jnp.ndarray) -> jnp.ndarray:
+    up = dense(p["up"], x)
+    if "gate" in p:
+        up = jax.nn.silu(dense(p["gate"], x)) * up
+    else:
+        up = jax.nn.gelu(up)
+    return dense(p["down"], up)
+
+
+def cross_entropy(
+    logits: jnp.ndarray, labels: jnp.ndarray
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Per-position CE with ignore index -1. Returns (loss_sum, valid_count).
+
+    Computed in float32; the caller divides by the GLOBAL-batch denominator
+    (math-equivalence contract — see data/packing.py docstring).
+    """
+    valid = labels >= 0
+    safe = jnp.where(valid, labels, 0)
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, safe[..., None], axis=-1)[..., 0]
+    nll = jnp.where(valid, logz - ll, 0.0)
+    return nll.sum(), valid.sum()
+
+
+__all__ = [
+    "Params",
+    "dense_init",
+    "dense",
+    "rmsnorm_init",
+    "rmsnorm",
+    "embed_init",
+    "embed",
+    "rope",
+    "mlp_init",
+    "mlp",
+    "cross_entropy",
+]

@@ -1,0 +1,152 @@
+"""Mixture-of-Experts with capacity-based top-k dispatch (GShard/Switch style).
+
+TPU-native: routing is realised as dense one-hot dispatch/combine einsums so
+the expert dimension shards cleanly over the mesh (EP over the "model" axis
+when the expert count divides — dist/sharding.py). Tokens over capacity are
+dropped (standard capacity_factor semantics); the router uses softmax-then-topk
+normalised over the selected experts, matching DBRX/granite-style fine-grained
+MoE.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from .layers import Params, dense_init
+
+
+def moe_init(key, d: int, n_experts: int, d_ff: int, glu: bool = True) -> Params:
+    kr, kg, ku, kd = jax.random.split(key, 4)
+    std_in = 1.0 / math.sqrt(d)
+    std_out = 1.0 / math.sqrt(d_ff)
+    p = {
+        "router": dense_init(kr, d, n_experts),
+        # stacked expert weights: (E, d, d_ff) / (E, d_ff, d)
+        "up": jax.random.normal(ku, (n_experts, d, d_ff), jnp.float32) * std_in,
+        "down": jax.random.normal(kd, (n_experts, d_ff, d), jnp.float32) * std_out,
+    }
+    if glu:
+        p["gate"] = jax.random.normal(kg, (n_experts, d, d_ff), jnp.float32) * std_in
+    return p
+
+
+def moe(
+    p: Params,
+    x: jnp.ndarray,  # (T, d)
+    top_k: int,
+    capacity_factor: float = 1.25,
+    group_size: int = 4096,
+    shard_fn=lambda x, kind: x,
+) -> jnp.ndarray:
+    """Top-k capacity MoE; tokens are routed in GROUPS of ``group_size``.
+
+    The dispatch one-hot is (T, E, C) with C ~ T*k/E — quadratic in T. At
+    32K-token prefills this is tens of GB per layer; grouping caps it at
+    group_size^2*k/E per group (GShard-style), identical math up to the
+    (standard) per-group capacity boundary. The (G, g, d) group tensor is
+    handed to ``shard_fn`` so the production mesh shards the group dim over
+    (data x model) — each device routes its own groups locally.
+    EXPERIMENTS.md §Perf iterations 5-6.
+    """
+    t_all, d = x.shape
+    if t_all > group_size:
+        pad = (-t_all) % group_size
+        xp = jnp.pad(x, ((0, pad), (0, 0)))
+        groups = xp.reshape(-1, group_size, d)
+        groups = shard_fn(groups, "moe_groups")
+        yg = jax.vmap(lambda g: _moe_group(p, g, top_k, capacity_factor))(groups)
+        yg = shard_fn(yg, "moe_groups")
+        return yg.reshape(-1, d)[:t_all]
+    return _moe_group(p, x, top_k, capacity_factor)
+
+
+def _route(p: Params, x: jnp.ndarray, top_k: int):
+    logits = x.astype(jnp.float32) @ p["router"]["w"]  # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_p, top_e = jax.lax.top_k(probs, top_k)  # (T, K)
+    top_p = top_p / jnp.maximum(top_p.sum(-1, keepdims=True), 1e-9)
+    return top_p, top_e
+
+
+def _experts(p: Params, xe: jnp.ndarray) -> jnp.ndarray:
+    """(E, C, d) -> (E, C, d) through the stacked expert MLPs."""
+    up = jnp.einsum("ecd,edf->ecf", xe, p["up"].astype(xe.dtype))
+    if "gate" in p:
+        up = jax.nn.silu(jnp.einsum("ecd,edf->ecf", xe, p["gate"].astype(xe.dtype))) * up
+    else:
+        up = jax.nn.gelu(up)
+    return jnp.einsum("ecf,efd->ecd", up, p["down"].astype(xe.dtype))
+
+
+def _moe_group(
+    p: Params,
+    x: jnp.ndarray,  # (T, d)
+    top_k: int,
+    capacity_factor: float,
+    dispatch: str = "einsum",
+) -> jnp.ndarray:
+    t, d = x.shape
+    n_experts = p["up"].shape[0]
+    capacity = max(int(math.ceil(t * top_k / n_experts * capacity_factor)), 1)
+    top_p, top_e = _route(p, x, top_k)
+
+    if dispatch == "einsum":
+        # classic GShard one-hot dispatch — the DEFAULT. The dispatch/combine
+        # einsums cost real FLOPs but partition cleanly under GSPMD. The
+        # sort-based path below eliminates those FLOPs but its scatters are
+        # sharding-hostile (XLA replicates the group): measured 98x MORE
+        # collective bytes on granite prefill. Deploying sort dispatch needs
+        # shard_map (device-local groups) — recorded as a REFUTED hypothesis
+        # under GSPMD in EXPERIMENTS.md §Perf iteration 7.
+        onehot = jax.nn.one_hot(top_e, n_experts, dtype=jnp.float32)  # (T,K,E)
+        flat = onehot.reshape(t * top_k, n_experts)
+        pos_in_expert = (jnp.cumsum(flat, axis=0) - flat).reshape(t, top_k, n_experts)
+        pos = jnp.einsum("tke,tke->tk", pos_in_expert, onehot)  # (T, K)
+        keep = pos < capacity
+        weight = top_p * keep
+        cap_onehot = jax.nn.one_hot(pos.astype(jnp.int32), capacity, dtype=jnp.float32)
+        disp = jnp.einsum("tke,tkc->tec", onehot * keep[..., None], cap_onehot)
+        combine = jnp.einsum("tke,tkc,tk->tec", onehot, cap_onehot, weight)
+        xe = jnp.einsum("tec,td->ecd", disp.astype(x.dtype), x)
+        ye = _experts(p, xe)
+        return jnp.einsum("tec,ecd->td", combine.astype(x.dtype), ye)
+
+    # sort-based dispatch: scatter/gather instead of one-hot matmuls — zero
+    # dispatch FLOPs, same keep semantics (stable sort preserves token-order
+    # priority within an expert, identical to the cumsum rule above).
+    tk = t * top_k
+    flat_e = top_e.reshape(tk)
+    flat_w = top_p.reshape(tk)
+    order = jnp.argsort(flat_e, stable=True)
+    sorted_e = flat_e[order]
+    starts = jnp.searchsorted(sorted_e, jnp.arange(n_experts), side="left")
+    pos = jnp.arange(tk, dtype=jnp.int32) - starts[sorted_e].astype(jnp.int32)
+    keep = pos < capacity
+    slot = jnp.where(keep, sorted_e * capacity + pos, n_experts * capacity)
+    tok = (order // top_k).astype(jnp.int32)
+    xin = (
+        jnp.zeros((n_experts * capacity + 1, d), x.dtype)
+        .at[slot]
+        .set(x[tok], mode="drop")
+    )
+    ye = _experts(p, xin[: n_experts * capacity].reshape(n_experts, capacity, d))
+    ye_flat = jnp.concatenate(
+        [ye.reshape(n_experts * capacity, d), jnp.zeros((1, d), ye.dtype)], axis=0
+    )
+    contrib = ye_flat[slot] * (flat_w[order] * keep).astype(ye.dtype)[:, None]
+    return jnp.zeros((t, d), x.dtype).at[tok].add(contrib.astype(x.dtype))
+
+
+def aux_load_balance_loss(logits: jnp.ndarray, top_e: jnp.ndarray, n_experts: int) -> jnp.ndarray:
+    """Switch-style auxiliary loss (mean prob * mean assignment per expert)."""
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    me = probs.mean(axis=0)
+    ce = jax.nn.one_hot(top_e[:, 0], n_experts, dtype=jnp.float32).mean(axis=0)
+    return n_experts * jnp.sum(me * ce)
+
+
+__all__ = ["moe_init", "moe", "aux_load_balance_loss"]

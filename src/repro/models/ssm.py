@@ -1,0 +1,250 @@
+"""Mamba2 (SSD — state-space duality, arXiv:2405.21060) in pure JAX.
+
+Chunked SSD: intra-chunk work is an attention-like (L x L) masked matmul,
+inter-chunk state is a (H, N, P) recurrence carried by lax.scan — the exact
+block decomposition the paper's TPU kernel (kernels/ssd_scan.py) tiles into
+VMEM.
+
+Packed-bucket correctness: sequence resets are handled EXACTLY via
+boundary-count masking (pair (t, s) interacts iff the running count of
+segment starts matches), never via -inf decay logs — log-space cumsums stay
+small and f32-exact, and a carried state dies whenever a chunk contains any
+boundary (packing contiguity guarantees an earlier segment can never resume).
+
+Decode path: single-token state update (the SSM analogue of a KV cache) used
+by serve_step for decode_32k / long_500k.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .layers import Params, dense_init
+
+
+def ssm_init(
+    key,
+    d_model: int,
+    d_state: int,
+    n_heads: int,
+    d_conv: int = 4,
+) -> Params:
+    d_inner = 2 * d_model
+    head_p = d_inner // n_heads
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    conv_dim = d_inner + 2 * d_state  # x + B + C (n_groups = 1)
+    return {
+        # projects to [z, x, B, C, dt]
+        "in_proj": dense_init(k1, d_model, 2 * d_inner + 2 * d_state + n_heads),
+        "out_proj": dense_init(k2, d_inner, d_model),
+        "conv_w": jax.random.normal(k3, (d_conv, conv_dim), jnp.float32)
+        * (1.0 / math.sqrt(d_conv)),
+        "conv_b": jnp.zeros((conv_dim,), jnp.float32),
+        "A_log": jnp.log(
+            jnp.linspace(1.0, float(n_heads), n_heads, dtype=jnp.float32)
+        ),
+        "D": jnp.ones((n_heads,), jnp.float32),
+        "dt_bias": jnp.full((n_heads,), math.log(math.e - 1), jnp.float32),
+    }
+
+
+def _segment_causal_conv(
+    u: jnp.ndarray, seg: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray
+) -> jnp.ndarray:
+    """Causal depthwise conv1d that never crosses segment boundaries.
+
+    u: (T, C); seg: (T,); w: (K, C)."""
+    k = w.shape[0]
+    out = jnp.zeros_like(u, dtype=jnp.float32)
+    for i in range(k):
+        shifted = jnp.roll(u, i, axis=0).astype(jnp.float32)
+        seg_shift = jnp.roll(seg, i, axis=0)
+        valid = (seg_shift == seg) & (jnp.arange(u.shape[0]) >= i)
+        out = out + jnp.where(valid[:, None], shifted, 0.0) * w[k - 1 - i]
+    return (out + b).astype(u.dtype)
+
+
+def ssd_chunked(
+    x: jnp.ndarray,  # (T, H, P)
+    dt: jnp.ndarray,  # (T, H) positive
+    a_neg: jnp.ndarray,  # (H,)  negative (=-exp(A_log))
+    b: jnp.ndarray,  # (T, N)
+    c: jnp.ndarray,  # (T, N)
+    seg: jnp.ndarray,  # (T,) int
+    d_skip: jnp.ndarray,  # (H,)
+    chunk: int = 128,
+    return_state: bool = False,
+):
+    t_len, n_heads, head_p = x.shape
+    n_state = b.shape[-1]
+    pad = (-t_len) % chunk
+    if pad:
+        x = jnp.pad(x, ((0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, pad), (0, 0)))  # dt = 0: no decay, no input
+        b = jnp.pad(b, ((0, pad), (0, 0)))
+        c = jnp.pad(c, ((0, pad), (0, 0)))
+        # pad as CONTINUATION (edge value): with dt = 0 and x = 0 the padded
+        # tail neither contributes nor decays, so the carried state after the
+        # last real token survives for return_state (prefill -> decode).
+        seg = jnp.pad(seg, (0, pad), mode="edge")
+    n_chunks = (t_len + pad) // chunk
+
+    is_start = jnp.concatenate(
+        [jnp.ones((1,), jnp.int32), (seg[1:] != seg[:-1]).astype(jnp.int32)]
+    )
+    log_a = dt * a_neg[None, :]  # (T, H), <= 0
+
+    xc = x.reshape(n_chunks, chunk, n_heads, head_p).astype(jnp.float32)
+    dtc = dt.reshape(n_chunks, chunk, n_heads).astype(jnp.float32)
+    bc_ = b.reshape(n_chunks, chunk, n_state).astype(jnp.float32)
+    cc_ = c.reshape(n_chunks, chunk, n_state).astype(jnp.float32)
+    lc = log_a.reshape(n_chunks, chunk, n_heads).astype(jnp.float32)
+    sc_ = is_start.reshape(n_chunks, chunk)
+
+    def body(carry, inp):
+        h_state = carry  # (H, N, P)
+        xk, dtk, bk, ck, lk, startk = inp
+        l_cum = jnp.cumsum(lk, axis=0)  # (L, H) chunk-local
+        bcount = jnp.cumsum(startk)  # (L,) chunk-local boundary count
+
+        same = bcount[:, None] == bcount[None, :]  # (L, L)
+        causal = jnp.tril(jnp.ones((chunk, chunk), bool))
+        # intra-chunk: M[h, t, s] = (C_t.B_s) exp(l_t - l_s) dt_s
+        decay = jnp.exp(l_cum[:, None, :] - l_cum[None, :, :])  # (L, L, H)
+        cb = ck @ bk.T  # (L, L)
+        m = cb[:, :, None] * decay * dtk[None, :, :]
+        m = jnp.where((same & causal)[:, :, None], m, 0.0)
+        y_intra = jnp.einsum("tsh,shp->thp", m, xk)
+
+        # carried-in state: visible only before the first boundary in chunk
+        no_boundary_yet = bcount == 0  # (L,)
+        inter_scale = jnp.exp(l_cum) * no_boundary_yet[:, None]  # (L, H)
+        y_inter = jnp.einsum("tn,hnp->thp", ck, h_state) * inter_scale[..., None]
+
+        # new chunk state: contributions from the LAST segment in the chunk
+        last_count = bcount[-1]
+        tail = bcount == last_count  # (L,)
+        state_decay = jnp.exp(l_cum[-1][None, :] - l_cum) * tail[:, None]  # (L, H)
+        new_state = jnp.einsum(
+            "sh,sn,shp->hnp", state_decay * dtk, bk, xk
+        )
+        carry_decay = jnp.exp(l_cum[-1]) * (last_count == 0)  # (H,)
+        h_state = h_state * carry_decay[:, None, None] + new_state
+        return h_state, y_intra + y_inter
+
+    h0 = jnp.zeros((n_heads, n_state, head_p), jnp.float32)
+    h_final, ys = jax.lax.scan(body, h0, (xc, dtc, bc_, cc_, lc, sc_))
+    y = ys.reshape(n_chunks * chunk, n_heads, head_p)[:t_len]
+    y = y + x[:t_len].astype(jnp.float32) * d_skip[None, :, None]
+    if return_state:
+        return y, h_final
+    return y
+
+
+def _dims(p: Params):
+    """Static dims inferred from parameter shapes (scan-safe)."""
+    n_heads = p["A_log"].shape[0]
+    d_inner = p["out_proj"]["w"].shape[0]
+    head_p = d_inner // n_heads
+    n_state = (p["conv_w"].shape[1] - d_inner) // 2
+    return n_heads, head_p, n_state, d_inner
+
+
+def ssm_block(
+    p: Params,
+    x: jnp.ndarray,  # (T, d_model)
+    seg: jnp.ndarray,  # (T,)
+    chunk: int = 128,
+    return_state: bool = False,
+):
+    n_heads, head_p, n_state, d_inner = _dims(p)
+
+    zxbcdt = x @ p["in_proj"]["w"].astype(x.dtype)
+    z, xs, b, c, dt_raw = jnp.split(
+        zxbcdt, [d_inner, 2 * d_inner, 2 * d_inner + n_state, 2 * d_inner + 2 * n_state], axis=-1
+    )
+    conv_in = jnp.concatenate([xs, b, c], axis=-1)
+    conv_out = jax.nn.silu(
+        _segment_causal_conv(conv_in, seg, p["conv_w"], p["conv_b"])
+    )
+    xs, b, c = jnp.split(conv_out, [d_inner, d_inner + n_state], axis=-1)
+
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])  # (T, H)
+    a_neg = -jnp.exp(p["A_log"])  # (H,)
+    res = ssd_chunked(
+        xs.reshape(-1, n_heads, head_p),
+        dt,
+        a_neg,
+        b,
+        c,
+        seg,
+        p["D"],
+        chunk=chunk,
+        return_state=return_state,
+    )
+    y, h_final = res if return_state else (res, None)
+    y = y.reshape(-1, d_inner).astype(x.dtype) * jax.nn.silu(z)
+    out = y @ p["out_proj"]["w"].astype(x.dtype)
+    if return_state:
+        # conv tail: the raw (pre-conv) last K-1 inputs for decode continuity
+        k = p["conv_w"].shape[0]
+        return out, {"h": h_final, "conv": conv_in[-(k - 1) :].astype(x.dtype)}
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Decode (stateful single-token step) — the SSM analogue of a KV cache
+# ---------------------------------------------------------------------------
+
+
+def ssm_decode_state(p: Params, dtype=jnp.float32) -> Dict[str, jnp.ndarray]:
+    n_heads, head_p, n_state, d_inner = _dims(p)
+    conv_dim = d_inner + 2 * n_state
+    k = p["conv_w"].shape[0]
+    return {
+        "h": jnp.zeros((n_heads, n_state, head_p), jnp.float32),
+        "conv": jnp.zeros((k - 1, conv_dim), dtype),
+    }
+
+
+def ssm_decode_step(
+    p: Params, x: jnp.ndarray, state: Dict[str, jnp.ndarray]
+) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    """x: (d_model,) one token. Returns (y, new_state)."""
+    n_heads, head_p, n_state, d_inner = _dims(p)
+
+    zxbcdt = x @ p["in_proj"]["w"].astype(x.dtype)
+    z, xs, b, c, dt_raw = jnp.split(
+        zxbcdt, [d_inner, 2 * d_inner, 2 * d_inner + n_state, 2 * d_inner + 2 * n_state]
+    )
+    conv_in = jnp.concatenate([xs, b, c])  # (conv_dim,)
+    window = jnp.concatenate([state["conv"], conv_in[None, :]], axis=0)  # (K, C)
+    conv_out = jax.nn.silu(
+        (window.astype(jnp.float32) * p["conv_w"]).sum(0) + p["conv_b"]
+    ).astype(x.dtype)
+    xs, b, c = jnp.split(conv_out, [d_inner, d_inner + n_state])
+
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])  # (H,)
+    a = jnp.exp(dt * (-jnp.exp(p["A_log"])))  # (H,)
+    xh = xs.reshape(n_heads, head_p).astype(jnp.float32)
+    h_new = state["h"] * a[:, None, None] + jnp.einsum(
+        "h,n,hp->hnp", dt, b.astype(jnp.float32), xh
+    )
+    y = jnp.einsum("n,hnp->hp", c.astype(jnp.float32), h_new)
+    y = y + xh * p["D"][:, None]
+    y = (y.reshape(d_inner).astype(x.dtype)) * jax.nn.silu(z)
+    out = y @ p["out_proj"]["w"].astype(x.dtype)
+    return out, {"h": h_new, "conv": window[1:]}
+
+
+__all__ = [
+    "ssm_init",
+    "ssm_block",
+    "ssd_chunked",
+    "ssm_decode_state",
+    "ssm_decode_step",
+]

@@ -1,0 +1,413 @@
+"""Composable decoder trunk for all assigned architectures.
+
+One forward supports three data layouts:
+
+  * plain rows        — split=None: every row of (R, T) is an independent
+                        packed stream (smoke tests, prefill).
+  * DACP dual buffer  — split=(c_loc, c_dist): each row r holds rank r's
+                        local tokens [0:c_loc] and its shard of the global
+                        distributed pack [c_loc:]. Attention runs two paths:
+                        row-local (no communication) and global (K/V of the
+                        dist region flattened across rows = the CP
+                        all-gather). All other ops are token-parallel and
+                        process the concatenated buffer in one matmul.
+  * decode            — decode_step: one token per cache slot, KV-cache /
+                        SSM-state updates.
+
+Layer heterogeneity (MoE cadence, Jamba's 1:7 attention:mamba interleave) is
+expressed as a repeating block *pattern*; parameters are stacked over pattern
+repetitions and the trunk is a lax.scan over repetitions (HLO stays O(pattern)
+regardless of depth — essential for 88-layer dry-run compiles).
+
+The CE head streams over token chunks (never materialises (T, vocab) logits)
+with rematerialisation in the backward pass.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import partial
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from .attention import decode_attention, segment_attention_chunked, segment_attention_dense
+from .layers import (
+    Params,
+    cross_entropy,
+    dense,
+    dense_init,
+    embed,
+    embed_init,
+    mlp,
+    mlp_init,
+    rmsnorm,
+    rmsnorm_init,
+    rope,
+)
+from .moe import moe, moe_init
+from .ssm import ssm_block, ssm_decode_state, ssm_decode_step, ssm_init
+
+
+@dataclasses.dataclass(frozen=True)
+class CallConfig:
+    attention_impl: str = "chunked"  # dense | chunked
+    remat: str = "selective"  # none | selective | full
+    kv_chunk: int = 1024
+    ssd_chunk: int = 128
+    logits_chunk: int = 0  # 0 = dense sharded logits; >0 = scan over chunks
+    capacity_factor: float = 1.25
+    moe_group: int = 4096  # token group size for MoE routing
+    dtype: Any = jnp.bfloat16  # activation/compute dtype (f32 for exactness tests)
+    # sharding hook: fn(x, kind) -> x; kind in {"activation", "gathered_kv"}
+    shard_fn: Callable[[jnp.ndarray, str], jnp.ndarray] = lambda x, kind: x
+
+
+# ---------------------------------------------------------------------------
+# Pattern derivation
+# ---------------------------------------------------------------------------
+
+
+def block_pattern(cfg: ArchConfig) -> List[Dict[str, bool]]:
+    """Layer specs for one repeating block."""
+    if cfg.family == "hybrid" and cfg.attn_every:
+        plen = max(cfg.attn_every, cfg.moe_every)
+    elif cfg.n_experts and cfg.moe_every > 1:
+        plen = cfg.moe_every
+    else:
+        plen = 1
+    assert cfg.n_layers % plen == 0, f"{cfg.name}: n_layers % pattern != 0"
+    pattern = []
+    for i in range(plen):
+        pattern.append(
+            {
+                "attn": cfg.layer_is_attention(i),
+                "ssm": (cfg.family in ("ssm", "hybrid")) and not cfg.layer_is_attention(i),
+                "moe": cfg.layer_is_moe(i),
+                "mlp": cfg.family != "ssm" and not cfg.layer_is_moe(i),
+            }
+        )
+    return pattern
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+
+def _layer_init(key, cfg: ArchConfig, spec: Dict[str, bool]) -> Params:
+    keys = jax.random.split(key, 8)
+    p: Params = {"ln1": rmsnorm_init(cfg.d_model)}
+    if spec["attn"]:
+        hq = cfg.n_heads * cfg.head_dim_
+        p["q"] = dense_init(keys[0], cfg.d_model, hq, bias=cfg.qkv_bias)
+        p["k"] = dense_init(keys[1], cfg.d_model, cfg.kv_dim, bias=cfg.qkv_bias)
+        p["v"] = dense_init(keys[2], cfg.d_model, cfg.kv_dim, bias=cfg.qkv_bias)
+        p["o"] = dense_init(keys[3], hq, cfg.d_model)
+    if spec["ssm"]:
+        p["ssm"] = ssm_init(
+            keys[4], cfg.d_model, cfg.ssm_state, cfg.ssm_heads_, cfg.ssm_conv
+        )
+    if spec["moe"] or spec["mlp"]:
+        p["ln2"] = rmsnorm_init(cfg.d_model)
+    if spec["moe"]:
+        p["moe"] = moe_init(
+            keys[5], cfg.d_model, cfg.n_experts, cfg.expert_d_ff or cfg.d_ff, cfg.glu
+        )
+    elif spec["mlp"]:
+        p["mlp"] = mlp_init(keys[6], cfg.d_model, cfg.d_ff, cfg.glu)
+    return p
+
+
+def init_model(key, cfg: ArchConfig) -> Params:
+    pattern = block_pattern(cfg)
+    n_rep = cfg.n_layers // len(pattern)
+    k_emb, k_head, k_blocks = jax.random.split(key, 3)
+    params: Params = {
+        "embed": embed_init(k_emb, cfg.vocab, cfg.d_model),
+        "final_norm": rmsnorm_init(cfg.d_model),
+    }
+    if not cfg.tie_embeddings:
+        params["head"] = dense_init(k_head, cfg.d_model, cfg.vocab)
+    # stack per pattern position across repetitions
+    blocks = []
+    for pos, spec in enumerate(pattern):
+        keys = jax.random.split(jax.random.fold_in(k_blocks, pos), n_rep)
+        per_rep = [_layer_init(k, cfg, spec) for k in keys]
+        stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *per_rep)
+        blocks.append(stacked)
+    params["blocks"] = blocks
+    return params
+
+
+def param_count(params: Params) -> int:
+    return sum(x.size for x in jax.tree.leaves(params))
+
+
+# ---------------------------------------------------------------------------
+# Forward trunk
+# ---------------------------------------------------------------------------
+
+
+def _attention_layer(
+    p: Params,
+    cfg: ArchConfig,
+    call: CallConfig,
+    x: jnp.ndarray,  # (R, T, d)
+    segs: jnp.ndarray,  # (R, T)
+    pos: jnp.ndarray,  # (R, T)
+    split: Optional[Tuple[int, int]],
+) -> jnp.ndarray:
+    r, t, d = x.shape
+    h = rmsnorm(p["ln1"], x, cfg.norm_eps)
+    hq, hkv, dh = cfg.n_heads, cfg.kv_heads, cfg.head_dim_
+    q = dense(p["q"], h).reshape(r, t, hq, dh)
+    k = dense(p["k"], h).reshape(r, t, hkv, dh)
+    v = dense(p["v"], h).reshape(r, t, hkv, dh)
+    q = rope(q, pos, cfg.rope_theta)
+    k = rope(k, pos, cfg.rope_theta)
+
+    attn = (
+        segment_attention_dense
+        if call.attention_impl == "dense"
+        else partial(segment_attention_chunked, kv_chunk=call.kv_chunk)
+    )
+
+    if split is None:
+        # CP all-gather of each row's K/V over the sequence axis BEFORE the
+        # chunk scan (paper's pattern, Eq. 15 volume). Without this, XLA
+        # computes per-shard partial scores and ALL-REDUCES the (T, H, D)
+        # online-softmax carry every chunk step — 384x more bytes on
+        # prefill_32k (EXPERIMENTS.md §Perf iteration 4).
+        k = call.shard_fn(k, "kv_rows")
+        v = call.shard_fn(v, "kv_rows")
+        out = jax.vmap(lambda qq, kk, vv, ss, pp: attn(qq, kk, vv, ss, ss, pp, pp, cfg.window))(
+            q, k, v, segs, pos
+        )
+    else:
+        c_loc, c_dist = split
+        out_parts = []
+        if c_loc:
+            out_loc = jax.vmap(
+                lambda qq, kk, vv, ss, pp: attn(qq, kk, vv, ss, ss, pp, pp, cfg.window)
+            )(
+                q[:, :c_loc],
+                k[:, :c_loc],
+                v[:, :c_loc],
+                segs[:, :c_loc],
+                pos[:, :c_loc],
+            )
+            out_parts.append(out_loc)
+        if c_dist:
+            # CP all-gather: K/V (+metadata) of the dist region, all rows
+            k_full = call.shard_fn(
+                k[:, c_loc:].reshape(r * c_dist, hkv, dh), "gathered_kv"
+            )
+            v_full = call.shard_fn(
+                v[:, c_loc:].reshape(r * c_dist, hkv, dh), "gathered_kv"
+            )
+            seg_full = segs[:, c_loc:].reshape(r * c_dist)
+            pos_full = pos[:, c_loc:].reshape(r * c_dist)
+            out_dist = jax.vmap(
+                lambda qq, ss, pp: attn(
+                    qq, k_full, v_full, ss, seg_full, pp, pos_full, cfg.window
+                )
+            )(q[:, c_loc:], segs[:, c_loc:], pos[:, c_loc:])
+            out_parts.append(out_dist)
+        out = jnp.concatenate(out_parts, axis=1) if len(out_parts) > 1 else out_parts[0]
+
+    out = dense(p["o"], out.reshape(r, t, hq * dh))
+    return x + out
+
+
+def _ssm_layer(
+    p: Params,
+    cfg: ArchConfig,
+    call: CallConfig,
+    x: jnp.ndarray,
+    segs: jnp.ndarray,
+    split: Optional[Tuple[int, int]],
+) -> jnp.ndarray:
+    r, t, d = x.shape
+    h = rmsnorm(p["ln1"], x, cfg.norm_eps)
+    blk = partial(ssm_block, chunk=call.ssd_chunk)
+    if split is None or split[1] == 0:
+        # NOTE (§Perf iteration 11, REFUTED): pre-gathering each row over the
+        # CP axis before the SSD scan was hypothesised to cut re-shard
+        # traffic; measured +68% collective bytes on mamba2 train_4k and no
+        # change on prefill — XLA already keeps the chunk recurrence local.
+        # The remaining SSD collective cost needs a shard_map chunk-state
+        # ring (future lever, EXPERIMENTS.md).
+        out = jax.vmap(lambda hh, ss: blk(p["ssm"], hh, ss))(h, segs)
+    else:
+        c_loc, c_dist = split
+        parts = []
+        if c_loc:
+            parts.append(
+                jax.vmap(lambda hh, ss: blk(p["ssm"], hh, ss))(
+                    h[:, :c_loc], segs[:, :c_loc]
+                )
+            )
+        # dist region is ONE global stream: flatten rows -> sequential state
+        # (CP for SSMs = boundary-state passing; XLA lowers the flattened scan
+        # with collective-permutes between shards)
+        h_dist = h[:, c_loc:].reshape(r * c_dist, d)
+        seg_dist = segs[:, c_loc:].reshape(r * c_dist)
+        parts.append(blk(p["ssm"], h_dist, seg_dist).reshape(r, c_dist, d))
+        out = jnp.concatenate(parts, axis=1) if len(parts) > 1 else parts[0]
+    return x + out.astype(x.dtype)
+
+
+def _mlp_or_moe_layer(
+    p: Params, cfg: ArchConfig, call: CallConfig, x: jnp.ndarray
+) -> jnp.ndarray:
+    h = rmsnorm(p["ln2"], x, cfg.norm_eps)
+    if "moe" in p:
+        r, t, d = h.shape
+        # route ALL tokens in one grouped pass: the (G, g, d) group dim is
+        # shardable over the full mesh (vs per-row vmap whose group dim XLA
+        # auto-shards poorly — EXPERIMENTS.md §Perf iteration 6)
+        out = moe(
+            p["moe"], h.reshape(r * t, d), cfg.top_k, call.capacity_factor,
+            group_size=call.moe_group, shard_fn=call.shard_fn,
+        ).reshape(r, t, d)
+    else:
+        out = mlp(p["mlp"], h)
+    return x + out
+
+
+def _block_forward(
+    block_params: List[Params],
+    pattern: List[Dict[str, bool]],
+    cfg: ArchConfig,
+    call: CallConfig,
+    x: jnp.ndarray,
+    segs: jnp.ndarray,
+    pos: jnp.ndarray,
+    split: Optional[Tuple[int, int]],
+) -> jnp.ndarray:
+    for p, spec in zip(block_params, pattern):
+        if spec["attn"]:
+            x = _attention_layer(p, cfg, call, x, segs, pos, split)
+        if spec["ssm"]:
+            x = _ssm_layer(p, cfg, call, x, segs, split)
+        if spec["moe"] or spec["mlp"]:
+            x = _mlp_or_moe_layer(p, cfg, call, x)
+        x = call.shard_fn(x, "activation")
+    return x
+
+
+def forward(
+    params: Params,
+    cfg: ArchConfig,
+    call: CallConfig,
+    tokens: jnp.ndarray,  # (R, T) int32
+    segs: jnp.ndarray,
+    pos: jnp.ndarray,
+    split: Optional[Tuple[int, int]] = None,
+    prefix_embeds: Optional[jnp.ndarray] = None,  # (R, P, d) modality stub
+    dtype=None,
+) -> jnp.ndarray:
+    """Trunk forward -> final hidden states (R, T, d)."""
+    dtype = dtype or call.dtype
+    pattern = block_pattern(cfg)
+    x = embed(params["embed"], tokens, dtype=dtype)
+    if prefix_embeds is not None:
+        pfx = prefix_embeds.astype(dtype)
+        x = jnp.concatenate([pfx, x[:, pfx.shape[1] :]], axis=1)
+    x = call.shard_fn(x, "activation")
+
+    def body(carry, block_params):
+        y = _block_forward(block_params, pattern, cfg, call, carry, segs, pos, split)
+        return y, None
+
+    if call.remat != "none":
+        policy = (
+            jax.checkpoint_policies.nothing_saveable
+            if call.remat == "full"
+            else jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+        )
+        body = jax.checkpoint(body, policy=policy)
+
+    # blocks: list over pattern positions, each stacked (n_rep, ...)
+    stacked = params["blocks"]
+    x, _ = jax.lax.scan(
+        lambda c, bp: body(c, bp), x, stacked
+    )
+    return rmsnorm(params["final_norm"], x, cfg.norm_eps)
+
+
+def lm_head(params: Params, cfg: ArchConfig, hidden: jnp.ndarray) -> jnp.ndarray:
+    """Full logits (small shapes only — tests / decode)."""
+    if cfg.tie_embeddings:
+        return hidden @ params["embed"]["e"].T.astype(hidden.dtype)
+    return dense(params["head"], hidden)
+
+
+def lm_loss(
+    params: Params,
+    cfg: ArchConfig,
+    call: CallConfig,
+    hidden: jnp.ndarray,  # (R, T, d)
+    labels: jnp.ndarray,  # (R, T) int32, -1 ignore
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """CE head -> (loss_sum, valid_count).
+
+    Default (logits_chunk=0): dense logits with a sharding hook — under the
+    production mesh (R over DP, T over CP) the (R, T, V) logits stay fully
+    sharded and the CE reductions are local (perf iteration 1 in
+    EXPERIMENTS.md §Perf: the flattened token-chunk scan emitted one ~150 MB
+    all-reduce per chunk). logits_chunk>0 keeps the remat'd streaming scan
+    for memory-extreme cases.
+    """
+    if call.logits_chunk == 0:
+        if cfg.tie_embeddings:
+            w = params["embed"]["e"].T
+        else:
+            w = params["head"]["w"]
+        logits = hidden @ w.astype(hidden.dtype)  # (R, T, V)
+        logits = call.shard_fn(logits, "logits")
+        return cross_entropy(logits, labels)
+    r, t, d = hidden.shape
+    h = hidden.reshape(r * t, d)
+    y = labels.reshape(r * t)
+    chunk = min(call.logits_chunk, r * t)
+    pad = (-h.shape[0]) % chunk
+    if pad:
+        h = jnp.pad(h, ((0, pad), (0, 0)))
+        y = jnp.pad(y, (0, pad), constant_values=-1)
+    n_chunks = h.shape[0] // chunk
+    hc = h.reshape(n_chunks, chunk, d)
+    yc = y.reshape(n_chunks, chunk)
+
+    if cfg.tie_embeddings:
+        w = params["embed"]["e"].T
+    else:
+        w = params["head"]["w"]
+
+    def body(carry, inp):
+        loss_acc, cnt_acc = carry
+        hh, yy = inp
+        logits = hh @ w.astype(hh.dtype)
+        ls, cnt = cross_entropy(logits, yy)
+        return (loss_acc + ls, cnt_acc + cnt), None
+
+    body = jax.checkpoint(body)
+    (loss_sum, valid), _ = jax.lax.scan(
+        body, (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.int32)), (hc, yc)
+    )
+    return loss_sum, valid
+
+
+__all__ = [
+    "CallConfig",
+    "block_pattern",
+    "init_model",
+    "param_count",
+    "forward",
+    "lm_head",
+    "lm_loss",
+]

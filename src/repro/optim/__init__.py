@@ -1,0 +1,22 @@
+"""Optimizer substrate (pure JAX, no optax)."""
+
+from .adamw import AdamWState, adamw_init, adamw_update
+from .schedule import cosine_schedule, linear_warmup_cosine
+from .grad import clip_by_global_norm, global_norm, tree_add, tree_scale, tree_zeros_like
+from .compression import compress_int8, decompress_int8, compressed_mean
+
+__all__ = [
+    "AdamWState",
+    "adamw_init",
+    "adamw_update",
+    "cosine_schedule",
+    "linear_warmup_cosine",
+    "clip_by_global_norm",
+    "global_norm",
+    "tree_add",
+    "tree_scale",
+    "tree_zeros_like",
+    "compress_int8",
+    "decompress_int8",
+    "compressed_mean",
+]

@@ -1,0 +1,67 @@
+"""AdamW (decoupled weight decay, Loshchilov & Hutter) from scratch.
+
+State (m, v) mirrors the param pytree in float32; params stay float32 masters
+(the model casts to bf16 at use). GDS's scope argument (§4.2) holds: AdamW's
+update depends only on the summed global-batch gradient, so any micro-batch
+partition that preserves the global gradient preserves training exactly.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    step: jnp.ndarray  # () int32
+    m: Any  # pytree like params
+    v: Any
+
+
+def adamw_init(params) -> AdamWState:
+    zeros = jax.tree.map(lambda p: jnp.zeros_like(p, dtype=jnp.float32), params)
+    return AdamWState(step=jnp.zeros((), jnp.int32), m=zeros, v=jax.tree.map(jnp.copy, zeros))
+
+
+def adamw_update(
+    params,
+    grads,
+    state: AdamWState,
+    lr: jnp.ndarray,
+    b1: float = 0.9,
+    b2: float = 0.95,
+    eps: float = 1e-8,
+    weight_decay: float = 0.1,
+):
+    """Returns (new_params, new_state)."""
+    step = state.step + 1
+    b1c = 1.0 - b1 ** step.astype(jnp.float32)
+    b2c = 1.0 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32)
+        m_new = b1 * m + (1.0 - b1) * g
+        v_new = b2 * v + (1.0 - b2) * (g * g)
+        m_hat = m_new / b1c
+        v_hat = v_new / b2c
+        delta = m_hat / (jnp.sqrt(v_hat) + eps)
+        # decoupled weight decay: only on matrices (dim >= 2), standard practice
+        wd = weight_decay if p.ndim >= 2 else 0.0
+        p_new = p - lr * (delta + wd * p.astype(jnp.float32))
+        return p_new.astype(p.dtype), m_new, v_new
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_m = treedef.flatten_up_to(state.m)
+    flat_v = treedef.flatten_up_to(state.v)
+    out = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = treedef.unflatten([o[0] for o in out])
+    new_m = treedef.unflatten([o[1] for o in out])
+    new_v = treedef.unflatten([o[2] for o in out])
+    return new_p, AdamWState(step=step, m=new_m, v=new_v)
+
+
+__all__ = ["AdamWState", "adamw_init", "adamw_update"]

@@ -1,0 +1,40 @@
+"""Gradient utilities: global-norm clipping and pytree accumulation helpers.
+
+Accumulation contract (math-equivalence): each micro-step computes
+``grad(loss_sum / GLOBAL_denominator)``; summing micro-step grads over an
+iteration equals the gradient of the global-batch mean loss, independent of
+how GDS partitioned the batch. Tested in test_grad_equivalence.py.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def global_norm(tree) -> jnp.ndarray:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(
+        sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in leaves)
+    )
+
+
+def clip_by_global_norm(tree, max_norm: float):
+    norm = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-12))
+    return jax.tree.map(lambda x: (x * scale).astype(x.dtype), tree), norm
+
+
+def tree_zeros_like(tree, dtype=jnp.float32):
+    return jax.tree.map(lambda x: jnp.zeros_like(x, dtype=dtype), tree)
+
+
+def tree_add(a, b):
+    return jax.tree.map(lambda x, y: x + y, a, b)
+
+
+def tree_scale(tree, s):
+    return jax.tree.map(lambda x: x * s, tree)
+
+
+__all__ = ["global_norm", "clip_by_global_norm", "tree_zeros_like", "tree_add", "tree_scale"]

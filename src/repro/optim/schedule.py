@@ -1,0 +1,22 @@
+"""Learning-rate schedules."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def cosine_schedule(step, base_lr: float, total_steps: int, min_frac: float = 0.1):
+    t = jnp.clip(step.astype(jnp.float32) / max(total_steps, 1), 0.0, 1.0)
+    return base_lr * (min_frac + (1 - min_frac) * 0.5 * (1 + jnp.cos(jnp.pi * t)))
+
+
+def linear_warmup_cosine(
+    step, base_lr: float, warmup: int, total_steps: int, min_frac: float = 0.1
+):
+    s = step.astype(jnp.float32)
+    warm = base_lr * s / max(warmup, 1)
+    cos = cosine_schedule(step - warmup, base_lr, max(total_steps - warmup, 1), min_frac)
+    return jnp.where(s < warmup, warm, cos)
+
+
+__all__ = ["cosine_schedule", "linear_warmup_cosine"]

@@ -1,0 +1,20 @@
+from .state import TrainState, init_train_state
+from .step import (
+    accumulate,
+    dense_loss,
+    make_apply_update,
+    make_dense_train_step,
+    make_micro_grad,
+    packed_loss,
+)
+
+__all__ = [
+    "TrainState",
+    "init_train_state",
+    "accumulate",
+    "dense_loss",
+    "make_apply_update",
+    "make_dense_train_step",
+    "make_micro_grad",
+    "packed_loss",
+]

@@ -1,0 +1,165 @@
+"""End-to-end Skrull training loop.
+
+Per iteration: loader runs GDS+DACP online (host, overlapped with device
+work), each packed micro-step runs a compiled ``micro_grad`` (cached per
+bucket shape), a jitted accumulator sums gradient contributions, one AdamW
+update applies, the health monitor ingests step timings (straggler telemetry
+feeds the NEXT iteration's bin-packing), and the checkpoint manager saves
+asynchronously every ``ckpt_every`` steps. ``run()`` auto-resumes from the
+latest checkpoint, restoring params, optimizer, RNG and loader cursor.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from functools import partial
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..checkpoint.manager import CheckpointManager
+from ..configs.base import ArchConfig
+from ..data.loader import SkrullDataLoader, LoaderState
+from ..ft.health import HealthMonitor
+from ..models.transformer import CallConfig, init_model
+from ..optim.grad import tree_add, tree_zeros_like
+from ..optim.schedule import linear_warmup_cosine
+from .state import TrainState, init_train_state
+from .step import make_apply_update, make_micro_grad
+
+
+@dataclasses.dataclass
+class TrainerConfig:
+    total_steps: int = 100
+    lr: float = 3e-4
+    warmup: int = 10
+    clip_norm: float = 1.0
+    weight_decay: float = 0.1
+    ckpt_every: int = 50
+    ckpt_dir: Optional[str] = None
+    log_every: int = 10
+    straggler_aware: bool = True
+
+
+class Trainer:
+    def __init__(
+        self,
+        cfg: ArchConfig,
+        call: CallConfig,
+        loader: SkrullDataLoader,
+        tcfg: TrainerConfig,
+        mesh=None,
+        state: Optional[TrainState] = None,
+        seed: int = 0,
+    ):
+        self.cfg = cfg
+        self.call = call
+        self.loader = loader
+        self.tcfg = tcfg
+        self.mesh = mesh
+        if state is None:
+            params = init_model(jax.random.PRNGKey(seed), cfg)
+            state = init_train_state(params)
+        self.state = state
+        self.step = 0
+        lr_fn = partial(
+            linear_warmup_cosine,
+            base_lr=tcfg.lr,
+            warmup=tcfg.warmup,
+            total_steps=tcfg.total_steps,
+        )
+        self._micro_grad = jax.jit(make_micro_grad(cfg, call))
+        self._apply = jax.jit(make_apply_update(cfg, lr_fn, tcfg.clip_norm, tcfg.weight_decay))
+        self._accum = jax.jit(
+            lambda acc, g: tree_add(acc, jax.tree.map(lambda x: x.astype(jnp.float32), g))
+        )
+        self.health = HealthMonitor(ws=loader.ws)
+        self.ckpt = (
+            CheckpointManager(tcfg.ckpt_dir) if tcfg.ckpt_dir else None
+        )
+        self.history: List[Dict[str, float]] = []
+
+    # -- checkpoint integration ---------------------------------------------
+    def _ckpt_tree(self):
+        return {
+            "state": self.state,
+            "loader": {
+                k: jnp.asarray(v) for k, v in self.loader.state().to_dict().items()
+            },
+        }
+
+    def save(self):
+        if self.ckpt:
+            self.ckpt.save(self.step, self._ckpt_tree(), meta={"step": self.step})
+
+    def maybe_resume(self) -> bool:
+        if not self.ckpt or self.ckpt.latest_step() is None:
+            return False
+        tree, meta = self.ckpt.restore(self._ckpt_tree())
+        self.state = tree["state"]
+        self.loader.restore(
+            LoaderState.from_dict({k: int(v) for k, v in tree["loader"].items()})
+        )
+        self.step = int(meta["step"])
+        return True
+
+    # -- iteration ------------------------------------------------------------
+    def train_step(self) -> Dict[str, float]:
+        t0 = time.perf_counter()
+        it = self.loader.next_iteration()
+        denom = jnp.float32(it.denominator)
+        acc = tree_zeros_like(self.state.params)
+        loss_sum = 0.0
+        valid = 0
+        for row in it.microbatches:
+            # stack DP ranks: (ws, n_cp, c)
+            buffers = {
+                k: jnp.asarray(np.stack([mb.as_arrays()[k] for mb in row]))
+                for k in row[0].as_arrays()
+            }
+            grads, m = self._micro_grad(self.state.params, buffers, denom)
+            acc = self._accum(acc, grads)
+            loss_sum += float(m["loss_sum"])
+            valid += int(m["valid"])
+        self.state, am = self._apply(self.state, acc)
+        dt = time.perf_counter() - t0
+        # feed telemetry: per-rank projected times from the schedule report
+        if self.tcfg.straggler_aware:
+            for r in range(self.loader.ws):
+                self.health.beat(r, step_time_s=dt)
+            self.loader.set_speed_factors(self.health.speed_factors())
+        self.step += 1
+        return {
+            "step": self.step,
+            "loss": loss_sum / max(valid, 1),
+            "valid_tokens": valid,
+            "microsteps": it.n_microsteps,
+            "sched_ms": it.sched_time_s * 1e3,
+            "time_s": dt,
+            "grad_norm": float(am["grad_norm"]),
+        }
+
+    def run(self, steps: Optional[int] = None) -> List[Dict[str, float]]:
+        self.maybe_resume()
+        n = steps if steps is not None else self.tcfg.total_steps
+        while self.step < n:
+            m = self.train_step()
+            self.history.append(m)
+            if self.step % self.tcfg.log_every == 0 or self.step == n:
+                print(
+                    f"step {m['step']:5d} loss {m['loss']:.4f} "
+                    f"tokens {m['valid_tokens']} mbs {m['microsteps']} "
+                    f"sched {m['sched_ms']:.1f}ms t {m['time_s']:.2f}s"
+                )
+            if self.ckpt and self.step % self.tcfg.ckpt_every == 0:
+                self.save()
+        if self.ckpt:
+            self.save()
+            self.ckpt.wait()
+        return self.history
+
+
+__all__ = ["Trainer", "TrainerConfig"]

@@ -1,0 +1,221 @@
+"""Serving path: batched prefill + single-token decode with KV/SSM caches.
+
+Cache layout per attention pattern-position: k/v (n_rep, B, S_cache, Hkv, D)
+written as a RING BUFFER at ``len % S_cache`` — full causal caches use
+S_cache = max_len; SWA archs use S_cache = window (bounded memory for
+long_500k). RoPE is applied at write time with absolute positions, so ring
+overwrites preserve relative geometry. SSM pattern-positions carry
+(h (n_rep, B, H, N, P), conv tail (n_rep, B, K-1, C)) — O(1) in sequence
+length (this is why mamba2/jamba run the 500K-decode cell at all).
+
+``prefill`` consumes (B, S) token blocks and emits last-position logits +
+caches; ``decode_step`` consumes one token per slot. Both scan over the block
+pattern exactly like training, so serve shares all model code.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from ..models.attention import decode_attention
+from ..models.layers import dense, embed, rmsnorm, rope
+from ..models.moe import moe
+from ..models.ssm import ssm_block, ssm_decode_state, ssm_decode_step
+from ..models.transformer import CallConfig, block_pattern, lm_head
+
+
+def cache_len_for(cfg: ArchConfig, max_len: int) -> int:
+    if cfg.window is not None:
+        return min(cfg.window, max_len)
+    return max_len
+
+
+def init_caches(
+    params, cfg: ArchConfig, batch: int, max_len: int, dtype=jnp.bfloat16
+) -> List[Any]:
+    """One cache entry per pattern position, stacked over repetitions."""
+    pattern = block_pattern(cfg)
+    n_rep = cfg.n_layers // len(pattern)
+    s_cache = cache_len_for(cfg, max_len)
+    caches: List[Any] = []
+    for pos_i, spec in enumerate(pattern):
+        if spec["attn"]:
+            kv = {
+                "k": jnp.zeros((n_rep, batch, s_cache, cfg.kv_heads, cfg.head_dim_), dtype),
+                "v": jnp.zeros((n_rep, batch, s_cache, cfg.kv_heads, cfg.head_dim_), dtype),
+            }
+            caches.append(kv)
+        elif spec["ssm"]:
+            n_heads = params["blocks"][pos_i]["ssm"]["A_log"].shape[1]
+            d_inner = params["blocks"][pos_i]["ssm"]["out_proj"]["w"].shape[1]
+            head_p = d_inner // n_heads
+            n_state = (params["blocks"][pos_i]["ssm"]["conv_w"].shape[2] - d_inner) // 2
+            k = params["blocks"][pos_i]["ssm"]["conv_w"].shape[1]
+            st = {
+                "h": jnp.zeros((n_rep, batch, n_heads, n_state, head_p), jnp.float32),
+                "conv": jnp.zeros((n_rep, batch, k - 1, d_inner + 2 * n_state), dtype),
+            }
+            caches.append(st)
+        else:
+            caches.append({})
+    return caches
+
+
+# ---------------------------------------------------------------------------
+# Prefill
+# ---------------------------------------------------------------------------
+
+
+def prefill(
+    params,
+    cfg: ArchConfig,
+    call: CallConfig,
+    tokens: jnp.ndarray,  # (B, S)
+    max_len: int,
+) -> Tuple[jnp.ndarray, List[Any], jnp.ndarray]:
+    """Returns (last logits (B, V), caches, lengths (B,))."""
+    from ..models.transformer import _mlp_or_moe_layer  # reuse
+
+    pattern = block_pattern(cfg)
+    b, s = tokens.shape
+    s_cache = cache_len_for(cfg, max_len)
+    segs = jnp.ones((b, s), jnp.int32)
+    pos = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+    x = embed(params["embed"], tokens, dtype=jnp.bfloat16)
+
+    def body(carry, block_params):
+        h = carry
+        new_caches = []
+        for p, spec in zip(block_params, pattern):
+            if spec["attn"]:
+                hn = rmsnorm(p["ln1"], h, cfg.norm_eps)
+                hq, hkv, dh = cfg.n_heads, cfg.kv_heads, cfg.head_dim_
+                q = dense(p["q"], hn).reshape(b, s, hq, dh)
+                k = dense(p["k"], hn).reshape(b, s, hkv, dh)
+                v = dense(p["v"], hn).reshape(b, s, hkv, dh)
+                q = rope(q, pos, cfg.rope_theta)
+                k = rope(k, pos, cfg.rope_theta)
+                # CP gather of K/V over the sequence axis (see
+                # transformer._attention_layer — avoids per-chunk carry
+                # all-reduces under the production mesh)
+                k = call.shard_fn(k, "kv_rows")
+                v = call.shard_fn(v, "kv_rows")
+                from ..models.attention import segment_attention_chunked
+
+                out = jax.vmap(
+                    lambda qq, kk, vv, ss, pp: segment_attention_chunked(
+                        qq, kk, vv, ss, ss, pp, pp, cfg.window, kv_chunk=call.kv_chunk
+                    )
+                )(q, k, v, segs, pos)
+                h = h + dense(p["o"], out.reshape(b, s, hq * dh))
+                # cache tail: last s_cache positions, laid out ring-style so
+                # decode's slot = pos % s_cache lands where it expects
+                if s >= s_cache:
+                    kc = jnp.roll(k[:, -s_cache:], s % s_cache, axis=1)
+                    vc = jnp.roll(v[:, -s_cache:], s % s_cache, axis=1)
+                else:
+                    kc = jnp.pad(k, ((0, 0), (0, s_cache - s), (0, 0), (0, 0)))
+                    vc = jnp.pad(v, ((0, 0), (0, s_cache - s), (0, 0), (0, 0)))
+                new_caches.append({"k": kc.astype(jnp.bfloat16), "v": vc.astype(jnp.bfloat16)})
+            if spec["ssm"]:
+                hn = rmsnorm(p["ln1"], h, cfg.norm_eps)
+                out, st = jax.vmap(
+                    lambda hh, sg: ssm_block(
+                        p["ssm"], hh, sg, chunk=call.ssd_chunk, return_state=True
+                    )
+                )(hn, segs)
+                h = h + out.astype(h.dtype)
+                new_caches.append(st)
+            if spec["moe"] or spec["mlp"]:
+                h = _mlp_or_moe_layer(p, cfg, call, h)
+            if not (spec["attn"] or spec["ssm"]):
+                new_caches.append({})
+        return h, tuple(new_caches)
+
+    x, caches_stacked = jax.lax.scan(body, x, params["blocks"])
+    h = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    logits = lm_head(params, cfg, h[:, -1])
+    lengths = jnp.full((b,), s, jnp.int32)
+    return logits.astype(jnp.float32), list(caches_stacked), lengths
+
+
+# ---------------------------------------------------------------------------
+# Decode
+# ---------------------------------------------------------------------------
+
+
+def decode_step(
+    params,
+    cfg: ArchConfig,
+    call: CallConfig,
+    token: jnp.ndarray,  # (B,) int32
+    lengths: jnp.ndarray,  # (B,) int32 tokens generated so far
+    caches: List[Any],
+) -> Tuple[jnp.ndarray, List[Any]]:
+    """One decode step for every slot. Returns (logits (B, V), new caches)."""
+    pattern = block_pattern(cfg)
+    b = token.shape[0]
+    x = embed(params["embed"], token, dtype=jnp.bfloat16)  # (B, d)
+    pos = lengths  # absolute position of the new token
+
+    def body(carry, xs):
+        h = carry  # (B, d)
+        block_params, block_caches = xs
+        new_caches = []
+        for p, spec, cache in zip(block_params, pattern, block_caches):
+            if spec["attn"]:
+                hn = rmsnorm(p["ln1"], h, cfg.norm_eps)
+                hq, hkv, dh = cfg.n_heads, cfg.kv_heads, cfg.head_dim_
+                q = dense(p["q"], hn).reshape(b, 1, hq, dh)
+                k = dense(p["k"], hn).reshape(b, 1, hkv, dh)
+                v = dense(p["v"], hn).reshape(b, 1, hkv, dh)
+                q = rope(q, pos[:, None], cfg.rope_theta)[:, 0]
+                k = rope(k, pos[:, None], cfg.rope_theta)[:, 0]
+                v = v[:, 0]
+                s_cache = cache["k"].shape[1]
+                slot = (pos % s_cache).astype(jnp.int32)
+                k_new = jax.vmap(
+                    lambda c, kk, i: jax.lax.dynamic_update_slice(c, kk[None], (i, 0, 0))
+                )(cache["k"], k.astype(cache["k"].dtype), slot)
+                v_new = jax.vmap(
+                    lambda c, vv, i: jax.lax.dynamic_update_slice(c, vv[None], (i, 0, 0))
+                )(cache["v"], v.astype(cache["v"].dtype), slot)
+                n_valid = jnp.minimum(pos + 1, s_cache)
+                out = jax.vmap(
+                    lambda qq, kk, vv, nn: decode_attention(qq, kk, vv, nn, None)
+                )(q, k_new, v_new, n_valid)
+                h = h + dense(p["o"], out.reshape(b, hq * dh))
+                new_caches.append({"k": k_new, "v": v_new})
+            if spec["ssm"]:
+                hn = rmsnorm(p["ln1"], h, cfg.norm_eps)
+                out, st = jax.vmap(
+                    lambda xx, ss: ssm_decode_step(p["ssm"], xx, ss)
+                )(hn, cache)
+                h = h + out.astype(h.dtype)
+                new_caches.append(st)
+            if spec["moe"] or spec["mlp"]:
+                hn = rmsnorm(p["ln2"], h, cfg.norm_eps)
+                if "moe" in p:
+                    out = moe(p["moe"], hn, cfg.top_k, call.capacity_factor)
+                else:
+                    from ..models.layers import mlp
+
+                    out = mlp(p["mlp"], hn)
+                h = h + out
+            if not (spec["attn"] or spec["ssm"]):
+                new_caches.append({})
+        return h, tuple(new_caches)
+
+    x, new_caches = jax.lax.scan(body, x, (params["blocks"], tuple(caches)))
+    h = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    logits = lm_head(params, cfg, h)
+    return logits.astype(jnp.float32), list(new_caches)
+
+
+__all__ = ["init_caches", "prefill", "decode_step", "cache_len_for"]

@@ -1,0 +1,22 @@
+"""Training state pytree."""
+
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from ..optim.adamw import AdamWState, adamw_init
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt: AdamWState
+
+
+def init_train_state(params) -> TrainState:
+    return TrainState(params=params, opt=adamw_init(params))
+
+
+__all__ = ["TrainState", "init_train_state"]

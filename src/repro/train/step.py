@@ -1,0 +1,205 @@
+"""Train steps: the Skrull packed-bucket path and the dense baseline path.
+
+Skrull path (production): one compiled ``micro_grad`` per bucket shape
+(the packing ladder keeps the set small) computes the gradient contribution
+of one micro-step over the whole mesh; a tiny jitted accumulator sums
+contributions; ``apply_update`` runs AdamW once per iteration. Per-micro-step
+loss is normalised by the GLOBAL batch denominator, so
+
+    sum_m grad_m == grad of the global-batch mean loss        (Eq. 9's scope)
+
+for ANY partition the scheduler chose — the math-equivalence contract.
+
+Dense path (dry-run / DeepSpeed-baseline execution): ``(global_batch, seq)``
+token inputs, internal lax.scan gradient accumulation over ``n_micro`` equal
+splits, one fused optimizer update. This is what ``dryrun.py`` lowers for the
+40-cell roofline table.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from ..models.transformer import CallConfig, forward, lm_loss
+from ..optim.adamw import adamw_update
+from ..optim.grad import clip_by_global_norm, tree_add, tree_zeros_like
+from .state import TrainState
+
+
+# ---------------------------------------------------------------------------
+# Skrull packed-bucket path
+# ---------------------------------------------------------------------------
+
+
+def packed_loss(
+    params,
+    cfg: ArchConfig,
+    call: CallConfig,
+    buffers: Dict[str, jnp.ndarray],  # each (ws, n_cp, c_*) int32
+    denominator: jnp.ndarray,  # () float32 — GLOBAL batch valid tokens
+) -> Tuple[jnp.ndarray, Tuple[jnp.ndarray, jnp.ndarray]]:
+    c_loc = buffers["loc_tokens"].shape[-1]
+    c_dist = buffers["dist_tokens"].shape[-1]
+    tokens = jnp.concatenate([buffers["loc_tokens"], buffers["dist_tokens"]], axis=-1)
+    segs = jnp.concatenate([buffers["loc_segs"], buffers["dist_segs"]], axis=-1)
+    pos = jnp.concatenate([buffers["loc_pos"], buffers["dist_pos"]], axis=-1)
+    labels = jnp.concatenate([buffers["loc_labels"], buffers["dist_labels"]], axis=-1)
+
+    def per_dp(tok, sg, ps, lb):
+        h = forward(params, cfg, call, tok, sg, ps, split=(c_loc, c_dist))
+        return lm_loss(params, cfg, call, h, lb)
+
+    loss_sums, valids = jax.vmap(per_dp)(tokens, segs, pos, labels)
+    loss_sum = loss_sums.sum()
+    valid = valids.sum()
+    return loss_sum / denominator, (loss_sum, valid)
+
+
+def make_micro_grad(cfg: ArchConfig, call: CallConfig):
+    """jit-able: (params, buffers, denominator) -> (grads, metrics)."""
+
+    def f(params, buffers, denominator):
+        (loss, (loss_sum, valid)), grads = jax.value_and_grad(
+            packed_loss, has_aux=True
+        )(params, cfg, call, buffers, denominator)
+        return grads, {"loss_sum": loss_sum, "valid": valid}
+
+    return f
+
+
+def accumulate(acc, grads):
+    return tree_add(acc, jax.tree.map(lambda g: g.astype(jnp.float32), grads))
+
+
+def make_apply_update(
+    cfg: ArchConfig,
+    lr_fn,
+    clip_norm: float = 1.0,
+    weight_decay: float = 0.1,
+):
+    def f(state: TrainState, grads) -> Tuple[TrainState, Dict[str, jnp.ndarray]]:
+        grads, gnorm = clip_by_global_norm(grads, clip_norm)
+        lr = lr_fn(state.opt.step + 1)
+        params, opt = adamw_update(
+            state.params, grads, state.opt, lr, weight_decay=weight_decay
+        )
+        return TrainState(params, opt), {"grad_norm": gnorm, "lr": lr}
+
+    return f
+
+
+# ---------------------------------------------------------------------------
+# Dense baseline path (dry-run shape contract: tokens (global_batch, seq))
+# ---------------------------------------------------------------------------
+
+
+def dense_loss(
+    params,
+    cfg: ArchConfig,
+    call: CallConfig,
+    tokens: jnp.ndarray,  # (B, S)
+    labels: jnp.ndarray,  # (B, S)
+    prefix_embeds: Optional[jnp.ndarray] = None,
+) -> Tuple[jnp.ndarray, Tuple[jnp.ndarray, jnp.ndarray]]:
+    b, s = tokens.shape
+    segs = jnp.ones((b, s), jnp.int32)
+    pos = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+    h = forward(params, cfg, call, tokens, segs, pos, prefix_embeds=prefix_embeds)
+    loss_sum, valid = lm_loss(params, cfg, call, h, labels)
+    denom = jnp.maximum(valid.astype(jnp.float32), 1.0)
+    return loss_sum / denom, (loss_sum, valid)
+
+
+def make_dense_train_step(
+    cfg: ArchConfig,
+    call: CallConfig,
+    lr_fn,
+    n_micro: int = 1,
+    clip_norm: float = 1.0,
+    weight_decay: float = 0.1,
+    with_frontend: bool = False,
+    grad_shardings=None,
+):
+    """(state, tokens (B,S), labels (B,S)[, prefix_embeds]) -> (state, metrics).
+
+    ``n_micro`` > 1 runs lax.scan gradient accumulation over equal batch
+    splits (B % n_micro == 0) — bounding activation memory exactly like a
+    static grad-accum config would. ``grad_shardings`` (a tree of
+    NamedShardings matching params) pins accumulated gradients to the param
+    layout so XLA emits reduce-scatters instead of full all-reduces
+    (EXPERIMENTS.md §Perf iteration 3).
+    """
+
+    def step(state: TrainState, tokens, labels, prefix_embeds=None):
+        b = tokens.shape[0]
+        assert b % n_micro == 0
+        mb = b // n_micro
+
+        def micro(carry, xs):
+            acc = carry
+            if with_frontend:
+                tok, lab, pfx = xs
+            else:
+                tok, lab = xs
+                pfx = None
+            (loss, (ls, va)), grads = jax.value_and_grad(dense_loss, has_aux=True)(
+                state.params, cfg, call, tok, lab, pfx
+            )
+            acc = tree_add(acc, jax.tree.map(lambda g: g.astype(jnp.float32), grads))
+            return acc, (ls, va)
+
+        acc0 = tree_zeros_like(state.params)
+        if n_micro == 1:
+            if with_frontend:
+                acc, (ls, va) = micro(acc0, (tokens, labels, prefix_embeds))
+            else:
+                acc, (ls, va) = micro(acc0, (tokens, labels))
+            loss_sum, valid = ls, va
+        else:
+            xs = (
+                tokens.reshape(n_micro, mb, -1),
+                labels.reshape(n_micro, mb, -1),
+            )
+            if with_frontend:
+                xs = xs + (
+                    prefix_embeds.reshape(
+                        n_micro, mb, prefix_embeds.shape[1], prefix_embeds.shape[2]
+                    ),
+                )
+            acc, (ls, va) = jax.lax.scan(micro, acc0, xs)
+            loss_sum, valid = ls.sum(), va.sum()
+
+        grads = jax.tree.map(lambda g: g / n_micro, acc)
+        if grad_shardings is not None:
+            grads = jax.tree.map(
+                jax.lax.with_sharding_constraint, grads, grad_shardings
+            )
+        grads, gnorm = clip_by_global_norm(grads, clip_norm)
+        lr = lr_fn(state.opt.step + 1)
+        params, opt = adamw_update(
+            state.params, grads, state.opt, lr, weight_decay=weight_decay
+        )
+        metrics = {
+            "loss": loss_sum / jnp.maximum(valid.astype(jnp.float32), 1.0),
+            "valid": valid,
+            "grad_norm": gnorm,
+            "lr": lr,
+        }
+        return TrainState(params, opt), metrics
+
+    return step
+
+
+__all__ = [
+    "packed_loss",
+    "make_micro_grad",
+    "accumulate",
+    "make_apply_update",
+    "dense_loss",
+    "make_dense_train_step",
+]

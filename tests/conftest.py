@@ -1,0 +1,51 @@
+import os
+import sys
+
+# src-layout import without install
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.base import ArchConfig
+
+
+@pytest.fixture(scope="session")
+def tiny_dense():
+    return ArchConfig(
+        name="tiny-dense", family="dense", modality="text", n_layers=2,
+        d_model=64, n_heads=4, kv_heads=2, d_ff=128, vocab=256, head_dim=16,
+    )
+
+
+@pytest.fixture(scope="session")
+def tiny_ssm():
+    return ArchConfig(
+        name="tiny-ssm", family="ssm", modality="text", n_layers=2,
+        d_model=64, n_heads=0, kv_heads=0, d_ff=0, vocab=256,
+        ssm_state=16, ssm_heads=2,
+    )
+
+
+@pytest.fixture(scope="session")
+def tiny_moe():
+    return ArchConfig(
+        name="tiny-moe", family="moe", modality="text", n_layers=2,
+        d_model=64, n_heads=4, kv_heads=2, d_ff=128, vocab=256, head_dim=16,
+        n_experts=4, top_k=2, expert_d_ff=64,
+    )
+
+
+@pytest.fixture(scope="session")
+def tiny_hybrid():
+    return ArchConfig(
+        name="tiny-hybrid", family="hybrid", modality="text", n_layers=4,
+        d_model=64, n_heads=4, kv_heads=2, d_ff=128, vocab=256, head_dim=16,
+        n_experts=4, top_k=2, moe_every=2, attn_every=4, ssm_state=16, ssm_heads=2,
+    )
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)

@@ -1,0 +1,89 @@
+"""Attention implementations: chunked == dense, SWA, decode, hypothesis sweep."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.models.attention import (
+    decode_attention,
+    segment_attention_chunked,
+    segment_attention_dense,
+)
+
+
+def _packed_meta(t, n_segs, rng):
+    bounds = np.sort(rng.choice(np.arange(1, t), size=n_segs - 1, replace=False))
+    segs = np.zeros(t, np.int32)
+    pos = np.zeros(t, np.int32)
+    prev = 0
+    for i, b in enumerate(list(bounds) + [t]):
+        segs[prev:b] = i + 1
+        pos[prev:b] = np.arange(b - prev)
+        prev = b
+    return jnp.asarray(segs), jnp.asarray(pos)
+
+
+@pytest.mark.parametrize("window", [None, 16])
+@pytest.mark.parametrize("kv_chunk", [32, 64, 100])
+def test_chunked_matches_dense(window, kv_chunk, rng):
+    t, s, hq, hkv, d = 96, 100, 4, 2, 16
+    q = jnp.asarray(rng.normal(size=(t, hq, d)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(s, hkv, d)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(s, hkv, d)), jnp.float32)
+    qs, qp = _packed_meta(t, 3, rng)
+    ks, kp = _packed_meta(s, 3, rng)
+    a = segment_attention_dense(q, k, v, qs, ks, qp, kp, window)
+    b = segment_attention_chunked(q, k, v, qs, ks, qp, kp, window, kv_chunk=kv_chunk)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=2e-6)
+
+
+def test_padding_rows_zero_with_zero_grad(rng):
+    import jax
+
+    t, hq, hkv, d = 32, 2, 1, 8
+    q = jnp.asarray(rng.normal(size=(t, hq, d)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(t, hkv, d)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(t, hkv, d)), jnp.float32)
+    segs = jnp.zeros(t, jnp.int32)  # all padding
+    pos = jnp.zeros(t, jnp.int32)
+    out = segment_attention_dense(q, k, v, segs, segs, pos, pos)
+    assert float(jnp.abs(out).max()) == 0.0
+    g = jax.grad(
+        lambda q: jnp.sum(segment_attention_dense(q, k, v, segs, segs, pos, pos) ** 2)
+    )(q)
+    assert bool(jnp.isfinite(g).all()) and float(jnp.abs(g).max()) == 0.0
+
+
+def test_decode_matches_dense_last_token(rng):
+    t, hq, hkv, d = 24, 4, 2, 8
+    q_all = jnp.asarray(rng.normal(size=(t, hq, d)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(t, hkv, d)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(t, hkv, d)), jnp.float32)
+    segs = jnp.ones(t, jnp.int32)
+    pos = jnp.arange(t, dtype=jnp.int32)
+    full = segment_attention_dense(q_all, k, v, segs, segs, pos, pos)
+    dec = decode_attention(q_all[-1], k, v, jnp.int32(t))
+    np.testing.assert_allclose(np.asarray(full[-1]), np.asarray(dec), atol=2e-6)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    t=st.integers(8, 80),
+    hkv=st.sampled_from([1, 2]),
+    g=st.sampled_from([1, 2, 3]),
+    window=st.sampled_from([None, 8]),
+    seed=st.integers(0, 10_000),
+)
+def test_chunked_property(t, hkv, g, window, seed):
+    rng = np.random.default_rng(seed)
+    d = 8
+    hq = hkv * g
+    q = jnp.asarray(rng.normal(size=(t, hq, d)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(t, hkv, d)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(t, hkv, d)), jnp.float32)
+    segs = jnp.asarray(rng.integers(0, 3, t), jnp.int32)
+    pos = jnp.asarray(rng.integers(0, t, t), jnp.int32)
+    a = segment_attention_dense(q, k, v, segs, segs, pos, pos, window)
+    b = segment_attention_chunked(q, k, v, segs, segs, pos, pos, window, kv_chunk=16)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=3e-6)

@@ -1,0 +1,68 @@
+"""Algorithm 1 (DACP) unit + property tests."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.dacp import (
+    DISTRIBUTED,
+    DACPSchedulingError,
+    feasible,
+    schedule_dacp,
+)
+
+
+def test_all_short_stays_local():
+    res = schedule_dacp([10, 20, 30, 40], bucket_size=100, n_cp=2)
+    assert (res.assignment != DISTRIBUTED).all()
+    # load-balanced: both ranks used
+    assert len(set(res.assignment.tolist())) == 2
+
+
+def test_oversize_sequence_is_distributed():
+    res = schedule_dacp([10, 150], bucket_size=100, n_cp=2)
+    assert res.assignment[1] == DISTRIBUTED
+    assert res.assignment[0] != DISTRIBUTED
+
+
+def test_memory_constraint_forces_sharding():
+    # three 80s cannot all be local under C=130, N=2 (one bucket would hold
+    # 160 > 130), but distributing one (80 + 80/2 = 120 <= 130) works
+    res = schedule_dacp([80, 80, 80], bucket_size=130, n_cp=2)
+    res.validate()
+    assert (res.assignment == DISTRIBUTED).sum() >= 1
+
+
+def test_rollback_path():
+    # locals fill both buckets; the long then needs a roll-back to fit
+    res = schedule_dacp([60, 60, 100], bucket_size=130, n_cp=2)
+    res.validate()
+
+
+def test_infeasible_raises():
+    with pytest.raises(DACPSchedulingError):
+        schedule_dacp([300, 300], bucket_size=100, n_cp=2)
+    assert not feasible([300, 300], 100, 2)
+
+
+def test_rollback_policy_largest():
+    res = schedule_dacp([60, 60, 100], bucket_size=130, n_cp=2, rollback_policy="largest")
+    res.validate()
+
+
+@settings(max_examples=200, deadline=None)
+@given(
+    lengths=st.lists(st.integers(1, 500), min_size=1, max_size=24),
+    n_cp=st.sampled_from([1, 2, 4, 8]),
+    c=st.integers(100, 2000),
+)
+def test_dacp_properties(lengths, n_cp, c):
+    """Whenever total/N <= C (all-distributed feasible), Alg.1 must succeed,
+    assign every sequence exactly once, and honour Eq. 7."""
+    if not feasible(lengths, c, n_cp):
+        return
+    res = schedule_dacp(lengths, c, n_cp)
+    res.validate()  # Eq. 7
+    assert len(res.assignment) == len(lengths)
+    assert ((res.assignment == DISTRIBUTED) | (res.assignment >= 0)).all()  # Eq. 6
+    assert (res.assignment < n_cp).all()

@@ -1,0 +1,30 @@
+"""Synthetic corpora must match the paper's Table 1 percentiles."""
+
+import numpy as np
+import pytest
+
+from repro.data.distributions import DATASETS
+
+
+@pytest.mark.parametrize("name", sorted(DATASETS))
+def test_table1_match(name):
+    DATASETS[name]().validate_table1(n=60_000, tol=0.035)
+
+
+def test_longtail_vs_bimodal_shape():
+    rng = np.random.default_rng(0)
+    wiki = DATASETS["wikipedia"]().sample(rng, 50_000)
+    chat = DATASETS["chatqa2"]().sample(rng, 50_000)
+    # long-tail: median tiny vs mean; bimodal: majority above 8K
+    assert np.median(wiki) * 1.2 < np.mean(wiki)
+    assert np.mean(chat > 8192) > 0.55
+
+
+def test_dataset_deterministic():
+    from repro.data.dataset import SyntheticSFTDataset
+
+    ds = SyntheticSFTDataset(DATASETS["wikipedia"](), vocab_size=100, seed=4, size=100)
+    t1, m1 = ds[17]
+    t2, m2 = ds[17]
+    assert (t1 == t2).all() and (m1 == m2).all()
+    assert ds.length_of(17) == len(t1)

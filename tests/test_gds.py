@@ -1,0 +1,70 @@
+"""Algorithm 2 (GDS) + joint scheduling property tests."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.gds import (
+    GDSSchedulingError,
+    binpack_flops,
+    schedule_global_batch,
+)
+from repro.core.perf_model import H100, ModelProfile, estimate_bytes_per_token
+
+PROF = ModelProfile(
+    hidden=896, kv_dim=128, n_layers=24, d_ff=4864, vocab=151936,
+    bytes_per_token=estimate_bytes_per_token(896, 24),
+)
+
+
+def test_binpack_balances_flops():
+    lengths = np.array([100] * 7 + [1000])
+    bins = binpack_flops(lengths, 2, PROF)
+    loads = [sum(PROF.flops_train(float(lengths[i])) for i in b) for b in bins]
+    assert max(loads) / min(loads) < 3.0
+
+
+def test_binpack_straggler_bias():
+    lengths = np.array([500] * 8)
+    bins = binpack_flops(lengths, 2, PROF, speed_factors=[1.0, 3.0])
+    # the 3x-faster rank gets ~3x the sequences
+    assert len(bins[1]) > len(bins[0])
+
+
+def test_schedule_global_batch_validates():
+    rng = np.random.default_rng(0)
+    lengths = rng.integers(50, 2000, size=64)
+    sched = schedule_global_batch(lengths, ws=4, n_cp=8, bucket_size=3000, profile=PROF)
+    sched.validate()  # Eq. 9 + Eq. 10 + per-mb Eq. 7
+
+
+def test_oversize_sequence_rejected():
+    with pytest.raises(GDSSchedulingError):
+        schedule_global_batch([100, 999_999], ws=2, n_cp=2, bucket_size=100)
+
+
+@settings(max_examples=100, deadline=None)
+@given(
+    lengths=st.lists(st.integers(10, 3000), min_size=4, max_size=48),
+    ws=st.sampled_from([1, 2, 4]),
+    n_cp=st.sampled_from([1, 2, 8]),
+)
+def test_joint_properties(lengths, ws, n_cp):
+    c = 4000
+    if max(lengths) > c * n_cp:
+        return
+    sched = schedule_global_batch(lengths, ws, n_cp, c, PROF)
+    sched.validate()
+    # every rank got a subset; union of micro-batches is a partition
+    total = sum(len(mb) for r in sched.ranks for mb in r.microbatches)
+    assert total == len(lengths)
+
+
+def test_interleave_pairs_long_and_short():
+    """Alg. 2 line 7: strided slicing spreads the longs across micro-batches."""
+    lengths = np.array([10] * 12 + [3000, 3000, 3000])
+    sched = schedule_global_batch(lengths, ws=1, n_cp=2, bucket_size=2000, profile=PROF)
+    per_mb_long = [
+        int((lengths[mb] >= 3000).sum()) for mb in sched.ranks[0].microbatches
+    ]
+    assert max(per_mb_long) <= 2  # not all longs in one micro-batch

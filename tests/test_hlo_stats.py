@@ -1,0 +1,55 @@
+"""HLO-text analyzer: dot FLOPs + collective bytes with while trip counts."""
+
+import pytest
+
+from repro.launch.hlo_stats import HloStats, analyze_hlo
+
+TOY = """
+HloModule jit_f, num_partitions=8
+
+%body (p: (s32[], f32[32,32], f32[128,32])) -> (s32[], f32[32,32], f32[128,32]) {
+  %p = (s32[], f32[32,32]{1,0}, f32[128,32]{1,0}) parameter(0)
+  %gte1 = f32[32,32]{1,0} get-tuple-element(%p), index=1
+  %gte2 = f32[128,32]{1,0} get-tuple-element(%p), index=2
+  %copy.1 = f32[32,128]{1,0} copy(%gte1)
+  %ag = f32[32,128]{0,1} all-gather(%copy.1), channel_id=1, dimensions={1}
+  %dot.2 = f32[32,32]{1,0} dot(%ag, %gte2), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  ROOT %tup = (s32[], f32[32,32]{1,0}, f32[128,32]{1,0}) tuple(%gte1, %dot.2, %gte2)
+}
+
+%cond (c: (s32[], f32[32,32], f32[128,32])) -> pred[] {
+  %c = (s32[], f32[32,32]{1,0}, f32[128,32]{1,0}) parameter(0)
+  %k = s32[] constant(5)
+  %i = s32[] get-tuple-element(%c), index=0
+  ROOT %lt = pred[] compare(%i, %k), direction=LT
+}
+
+ENTRY %main (a: f32[64,32], b: f32[32,128]) -> f32[] {
+  %a = f32[64,32]{1,0} parameter(0)
+  %b = f32[32,128]{1,0} parameter(1)
+  %t = (s32[], f32[32,32]{1,0}, f32[128,32]{1,0}) tuple(%a, %a, %b)
+  %w = (s32[], f32[32,32]{1,0}, f32[128,32]{1,0}) while(%t), condition=%cond, body=%body, backend_config={"known_trip_count":{"n":"5"}}
+  %rs = f32[16] reduce-scatter(%a), channel_id=2, dimensions={0}
+  ROOT %ar = f32[] all-reduce(%rs), channel_id=3
+}
+"""
+
+
+def test_dot_flops_with_trip_count():
+    st = analyze_hlo(TOY)
+    # dot per visit: 2 * 32*32 (result) * 128 (contracted) = 262144; x5
+    assert st["dot_flops"] == 5 * 2 * 32 * 32 * 128
+
+
+def test_collectives_with_trip_count():
+    st = analyze_hlo(TOY)["collectives"]
+    assert st["all-gather"] == 5 * 32 * 128 * 4
+    # reduce-scatter: max(result 16*4, operand 64*32*4)
+    assert st["reduce-scatter"] == 64 * 32 * 4
+    assert st["all-reduce"] == 4.0  # f32[] result
+
+
+def test_trip_count_fallback_from_condition_constant():
+    txt = TOY.replace(', backend_config={"known_trip_count":{"n":"5"}}', "")
+    st = analyze_hlo(txt)
+    assert st["dot_flops"] == 5 * 2 * 32 * 32 * 128  # constant(5) in %cond

@@ -1,0 +1,111 @@
+"""Pallas flash attention vs ref.py oracle: shape/dtype sweeps + hypothesis."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.flash_attention import flash_attention_bwd, flash_attention_fwd
+from repro.kernels.ops import flash_attention
+from repro.kernels.ref import flash_attention_ref
+from repro.models.attention import segment_attention_dense
+
+
+def _meta(t, rng, n_segs=3, pad_tail=True):
+    segs = np.zeros(t, np.int32)
+    pos = np.zeros(t, np.int32)
+    cuts = np.sort(rng.choice(np.arange(1, t - 1), size=n_segs - 1, replace=False))
+    prev, end = 0, t - (t // 8 if pad_tail else 0)
+    bounds = [c for c in cuts if c < end] + [end]
+    for i, b in enumerate(bounds):
+        segs[prev:b] = i + 1
+        pos[prev:b] = np.arange(b - prev)
+        prev = b
+    return jnp.asarray(segs), jnp.asarray(pos)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize(
+    "t,hq,hkv,d,bq,bk",
+    [
+        (128, 4, 2, 32, 64, 64),
+        (256, 8, 8, 64, 128, 128),  # MHA
+        (192, 6, 2, 16, 64, 32),  # uneven group, rect blocks
+        (64, 2, 1, 128, 64, 64),  # full head_dim 128
+    ],
+)
+def test_fwd_sweep(t, hq, hkv, d, bq, bk, dtype, rng):
+    q = jnp.asarray(rng.normal(size=(hq, t, d)), dtype)
+    k = jnp.asarray(rng.normal(size=(hkv, t, d)), dtype)
+    v = jnp.asarray(rng.normal(size=(hkv, t, d)), dtype)
+    segs, pos = _meta(t, rng)
+    o_ref, lse_ref = flash_attention_ref(q, k, v, segs, segs, pos, pos)
+    o, lse = flash_attention_fwd(
+        q, k, v, segs, segs, pos, pos, block_q=bq, block_k=bk
+    )
+    atol = 2e-6 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(
+        np.asarray(o, np.float32), np.asarray(o_ref, np.float32), atol=atol
+    )
+    live = np.asarray(lse_ref) > -1e29
+    np.testing.assert_allclose(
+        np.asarray(lse)[live], np.asarray(lse_ref)[live], atol=max(atol, 1e-5)
+    )
+
+
+@pytest.mark.parametrize("window", [None, 40])
+def test_bwd_matches_autodiff(window, rng):
+    hq, hkv, t, d = 4, 2, 128, 32
+    q = jnp.asarray(rng.normal(size=(hq, t, d)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(hkv, t, d)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(hkv, t, d)), jnp.float32)
+    segs, pos = _meta(t, rng)
+    do = jnp.asarray(rng.normal(size=(hq, t, d)), jnp.float32)
+
+    def f(q, k, v):
+        o, _ = flash_attention_ref(q, k, v, segs, segs, pos, pos, window)
+        return jnp.sum(o * do)
+
+    dq_r, dk_r, dv_r = jax.grad(f, argnums=(0, 1, 2))(q, k, v)
+    o, lse = flash_attention_fwd(q, k, v, segs, segs, pos, pos, window=window, block_q=32, block_k=32)
+    dq, dk, dv = flash_attention_bwd(
+        q, k, v, segs, segs, pos, pos, o, lse, do, window=window, block_q=32, block_k=32
+    )
+    np.testing.assert_allclose(np.asarray(dq), np.asarray(dq_r), atol=1e-5)
+    np.testing.assert_allclose(np.asarray(dk), np.asarray(dk_r), atol=1e-5)
+    np.testing.assert_allclose(np.asarray(dv), np.asarray(dv_r), atol=1e-5)
+
+
+def test_ops_wrapper_matches_model_attention_and_grads(rng):
+    t, hq, hkv, d = 100, 4, 2, 32
+    q = jnp.asarray(rng.normal(size=(t, hq, d)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(t, hkv, d)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(t, hkv, d)), jnp.float32)
+    segs, pos = _meta(t, rng)
+    o_k = flash_attention(q, k, v, segs, segs, pos, pos, block_q=32, block_k=32)
+    o_m = segment_attention_dense(q, k, v, segs, segs, pos, pos)
+    np.testing.assert_allclose(np.asarray(o_k), np.asarray(o_m), atol=2e-6)
+    g_k = jax.grad(lambda q: jnp.sum(flash_attention(q, k, v, segs, segs, pos, pos, block_q=32, block_k=32) ** 2))(q)
+    g_m = jax.grad(lambda q: jnp.sum(segment_attention_dense(q, k, v, segs, segs, pos, pos) ** 2))(q)
+    np.testing.assert_allclose(np.asarray(g_k), np.asarray(g_m), atol=2e-5)
+
+
+@settings(max_examples=12, deadline=None)
+@given(
+    t=st.sampled_from([64, 96, 160]),
+    hkv=st.sampled_from([1, 2]),
+    g=st.sampled_from([1, 2]),
+    d=st.sampled_from([16, 32]),
+    seed=st.integers(0, 1000),
+)
+def test_fwd_property(t, hkv, g, d, seed):
+    rng = np.random.default_rng(seed)
+    hq = hkv * g
+    q = jnp.asarray(rng.normal(size=(hq, t, d)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(hkv, t, d)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(hkv, t, d)), jnp.float32)
+    segs, pos = _meta(t, rng, n_segs=int(rng.integers(2, 5)))
+    o_ref, _ = flash_attention_ref(q, k, v, segs, segs, pos, pos)
+    o, _ = flash_attention_fwd(q, k, v, segs, segs, pos, pos, block_q=32, block_k=32)
+    np.testing.assert_allclose(np.asarray(o), np.asarray(o_ref), atol=3e-6)

@@ -1,0 +1,112 @@
+"""Model-stack invariants: packing invariance, DACP split equivalence,
+frontend stubs, remat equivalence."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models.transformer import CallConfig, forward, init_model, lm_head
+
+CALL = CallConfig(attention_impl="dense", remat="none", ssd_chunk=16, dtype=jnp.float32)
+
+
+def _pack(cfg, rng, la=40, lb=72):
+    ta = jnp.asarray(rng.integers(0, cfg.vocab, (1, la)), jnp.int32)
+    tb = jnp.asarray(rng.integers(0, cfg.vocab, (1, lb)), jnp.int32)
+    tp = jnp.concatenate([ta, tb], axis=1)
+    segs = jnp.concatenate(
+        [jnp.full((1, la), 1), jnp.full((1, lb), 2)], axis=1
+    ).astype(jnp.int32)
+    pos = jnp.concatenate([jnp.arange(la), jnp.arange(lb)])[None].astype(jnp.int32)
+    return ta, tb, tp, segs, pos
+
+
+@pytest.mark.parametrize("fam", ["dense", "ssm", "hybrid"])
+def test_packing_invariance(fam, tiny_dense, tiny_ssm, tiny_hybrid, rng):
+    import dataclasses as _dc
+
+    cfg = {"dense": tiny_dense, "ssm": tiny_ssm, "hybrid": tiny_hybrid}[fam]
+    # MoE capacity is shared across a pack: use no-drop capacity so routing
+    # is invariant (capacity drops are the one legitimate packing dependence)
+    call = _dc.replace(CALL, capacity_factor=64.0)
+    params = init_model(jax.random.PRNGKey(1), cfg)
+    ta, tb, tp, segs, pos = _pack(cfg, rng)
+    la = ta.shape[1]
+    hp = forward(params, cfg, call, tp, segs, pos)
+    ha = forward(params, cfg, call, ta, jnp.ones_like(ta), jnp.arange(la)[None].astype(jnp.int32))
+    hb = forward(params, cfg, call, tb, jnp.ones_like(tb), jnp.arange(tb.shape[1])[None].astype(jnp.int32))
+    tol = 1e-5
+    assert float(jnp.abs(hp[:, :la] - ha).max()) < tol
+    assert float(jnp.abs(hp[:, la:] - hb).max()) < tol
+
+
+def test_dacp_split_equals_all_local(tiny_dense, rng):
+    """A sequence computed via the dist path == computed via the local path
+    (same math, different communication pattern)."""
+    cfg = tiny_dense
+    params = init_model(jax.random.PRNGKey(2), cfg)
+    t = 64
+    tokens = jnp.asarray(rng.integers(0, cfg.vocab, (2, t)), jnp.int32)
+    segs = jnp.concatenate([jnp.full((2, t // 2), 1), jnp.full((2, t // 2), 2)], axis=1).astype(jnp.int32)
+    pos = jnp.concatenate([jnp.arange(t // 2), jnp.arange(t // 2)])[None].repeat(2, 0).astype(jnp.int32)
+    h_local = forward(params, cfg, CALL, tokens, segs, pos, split=(t, 0))
+    h_plain = forward(params, cfg, CALL, tokens, segs, pos, split=None)
+    assert float(jnp.abs(h_local - h_plain).max()) < 1e-6
+    # dist-only: each row is a shard of ONE global packed stream; rebuild the
+    # same stream as a single local row and compare
+    flat_tokens = tokens.reshape(1, 2 * t)
+    # give the two rows distinct segment ids in the flat stream
+    flat_segs = jnp.concatenate([segs[0], segs[1] + 2])[None]
+    flat_pos = jnp.concatenate([pos[0], pos[1]])[None]
+    h_dist = forward(
+        params, cfg, CALL,
+        flat_tokens.reshape(2, t),
+        flat_segs.reshape(2, t),
+        flat_pos.reshape(2, t),
+        split=(0, t),
+    )
+    h_ref = forward(params, cfg, CALL, flat_tokens, flat_segs, flat_pos)
+    assert float(jnp.abs(h_dist.reshape(1, 2 * t, -1) - h_ref).max()) < 1e-6
+
+
+def test_frontend_stub_prefix(tiny_dense, rng):
+    import dataclasses
+
+    cfg = dataclasses.replace(tiny_dense, modality="vlm", n_frontend_tokens=8)
+    params = init_model(jax.random.PRNGKey(0), cfg)
+    t = 32
+    tokens = jnp.asarray(rng.integers(0, cfg.vocab, (1, t)), jnp.int32)
+    segs = jnp.ones((1, t), jnp.int32)
+    pos = jnp.arange(t)[None].astype(jnp.int32)
+    pfx = jnp.asarray(rng.normal(size=(1, 8, cfg.d_model)), jnp.float32)
+    h1 = forward(params, cfg, CALL, tokens, segs, pos, prefix_embeds=pfx)
+    h2 = forward(params, cfg, CALL, tokens, segs, pos, prefix_embeds=pfx * 2)
+    # prefix embeddings actually enter the stream
+    assert float(jnp.abs(h1 - h2).max()) > 1e-4
+
+
+def test_remat_equivalence(tiny_dense, rng):
+    cfg = tiny_dense
+    params = init_model(jax.random.PRNGKey(3), cfg)
+    t = 48
+    tokens = jnp.asarray(rng.integers(0, cfg.vocab, (2, t)), jnp.int32)
+    segs = jnp.ones((2, t), jnp.int32)
+    pos = jnp.arange(t)[None].repeat(2, 0).astype(jnp.int32)
+    outs = {}
+    for remat in ("none", "selective", "full"):
+        call = CallConfig(attention_impl="dense", remat=remat, dtype=jnp.float32)
+        def loss(p):
+            h = forward(p, cfg, call, tokens, segs, pos)
+            return jnp.sum(h.astype(jnp.float32) ** 2)
+        outs[remat] = jax.grad(loss)(params)
+    for k in ("selective", "full"):
+        rel = max(
+            jax.tree.leaves(
+                jax.tree.map(
+                    lambda a, b: float(jnp.abs(a - b).max() / (jnp.abs(a).max() + 1e-9)),
+                    outs["none"], outs[k],
+                )
+            )
+        )
+        assert rel < 1e-5, (k, rel)

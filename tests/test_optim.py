@@ -1,0 +1,82 @@
+"""Optimizer substrate tests."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.optim import (
+    adamw_init,
+    adamw_update,
+    clip_by_global_norm,
+    compress_int8,
+    decompress_int8,
+    global_norm,
+    linear_warmup_cosine,
+)
+
+
+def test_adamw_converges_quadratic():
+    p = {"w": jnp.ones((4, 4)) * 2.0, "b": jnp.ones((4,))}
+    st_ = adamw_init(p)
+    loss = lambda p: jnp.sum(p["w"] ** 2) + jnp.sum(p["b"] ** 2)
+    for _ in range(300):
+        g = jax.grad(loss)(p)
+        p, st_ = adamw_update(p, g, st_, lr=jnp.float32(0.05), weight_decay=0.0)
+    assert float(loss(p)) < 1e-4
+
+
+def test_weight_decay_only_on_matrices():
+    p = {"w": jnp.ones((4, 4)), "b": jnp.ones((4,))}
+    st_ = adamw_init(p)
+    zero_g = jax.tree.map(jnp.zeros_like, p)
+    p2, _ = adamw_update(p, zero_g, st_, lr=jnp.float32(0.1), weight_decay=0.5)
+    assert float(jnp.abs(p2["w"] - p["w"]).max()) > 0  # decayed
+    assert float(jnp.abs(p2["b"] - p["b"]).max()) == 0  # bias untouched
+
+
+def test_clip_by_global_norm():
+    tree = {"a": jnp.full((10,), 3.0)}
+    clipped, norm = clip_by_global_norm(tree, 1.0)
+    assert abs(float(global_norm(clipped)) - 1.0) < 1e-5
+    assert float(norm) > 1.0
+
+
+def test_warmup_then_decay():
+    lrs = [float(linear_warmup_cosine(jnp.int32(s), 1e-3, 10, 100)) for s in range(1, 100)]
+    assert lrs[0] < lrs[8] <= lrs[9] * 1.2
+    assert lrs[-1] < lrs[20]
+
+
+@settings(max_examples=30, deadline=None)
+@given(seed=st.integers(0, 1000), n=st.integers(10, 2000))
+def test_int8_roundtrip_error_bound(seed, n):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(n,)), jnp.float32)
+    q, s = compress_int8(x)
+    y = decompress_int8(q, s, x.shape)
+    # per-block absmax quantisation: error <= scale/2 <= absmax/254 per block
+    err = float(jnp.abs(x - y).max())
+    assert err <= float(jnp.abs(x).max()) / 127.0 + 1e-7
+
+
+def test_error_feedback_reduces_bias():
+    """With error feedback, the running sum of dequantised grads tracks the
+    true sum far better than without."""
+    rng = np.random.default_rng(0)
+    xs = [jnp.asarray(rng.normal(size=(512,)) * 1e-3, jnp.float32) for _ in range(50)]
+    err = jnp.zeros((512,))
+    acc_fb = jnp.zeros((512,))
+    acc_raw = jnp.zeros((512,))
+    for x in xs:
+        q, s = compress_int8(x + err)
+        deq = decompress_int8(q, s, x.shape)
+        err = x + err - deq
+        acc_fb += deq
+        q2, s2 = compress_int8(x)
+        acc_raw += decompress_int8(q2, s2, x.shape)
+    true = sum(np.asarray(x) for x in xs)
+    e_fb = np.abs(np.asarray(acc_fb) - true).mean()
+    e_raw = np.abs(np.asarray(acc_raw) - true).mean()
+    assert e_fb <= e_raw

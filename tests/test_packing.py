@@ -1,0 +1,91 @@
+"""Bucket ladder + packing tests."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.dacp import schedule_dacp
+from repro.data.packing import (
+    bucket_ladder,
+    choose_bucket,
+    ladder_fits,
+    microbatch_needs,
+    pack_microbatch,
+    scheduler_bucket_size,
+)
+
+
+def _make_samples(lengths, vocab=100, seed=0):
+    rng = np.random.default_rng(seed)
+    out = []
+    for n in lengths:
+        toks = rng.integers(0, vocab, n).astype(np.int32)
+        mask = np.ones(n, np.int32)
+        out.append((toks, mask))
+    return out
+
+
+def test_ladder_coverage_guarantee():
+    """Any plan under C_sched maps onto a ladder entry (packing.py proof)."""
+    c = 8000
+    ladder = bucket_ladder(c, n_cp=4)
+    c_sched = scheduler_bucket_size(c)
+    for loc in range(0, c_sched + 1, 37):
+        dist = c_sched - loc
+        spec = choose_bucket(ladder, loc, dist)  # must not raise
+        assert spec.c_loc >= loc and spec.c_dist >= dist
+        assert spec.c_loc + spec.c_dist <= c
+
+
+def test_pack_roundtrip_tokens():
+    lengths = [50, 80, 120, 400]
+    plan = schedule_dacp(lengths, bucket_size=400, n_cp=2)
+    ladder = bucket_ladder(1000, 2)
+    loc, dist = microbatch_needs(plan)
+    spec = choose_bucket(ladder, loc, dist)
+    samples = _make_samples(lengths)
+    mb = pack_microbatch(samples, plan, spec)
+    # every token appears exactly once across both buffers
+    total_in = sum(lengths)
+    packed = int((mb.loc_segs > 0).sum() + (mb.dist_segs > 0).sum())
+    assert packed == total_in
+    # labels: each sequence contributes len-1 targets (full loss mask)
+    assert mb.valid_tokens == total_in - len(lengths)
+    # position ids restart per segment
+    for row in range(2):
+        segs = mb.loc_segs[row]
+        pos = mb.loc_pos[row]
+        for s in np.unique(segs[segs > 0]):
+            p = pos[segs == s]
+            assert (p == np.arange(len(p))).all()
+
+
+def test_labels_respect_loss_mask():
+    toks = np.arange(10, dtype=np.int32)
+    mask = np.zeros(10, np.int32)
+    mask[5:] = 1  # only the response span counts
+    plan = schedule_dacp([10], bucket_size=100, n_cp=1)
+    ladder = bucket_ladder(100, 1)
+    mb = pack_microbatch([(toks, mask)], plan, choose_bucket(ladder, 10, 0))
+    labels = mb.loc_labels[0][:10]
+    assert (labels[:4] == -1).all()  # targets 1..4 are prompt tokens
+    assert (labels[4:9] == toks[5:]).all()
+    assert labels[9] == -1  # last token has no target
+
+
+@settings(max_examples=50, deadline=None)
+@given(
+    lengths=st.lists(st.integers(4, 300), min_size=1, max_size=12),
+    n_cp=st.sampled_from([1, 2, 4]),
+)
+def test_pack_properties(lengths, n_cp):
+    c = 1200
+    if sum(lengths) / n_cp > scheduler_bucket_size(c):
+        return
+    plan = schedule_dacp(lengths, scheduler_bucket_size(c), n_cp)
+    ladder = bucket_ladder(c, n_cp)
+    loc, dist = microbatch_needs(plan)
+    spec = choose_bucket(ladder, loc, dist)
+    mb = pack_microbatch(_make_samples(lengths), plan, spec)
+    assert int((mb.loc_segs > 0).sum() + (mb.dist_segs > 0).sum()) == sum(lengths)
+    assert mb.n_local + mb.n_dist == len(lengths)

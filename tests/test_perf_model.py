@@ -1,0 +1,71 @@
+"""Eqs. 12-16 cost model tests."""
+
+import numpy as np
+
+from repro.core.perf_model import (
+    H100,
+    TPU_V5E,
+    ModelProfile,
+    derive_bucket_size,
+    estimate_bytes_per_token,
+    fit_comm_model,
+)
+
+PROF = ModelProfile(
+    hidden=896, kv_dim=128, n_layers=24, d_ff=4864, vocab=151936,
+    bytes_per_token=estimate_bytes_per_token(896, 24),
+)
+
+
+def test_eq13_verbatim():
+    s, h, hkv = 1000.0, 896, 128
+    expected = 20 * h * h * s + 4 * h * hkv * s + 4 * h * s * s
+    assert PROF.flops_paper(s) == expected
+
+
+def test_flops_quadratic_dominates_late():
+    """App. A.2: for qwen-0.5B the quadratic term dominates past ~4K, and
+    FLOPs(32K) ~ 30x FLOPs(4K) while memory grows only 8x."""
+    r = PROF.flops(32_768) / PROF.flops(4_096)
+    assert 20 < r < 45
+    assert PROF.activation_bytes(32_768) / PROF.activation_bytes(4_096) == 8.0
+
+
+def test_cp_divides_flops():
+    assert np.isclose(PROF.flops(8192, cp=8), PROF.flops(8192) / 8)
+
+
+def test_volume_matches_eq15():
+    assert PROF.volume(1000) == 2 * 1000 * 128 * 2  # K+V, bf16
+
+
+def test_swa_flops_clamped():
+    swa = ModelProfile(hidden=896, kv_dim=128, n_layers=24, d_ff=4864,
+                       vocab=151936, window=1024, bytes_per_token=1.0)
+    assert swa.flops(32_768) < PROF.flops(32_768) / 4
+
+
+def test_ssm_volume_sequence_free():
+    ssm = ModelProfile(hidden=2048, kv_dim=1, n_layers=48, d_ff=0,
+                       vocab=50280, family="ssm", ssm_state=128, bytes_per_token=1.0)
+    assert ssm.volume(100) == ssm.volume(100_000)
+
+
+def test_comm_fit_matches_table3():
+    alpha, fixed = fit_comm_model()
+    # 1 GB all-gather in the paper's Table 3 took ~6.47 ms
+    pred = alpha * (1024 * 2**20) + fixed
+    assert abs(pred - 6467.9e-6) / 6467.9e-6 < 0.1
+
+
+def test_efficiency_curve_monotone():
+    e = [H100.efficiency(s) for s in (64, 256, 1024, 8192)]
+    assert all(a < b for a, b in zip(e, e[1:]))
+
+
+def test_bucket_size_derivation():
+    c = derive_bucket_size(PROF, TPU_V5E, static_bytes_per_chip=4e9)
+    assert 0 < c
+    # more static memory -> smaller bucket
+    c2 = derive_bucket_size(PROF, TPU_V5E, static_bytes_per_chip=8e9)
+    assert c2 < c

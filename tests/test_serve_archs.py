@@ -1,0 +1,32 @@
+"""Per-architecture serving smoke: reduced config prefill + 2 decode steps
+for every registry arch (incl. audio/VLM backbones and SSM/hybrid caches)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.registry import REGISTRY
+from repro.models.transformer import CallConfig, init_model
+from repro.train.serve import decode_step, init_caches, prefill
+
+CALL = CallConfig(attention_impl="dense", remat="none", ssd_chunk=16, kv_chunk=32)
+
+
+@pytest.mark.parametrize("name", sorted(REGISTRY))
+def test_arch_serve_smoke(name):
+    cfg = REGISTRY[name].reduced()
+    params = init_model(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(0)
+    b, s = 2, 32
+    toks = jnp.asarray(rng.integers(0, cfg.vocab, (b, s)), jnp.int32)
+    logits, caches, lens = prefill(params, cfg, CALL, toks, max_len=s + 4)
+    assert logits.shape == (b, cfg.vocab)
+    assert bool(jnp.isfinite(logits).all())
+    tok = jnp.argmax(logits, -1).astype(jnp.int32)
+    for _ in range(2):
+        logits, caches = decode_step(params, cfg, CALL, tok, lens, caches)
+        lens = lens + 1
+        assert logits.shape == (b, cfg.vocab)
+        assert bool(jnp.isfinite(logits).all())
+        tok = jnp.argmax(logits, -1).astype(jnp.int32)

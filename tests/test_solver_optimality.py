@@ -1,0 +1,36 @@
+"""Heuristic vs exact Eq. 1 optimum on tiny instances (paper §4.3: the
+heuristic replaces SCIP-class solvers; we bound its optimality gap)."""
+
+import numpy as np
+import pytest
+
+from repro.core.cost import tdacp
+from repro.core.dacp import schedule_dacp
+from repro.core.optimize import cost_aware_refine
+from repro.core.perf_model import H100, ModelProfile, estimate_bytes_per_token
+from repro.core.solver import solve_dacp_exact
+
+PROF = ModelProfile(
+    hidden=896, kv_dim=128, n_layers=24, d_ff=4864, vocab=151936,
+    bytes_per_token=estimate_bytes_per_token(896, 24),
+)
+
+
+@pytest.mark.parametrize("seed", range(6))
+def test_heuristic_within_bound_of_optimum(seed):
+    rng = np.random.default_rng(seed)
+    k = int(rng.integers(3, 7))
+    lengths = rng.integers(50, 4000, size=k)
+    c, n = 5000, 2
+    best, best_cost = solve_dacp_exact(lengths, c, n, PROF, H100)
+    if best is None:
+        return  # infeasible instance
+    heur = schedule_dacp(lengths, c, n, PROF)
+    heur_cost = tdacp(heur, PROF, H100)
+    refined = cost_aware_refine(heur, PROF, H100)
+    refined_cost = tdacp(refined, PROF, H100)
+    # paper heuristic within 3.5x of optimum on tiny instances; the
+    # beyond-paper bidirectional refinement within 1.5x
+    assert heur_cost <= best_cost * 3.5 + 1e-9
+    assert refined_cost <= best_cost * 1.5 + 1e-9
+    assert refined_cost <= heur_cost + 1e-12  # refinement never hurts
