@@ -1,17 +1,30 @@
-"""Figure 1b: achieved attention FLOPS vs CP degree per sequence length.
+"""Figure 1b: achieved attention FLOPS vs CP degree per sequence length —
+plus the measured gathered-KV vs ring CP exchange step time (repro.dist).
 
 The paper measures FlashAttention-2 kernel FLOPS under CP in {1,2,4,8} for
 several sequence lengths; the signature result is that higher CP degrades
 achieved FLOPS, brutally so for short sequences. We reproduce the *relative*
 curve from the perf model's efficiency term (which is exactly what DACP's
 scheduling decisions consume), for both evaluation models.
+
+``bench_dist_exchange`` times the two physical CP exchanges of
+repro.dist.collectives on the same distributed stream — gathered-KV (flatten
+stripes, one attention over the full stream) vs the ring/stripe online-
+softmax loop — and writes the first ``BENCH_dist.json`` perf-trajectory
+entry. On this CPU container both compile to XLA host code (no collectives),
+so the numbers track the *compute* cost of each exchange; on a TPU the same
+entry points pick up ICI traffic.
 """
 
 from __future__ import annotations
 
+import json
+
+import jax
+import jax.numpy as jnp
 import numpy as np
 
-from .common import H100, PAPER, emit
+from .common import H100, PAPER, emit, timeit
 
 
 def run():
@@ -29,5 +42,60 @@ def run():
             emit(f"fig1b/{model}/seq{seq}", 0.0, derived)
 
 
+def bench_dist_exchange(out_path: str = "BENCH_dist.json"):
+    from repro.dist.collectives import ring_attention_rows
+    from repro.models.attention import segment_attention_chunked
+
+    rng = np.random.default_rng(0)
+    hq, hkv, d = 8, 2, 32
+    c = 512  # per-rank stripe
+    entries = []
+    for n_cp in (2, 4, 8):
+        s = n_cp * c
+        q = jnp.asarray(rng.standard_normal((n_cp, c, hq, d)), jnp.float32)
+        k = jnp.asarray(rng.standard_normal((n_cp, c, hkv, d)), jnp.float32)
+        v = jnp.asarray(rng.standard_normal((n_cp, c, hkv, d)), jnp.float32)
+        segs = jnp.ones((n_cp, c), jnp.int32)
+        pos = jnp.arange(s, dtype=jnp.int32).reshape(n_cp, c)
+
+        def gather_step(q, k, v, segs, pos):
+            # gathered-KV: every rank attends the flattened full stream
+            kf, vf = k.reshape(s, hkv, d), v.reshape(s, hkv, d)
+            sf, pf = segs.reshape(s), pos.reshape(s)
+            return jax.vmap(
+                lambda qq, ss, pp: segment_attention_chunked(
+                    qq, kf, vf, ss, sf, pp, pf, None, kv_chunk=c
+                )
+            )(q, segs, pos)
+
+        ring_j = jax.jit(lambda q, k, v, segs, pos: ring_attention_rows(q, k, v, segs, pos))
+        gather_j = jax.jit(gather_step)
+        t_ring = timeit(lambda: jax.block_until_ready(ring_j(q, k, v, segs, pos)), repeats=5)
+        t_gather = timeit(lambda: jax.block_until_ready(gather_j(q, k, v, segs, pos)), repeats=5)
+        emit(f"dist/cp{n_cp}/gathered_kv", t_gather, f"S={s}")
+        emit(f"dist/cp{n_cp}/ring", t_ring, f"S={s} ratio={t_ring / t_gather:.2f}")
+        entries.append(
+            {
+                "n_cp": n_cp,
+                "seq_total": s,
+                "stripe": c,
+                "gathered_kv_us": round(t_gather, 1),
+                "ring_us": round(t_ring, 1),
+                "ring_over_gather": round(t_ring / t_gather, 3),
+            }
+        )
+    payload = {
+        "bench": "dist_cp_exchange",
+        "backend": jax.default_backend(),
+        "shapes": {"hq": hq, "hkv": hkv, "head_dim": d},
+        "entries": entries,
+    }
+    with open(out_path, "w") as f:
+        json.dump(payload, f, indent=2)
+    emit("dist/bench_json", 0.0, out_path)
+    return payload
+
+
 if __name__ == "__main__":
     run()
+    bench_dist_exchange()

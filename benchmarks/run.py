@@ -33,6 +33,7 @@ def main() -> None:
 
     bench_distributions.run()
     bench_attn_cp.run()
+    bench_attn_cp.bench_dist_exchange()  # writes BENCH_dist.json
     bench_comm_table.run()
     bench_flops_curve.run()
     bench_e2e_speedup.run()

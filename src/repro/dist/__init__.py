@@ -1,0 +1,32 @@
+"""repro.dist — distributed execution: param sharding, CP collectives, and
+DACP plan execution on the ("data","model") / ("pod","data","model") mesh.
+
+Layer map (docs/DESIGN.md §7):
+  sharding.py    — ZeRO-3-style NamedSharding rules for params / opt state
+  collectives.py — CP primitives: gathered-KV all-gather and the ring/stripe
+                   exchange (shard_map + Pallas step kernel, XLA fallback)
+  executor.py    — places DACP micro-batches on the mesh, hierarchical
+                   gradient reduction (ICI first, DCN second)
+  plan.py        — lowers a GlobalSchedule into per-rank device placements
+"""
+
+from .collectives import all_gather_kv, ring_attention, ring_attention_rows
+from .executor import DistExecutor, hierarchical_psum, make_shard_fn, stack_row
+from .plan import ExecutionPlan, lower_schedule
+from .sharding import buffer_sharding, opt_shardings, partition_spec, shard_params
+
+__all__ = [
+    "all_gather_kv",
+    "ring_attention",
+    "ring_attention_rows",
+    "DistExecutor",
+    "hierarchical_psum",
+    "make_shard_fn",
+    "stack_row",
+    "ExecutionPlan",
+    "lower_schedule",
+    "buffer_sharding",
+    "opt_shardings",
+    "partition_spec",
+    "shard_params",
+]

@@ -1,0 +1,308 @@
+"""CP collectives for DACP-distributed sequences (docs/DESIGN.md §7).
+
+Two physically different exchanges compute the same math — every CP rank's
+queries attending the full concatenated distributed stream:
+
+  * gathered-KV — ``all_gather_kv``: one sequence-dim all-gather of K/V and
+    metadata, then plain segment attention against the full stream. One fused
+    collective (the paper's Eq. 15 volume), O(S) KV memory per rank. This is
+    what the GSPMD path expresses with a replication constraint
+    (executor.make_shard_fn, kind="gathered_kv").
+  * ring/stripe — ``ring_attention``: K/V stay sharded; rank j starts with
+    stripe j and stripes rotate around the CP ring (``jax.lax.ppermute``)
+    while an online-softmax carry accumulates. O(S/N) KV memory per rank,
+    N-1 hops — the memory-bound regime's exchange.
+
+``ring_attention`` is the per-rank shard_map body. ``ring_attention_rows``
+is the single-program equivalent over row-stacked stripes (R, C, ...): an
+XLA lax.scan over stripes whose per-stripe update is bit-identical math to
+the ring step — the CPU/interpret fallback and the dist-region path in
+models/transformer.py (``CallConfig.dist_attn="ring"``).
+
+The per-stripe update is ``_ring_step_xla`` (pure jnp, differentiable) or
+``ring_step_pallas`` — a Pallas TPU kernel performing one flash-attention
+block update of the (m, l, acc) carry; on CPU it runs in interpret mode and
+is forward-only (the training path uses the XLA step, which JAX
+differentiates through the scan).
+
+Masking matches models/attention.py: same segment, segment != 0 (padding),
+causal by restart positions, optional sliding window — online-softmax
+accumulation is order-invariant, so stripe rotation order does not matter.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# the ONE packed-bucket visibility rule and masking sentinel — shared with
+# every attention impl (attention.py has no dist import, so this does not
+# cycle)
+from ..models.attention import _NEG, _mask
+
+Carry = Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]  # m, l, acc
+
+
+def all_gather_kv(x: jnp.ndarray, axis_name: str, axis: int = 0) -> jnp.ndarray:
+    """Sequence-dim all-gather of a KV shard (shard_map contexts): (C, ...)
+    per rank -> (N*C, ...) replicated, stripes in rank order."""
+    return jax.lax.all_gather(x, axis_name, axis=axis, tiled=True)
+
+
+# ---------------------------------------------------------------------------
+# One stripe update of the online-softmax carry
+# ---------------------------------------------------------------------------
+
+
+def _init_carry(t: int, hkv: int, g: int, d: int) -> Carry:
+    return (
+        jnp.full((t, hkv, g), _NEG, jnp.float32),
+        jnp.zeros((t, hkv, g), jnp.float32),
+        jnp.zeros((t, hkv, g, d), jnp.float32),
+    )
+
+
+def _finalize(carry: Carry, out_shape, dtype) -> jnp.ndarray:
+    _, l, acc = carry
+    out = jnp.where(l[..., None] > 0, acc / jnp.maximum(l[..., None], 1e-30), 0.0)
+    return out.reshape(out_shape).astype(dtype)
+
+
+def _ring_step_xla(
+    carry: Carry,
+    qg: jnp.ndarray,  # (T, Hkv, G, D) f32
+    kc: jnp.ndarray,  # (C, Hkv, D)
+    vc: jnp.ndarray,
+    q_seg: jnp.ndarray,  # (T,)
+    kc_seg: jnp.ndarray,  # (C,)
+    q_pos: jnp.ndarray,
+    kc_pos: jnp.ndarray,
+    window: Optional[int],
+    scale: float,
+) -> Carry:
+    m_prev, l_prev, acc = carry
+    scores = jnp.einsum("thgd,shd->thgs", qg, kc.astype(jnp.float32)) * scale
+    mask = _mask(q_seg, kc_seg, q_pos, kc_pos, window)  # (T, C)
+    scores = jnp.where(mask[:, None, None], scores, _NEG)
+    m_new = jnp.maximum(m_prev, scores.max(axis=-1))
+    p = jnp.exp(scores - m_new[..., None]) * mask[:, None, None]
+    corr = jnp.exp(m_prev - m_new)
+    l_new = l_prev * corr + p.sum(axis=-1)
+    acc = acc * corr[..., None] + jnp.einsum(
+        "thgs,shd->thgd", p, vc.astype(jnp.float32)
+    )
+    return m_new, l_new, acc
+
+
+# ---------------------------------------------------------------------------
+# Pallas ring-attention step kernel: one (m, l, acc) update per stripe
+# ---------------------------------------------------------------------------
+
+
+def _step_kernel(
+    q_ref, k_ref, v_ref, qs_ref, ks_ref, qp_ref, kp_ref, m_ref, l_ref, acc_ref,
+    mo_ref, lo_ref, acco_ref,
+    *, scale: float, window: Optional[int],
+):
+    q = q_ref[0].astype(jnp.float32)  # (BQ, D)
+    k = k_ref[0].astype(jnp.float32)  # (C, D) — the whole stripe
+    v = v_ref[0].astype(jnp.float32)
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    ) * scale  # (BQ, C)
+    qs, ks = qs_ref[...], ks_ref[...]
+    qp, kp = qp_ref[...], kp_ref[...]
+    mask = (qs == ks.T) & (qs > 0) & (ks.T > 0) & (qp >= kp.T)
+    if window is not None:
+        mask &= (qp - kp.T) < window
+    s = jnp.where(mask, s, _NEG)
+
+    m_prev = m_ref[0].reshape(-1, 1)  # (BQ, 1)
+    l_prev = l_ref[0].reshape(-1, 1)
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+    p = jnp.exp(s - m_new) * mask
+    corr = jnp.exp(m_prev - m_new)
+    l_new = l_prev * corr + jnp.sum(p, axis=1, keepdims=True)
+    acc_new = acc_ref[0] * corr + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    mo_ref[0] = m_new[:, 0]
+    lo_ref[0] = l_new[:, 0]
+    acco_ref[0] = acc_new
+
+
+def ring_step_pallas(
+    q: jnp.ndarray,  # (Hq, T, D)
+    k: jnp.ndarray,  # (Hkv, C, D) — one stripe
+    v: jnp.ndarray,
+    q_seg: jnp.ndarray,  # (T,)
+    kv_seg: jnp.ndarray,  # (C,)
+    q_pos: jnp.ndarray,
+    kv_pos: jnp.ndarray,
+    m: jnp.ndarray,  # (Hq, T) f32 carry
+    l: jnp.ndarray,  # (Hq, T)
+    acc: jnp.ndarray,  # (Hq, T, D)
+    window: Optional[int] = None,
+    block_q: int = 128,
+    interpret: bool = True,
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """One ring step on the accelerator: flash-style block update of the
+    online-softmax carry against a single KV stripe (kernel layout as
+    kernels/flash_attention.py: heads leading, metadata 2D for lane tiling)."""
+    hq, t, d = q.shape
+    hkv, c, _ = k.shape
+    g = hq // hkv
+    block_q = min(block_q, t)
+    assert t % block_q == 0, "pad T to a block_q multiple"
+    n_qb = t // block_q
+    scale = 1.0 / math.sqrt(d)
+
+    qs2 = q_seg.reshape(t, 1).astype(jnp.int32)
+    ks2 = kv_seg.reshape(c, 1).astype(jnp.int32)
+    qp2 = q_pos.reshape(t, 1).astype(jnp.int32)
+    kp2 = kv_pos.reshape(c, 1).astype(jnp.int32)
+
+    kernel = functools.partial(_step_kernel, scale=scale, window=window)
+    return pl.pallas_call(
+        kernel,
+        grid=(hkv, g, n_qb),
+        in_specs=[
+            pl.BlockSpec((1, block_q, d), lambda h, gi, qb: (h * g + gi, qb, 0)),
+            pl.BlockSpec((1, c, d), lambda h, gi, qb: (h, 0, 0)),
+            pl.BlockSpec((1, c, d), lambda h, gi, qb: (h, 0, 0)),
+            pl.BlockSpec((block_q, 1), lambda h, gi, qb: (qb, 0)),
+            pl.BlockSpec((c, 1), lambda h, gi, qb: (0, 0)),
+            pl.BlockSpec((block_q, 1), lambda h, gi, qb: (qb, 0)),
+            pl.BlockSpec((c, 1), lambda h, gi, qb: (0, 0)),
+            pl.BlockSpec((1, block_q), lambda h, gi, qb: (h * g + gi, qb)),
+            pl.BlockSpec((1, block_q), lambda h, gi, qb: (h * g + gi, qb)),
+            pl.BlockSpec((1, block_q, d), lambda h, gi, qb: (h * g + gi, qb, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, block_q), lambda h, gi, qb: (h * g + gi, qb)),
+            pl.BlockSpec((1, block_q), lambda h, gi, qb: (h * g + gi, qb)),
+            pl.BlockSpec((1, block_q, d), lambda h, gi, qb: (h * g + gi, qb, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((hq, t), jnp.float32),
+            jax.ShapeDtypeStruct((hq, t), jnp.float32),
+            jax.ShapeDtypeStruct((hq, t, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v, qs2, ks2, qp2, kp2, m, l, acc)
+
+
+# ---------------------------------------------------------------------------
+# Ring attention: shard_map per-rank body
+# ---------------------------------------------------------------------------
+
+
+def ring_attention(
+    q: jnp.ndarray,  # (T, Hq, D) this rank's queries
+    k: jnp.ndarray,  # (C, Hkv, D) this rank's KV stripe
+    v: jnp.ndarray,
+    q_seg: jnp.ndarray,  # (T,)
+    kv_seg: jnp.ndarray,  # (C,) — metadata travels with the stripe
+    q_pos: jnp.ndarray,
+    kv_pos: jnp.ndarray,
+    *,
+    axis_name: str,
+    axis_size: Optional[int] = None,
+    window: Optional[int] = None,
+) -> jnp.ndarray:
+    """Per-rank ring exchange under shard_map over the CP ("model") axis.
+
+    Each of the N steps attends the currently-held stripe, then rotates the
+    stripe (and its segment/position metadata) one hop around the ring.
+    Returns this rank's (T, Hq, D) output — the same value gathered-KV
+    attention would produce for these queries.
+    """
+    n = axis_size if axis_size is not None else jax.lax.psum(1, axis_name)
+    n = int(n)
+    t, hq, d = q.shape
+    hkv = k.shape[1]
+    g = hq // hkv
+    scale = 1.0 / math.sqrt(d)
+    qg = q.reshape(t, hkv, g, d).astype(jnp.float32)
+
+    perm = [(j, (j + 1) % n) for j in range(n)]
+    carry = _init_carry(t, hkv, g, d)
+    kc, vc, ks, kp = k, v, kv_seg, kv_pos
+    for step in range(n):
+        carry = _ring_step_xla(carry, qg, kc, vc, q_seg, ks, q_pos, kp, window, scale)
+        if step < n - 1:
+            kc, vc, ks, kp = (
+                jax.lax.ppermute(x, axis_name, perm) for x in (kc, vc, ks, kp)
+            )
+    return _finalize(carry, q.shape, q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Row-stacked fallback: same math, one program (CPU / GSPMD dist-region site)
+# ---------------------------------------------------------------------------
+
+
+def ring_attention_rows(
+    q: jnp.ndarray,  # (R, C, Hq, D) — R CP ranks' query stripes
+    k: jnp.ndarray,  # (R, C, Hkv, D) — R KV stripes of ONE global stream
+    v: jnp.ndarray,
+    segs: jnp.ndarray,  # (R, C)
+    pos: jnp.ndarray,
+    window: Optional[int] = None,
+    use_pallas: bool = False,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """All rows' queries attend the full row-concatenated stream via a stripe
+    loop — the single-program twin of ``ring_attention`` (identical per-stripe
+    updates, no communication). Differentiable on the XLA path; the Pallas
+    path (``use_pallas=True``) drives the TPU step kernel, forward-only."""
+    r, c, hq, d = q.shape
+    hkv = k.shape[2]
+    g = hq // hkv
+    scale = 1.0 / math.sqrt(d)
+    t = r * c
+    q_seg = segs.reshape(t)
+    q_pos = pos.reshape(t)
+
+    if use_pallas:
+        qh = q.reshape(t, hq, d).transpose(1, 0, 2)  # (Hq, T, D)
+        m = jnp.full((hq, t), _NEG, jnp.float32)
+        l = jnp.zeros((hq, t), jnp.float32)
+        acc = jnp.zeros((hq, t, d), jnp.float32)
+        block_q = math.gcd(t, 128)  # largest MXU-friendly divisor of T
+        for stripe in range(r):
+            m, l, acc = ring_step_pallas(
+                qh,
+                k[stripe].transpose(1, 0, 2),
+                v[stripe].transpose(1, 0, 2),
+                q_seg, segs[stripe], q_pos, pos[stripe],
+                m, l, acc,
+                window=window,
+                block_q=block_q,
+                interpret=interpret,
+            )
+        out = jnp.where(l[..., None] > 0, acc / jnp.maximum(l[..., None], 1e-30), 0.0)
+        return out.transpose(1, 0, 2).reshape(r, c, hq, d).astype(q.dtype)
+
+    qg = q.reshape(t, hkv, g, d).astype(jnp.float32)
+
+    def body(carry, stripe):
+        kc, vc, ks, kp = stripe
+        carry = _ring_step_xla(carry, qg, kc, vc, q_seg, ks, q_pos, kp, window, scale)
+        return carry, None
+
+    carry, _ = jax.lax.scan(body, _init_carry(t, hkv, g, d), (k, v, segs, pos))
+    return _finalize(carry, (t, hq, d), q.dtype).reshape(r, c, hq, d)
+
+
+__all__ = [
+    "all_gather_kv",
+    "ring_attention",
+    "ring_attention_rows",
+    "ring_step_pallas",
+]

@@ -1,0 +1,208 @@
+"""Executes DACP micro-batches on the mesh (docs/DESIGN.md §7).
+
+Three responsibilities:
+
+  * placement — ``DistExecutor`` puts the train state onto the ZeRO-3 layout
+    (sharding.shard_params; AdamW m/v mirror the params, step replicates) and
+    packed micro-step buffers onto (DP, CP, local): local sequences land on
+    their CP rank's row, DISTRIBUTED shards on each rank's stripe — the
+    routing DACP decided is realised purely by buffer placement.
+  * activation sharding — ``make_shard_fn`` is the CallConfig hook the GSPMD
+    path uses: activations/logits stay (DP, CP, local), the DACP gathered-KV
+    is replicated over CP (that constraint IS the all-gather; the shard_map
+    twin is collectives.all_gather_kv / ring_attention).
+  * gradient reduction — ``hierarchical_psum`` reduces over the ICI axes
+    ("model","data") first and the DCN "pod" axis second, so cross-pod
+    traffic moves already-reduced tensors once. In the jit path the same
+    hierarchy falls out of pinning grads to the param layout
+    (with_sharding_constraint -> ICI reduce-scatter + DCN all-reduce);
+    ``make_grad_sync`` is the explicit shard_map form for per-rank
+    contributions.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from .sharding import buffer_sharding, mesh_axis_sizes, opt_shardings, shard_params
+
+
+def dp_axes(mesh):
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+def axis_size(mesh, names) -> int:
+    s = 1
+    d = mesh_axis_sizes(mesh)
+    for n in names if isinstance(names, tuple) else (names,):
+        s *= d.get(n, 1)
+    return s
+
+
+def _div(n: int, k: int) -> bool:
+    return n % k == 0
+
+
+def make_shard_fn(mesh):
+    """Activation sharding hook for CallConfig (perf iterations 1-2):
+    activations and logits stay (DP, CP, local) sharded; the DACP gathered-KV
+    is replicated over the CP axis (that IS the all-gather)."""
+    dp = dp_axes(mesh)
+    model = axis_size(mesh, "model")
+
+    def f(x, kind):
+        try:
+            if kind in ("activation", "logits") and x.ndim >= 3:
+                spec = [None] * x.ndim
+                if _div(x.shape[0], axis_size(mesh, dp)):
+                    spec[0] = dp
+                if _div(x.shape[1], model):
+                    spec[1] = "model"
+                return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, P(*spec)))
+            if kind == "gathered_kv":
+                return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, P()))
+            if kind == "kv_rows" and x.ndim == 4:
+                # (rows, S, Hkv, D): rows stay on DP, sequence gathered over CP
+                spec = [None] * 4
+                if _div(x.shape[0], axis_size(mesh, dp)):
+                    spec[0] = dp
+                return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, P(*spec)))
+            if kind == "ssm_rows" and x.ndim in (2, 3):
+                spec = [None] * x.ndim
+                if _div(x.shape[0], axis_size(mesh, dp)):
+                    spec[0] = dp
+                return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, P(*spec)))
+            if kind == "moe_groups" and x.ndim == 3:
+                # (G, group, d): shard groups over every mesh axis that divides
+                all_axes = dp + ("model",)
+                if _div(x.shape[0], axis_size(mesh, all_axes)):
+                    return jax.lax.with_sharding_constraint(
+                        x, NamedSharding(mesh, P(all_axes, None, None))
+                    )
+                if _div(x.shape[0], axis_size(mesh, dp)):
+                    return jax.lax.with_sharding_constraint(
+                        x, NamedSharding(mesh, P(dp, None, None))
+                    )
+        except Exception:
+            return x
+        return x
+
+    return f
+
+
+def stack_row(row: Sequence[Any]) -> Dict[str, np.ndarray]:
+    """Stack one micro-step's per-DP-rank PackedMicrobatch list into the
+    (ws, n_cp, c) buffer dict the packed train step consumes."""
+    arrays = [mb.as_arrays() for mb in row]
+    return {k: np.stack([a[k] for a in arrays]) for k in arrays[0]}
+
+
+# ---------------------------------------------------------------------------
+# Hierarchical gradient reduction
+# ---------------------------------------------------------------------------
+
+
+def hierarchical_psum(tree: Any, axis_names: Sequence[str]) -> Any:
+    """psum the ICI axes first, then the DCN "pod" axis (shard_map contexts).
+
+    Reducing intra-pod before crossing DCN sends each tensor over the slow
+    link exactly once, already reduced — the all-reduce hierarchy
+    launch/mesh.py's axis semantics promise.
+    """
+    ici = tuple(a for a in axis_names if a != "pod")
+
+    def red(x):
+        if ici:
+            x = jax.lax.psum(x, ici)
+        if "pod" in axis_names:
+            x = jax.lax.psum(x, "pod")
+        return x
+
+    return jax.tree.map(red, tree)
+
+
+def make_grad_sync(mesh):
+    """Explicit all-reduce of per-rank gradient contributions.
+
+    Contract: each leaf is stacked over a leading flattened-mesh dim of size
+    ``mesh.devices.size`` (rank-major). Returns the tree without that dim,
+    every leaf the full sum — ICI first, DCN second.
+    """
+    from jax.experimental.shard_map import shard_map
+
+    axes = tuple(mesh.axis_names)
+    flat = axes if len(axes) > 1 else axes[0]
+
+    def body(tree):
+        tree = jax.tree.map(lambda x: x[0], tree)  # this rank's contribution
+        return hierarchical_psum(tree, axes)
+
+    fn = shard_map(body, mesh=mesh, in_specs=P(flat), out_specs=P())
+    return jax.jit(fn)
+
+
+# ---------------------------------------------------------------------------
+# DACP plan execution
+# ---------------------------------------------------------------------------
+
+
+class DistExecutor:
+    """Placement engine for the Skrull packed path on one mesh.
+
+    The compiled micro-step itself stays a plain jit (train/step.py): once
+    params sit on the ZeRO-3 layout and buffers on (DP, CP, local), GSPMD
+    partitions the computation; DACP's routing is realised by where the
+    loader packed each sequence (local row vs distributed stripes).
+    """
+
+    def __init__(self, mesh):
+        self.mesh = mesh
+        self._buffer_sh = buffer_sharding(mesh)
+        self._replicated = NamedSharding(mesh, P())
+
+    # -- state ---------------------------------------------------------------
+    def place_state(self, state: Any) -> Any:
+        """TrainState -> same tree on the mesh: params + AdamW m/v on the
+        ZeRO-3 layout, step counter replicated."""
+        p_sh = shard_params(state.params, self.mesh)
+        m_sh, v_sh, step_sh = opt_shardings(p_sh, self.mesh)
+        put = lambda t, sh: jax.tree.map(jax.device_put, t, sh)
+        opt = state.opt._replace(
+            step=jax.device_put(state.opt.step, step_sh),
+            m=put(state.opt.m, m_sh),
+            v=put(state.opt.v, v_sh),
+        )
+        return state._replace(params=put(state.params, p_sh), opt=opt)
+
+    # -- buffers -------------------------------------------------------------
+    def put_buffers(self, buffers: Dict[str, Any]) -> Dict[str, jnp.ndarray]:
+        """(ws, n_cp, c) host buffers -> device, DP/CP dims on the mesh.
+
+        Falls back to replication when the stacked dims don't divide the mesh
+        (e.g. a debug loader with ws smaller than the DP extent)."""
+        out = {}
+        for k, v in buffers.items():
+            arr = jnp.asarray(v)
+            ok = (
+                arr.ndim == 3
+                and _div(arr.shape[0], axis_size(self.mesh, dp_axes(self.mesh)))
+                and _div(arr.shape[1], axis_size(self.mesh, "model"))
+            )
+            out[k] = jax.device_put(arr, self._buffer_sh if ok else self._replicated)
+        return out
+
+
+__all__ = [
+    "dp_axes",
+    "axis_size",
+    "make_shard_fn",
+    "stack_row",
+    "hierarchical_psum",
+    "make_grad_sync",
+    "DistExecutor",
+]

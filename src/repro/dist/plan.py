@@ -1,0 +1,141 @@
+"""Lower a GlobalSchedule into per-rank device placements (docs/DESIGN.md §7).
+
+GDS/DACP decide *which* sequences run where in logical (dp_rank, cp_rank)
+coordinates; this module binds those coordinates to physical mesh devices and
+pre-computes the per-device token loads the runtime layers consume:
+
+  * train/loop.py — buffer sharding for each stacked micro-step and the
+    iteration imbalance metric fed to telemetry,
+  * ft/health.py — device identity for straggler attribution,
+  * launch — human-readable placement dumps.
+
+The loader may re-order micro-batches within a rank (dist-heavy-first step
+alignment), so per-STEP claims here describe the schedule's own order; the
+per-RANK totals are invariant under that re-ordering and are what the
+imbalance metric uses.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, List
+
+import numpy as np
+
+from ..core.dacp import DISTRIBUTED
+from ..core.gds import GlobalSchedule
+from .sharding import buffer_sharding as _buffer_sharding, mesh_axis_sizes
+
+
+@dataclasses.dataclass(frozen=True)
+class DevicePlacement:
+    """One (dp_rank, cp_rank) logical coordinate bound to a mesh device."""
+
+    pod: int
+    dp_rank: int  # global DP rank in [0, ws)
+    cp_rank: int  # position on the "model" axis in [0, n_cp)
+    device: Any
+
+
+@dataclasses.dataclass
+class MicroStep:
+    """Token loads of one scheduled micro-batch row (schedule order)."""
+
+    index: int
+    active_ranks: List[int]
+    local_tokens: np.ndarray  # (ws, n_cp) wholly-local tokens per CP rank
+    dist_tokens: np.ndarray  # (ws,) per-CP-rank shard of the distributed pack
+
+
+@dataclasses.dataclass
+class ExecutionPlan:
+    mesh: Any
+    ws: int
+    n_cp: int
+    steps: List[MicroStep]
+    rank_tokens: np.ndarray  # (ws, n_cp) iteration totals (order-invariant)
+    # built lazily: train_step lowers a plan every iteration but only reads
+    # rank_tokens/imbalance; the placement objects are for FT/launch consumers
+    _placements: List[DevicePlacement] = dataclasses.field(
+        default_factory=list, repr=False
+    )
+
+    @property
+    def n_microsteps(self) -> int:
+        return len(self.steps)
+
+    def buffer_sharding(self):
+        return _buffer_sharding(self.mesh)
+
+    @property
+    def _grid(self) -> np.ndarray:
+        return self.mesh.devices.reshape(self.ws, self.n_cp)
+
+    def device_for(self, dp_rank: int, cp_rank: int):
+        return self._grid[dp_rank, cp_rank]
+
+    @property
+    def placements(self) -> List[DevicePlacement]:
+        if not self._placements:
+            dp = self.ws // max(mesh_axis_sizes(self.mesh).get("pod", 1), 1)
+            grid = self._grid
+            self._placements = [
+                DevicePlacement(pod=r // dp, dp_rank=r, cp_rank=c, device=grid[r, c])
+                for r in range(self.ws)
+                for c in range(self.n_cp)
+            ]
+        return self._placements
+
+    def imbalance(self) -> float:
+        """max/mean per-device token load — the Eq. 8 padding-cost proxy."""
+        loads = self.rank_tokens.reshape(-1).astype(np.float64)
+        mean = loads.mean()
+        return float(loads.max() / mean) if mean > 0 else 1.0
+
+
+def lower_schedule(sched: GlobalSchedule, mesh) -> ExecutionPlan:
+    """Bind a GlobalSchedule to the mesh. The DP world must equal the
+    ("pod" x) "data" extent and the CP degree the "model" extent — GDS
+    bin-packs over exactly the mesh's DP ranks (launch/mesh.py semantics)."""
+    sizes = mesh_axis_sizes(mesh)
+    pods = sizes.get("pod", 1)
+    dp = sizes.get("data", 1)
+    cp = sizes.get("model", 1)
+    if sched.ws != pods * dp:
+        raise ValueError(
+            f"schedule ws={sched.ws} != mesh DP extent {pods}x{dp}"
+        )
+    if sched.n_cp != cp:
+        raise ValueError(f"schedule n_cp={sched.n_cp} != mesh model extent {cp}")
+
+    n_steps = max((len(r.microbatches) for r in sched.ranks), default=0)
+    steps: List[MicroStep] = []
+    rank_tokens = np.zeros((sched.ws, cp), dtype=np.int64)
+    for m in range(n_steps):
+        loc = np.zeros((sched.ws, cp), dtype=np.int64)
+        dist = np.zeros(sched.ws, dtype=np.int64)
+        active = []
+        for r in sched.ranks:
+            if m >= len(r.microbatches):
+                continue  # this rank idles (empty-padded buffer)
+            active.append(r.dp_rank)
+            d = r.dacp[m]
+            for j in range(cp):
+                loc[r.dp_rank, j] = int(d.lengths[d.assignment == j].sum())
+            dist_total = int(d.lengths[d.assignment == DISTRIBUTED].sum())
+            dist[r.dp_rank] = -(-dist_total // cp) if dist_total else 0
+        steps.append(
+            MicroStep(index=m, active_ranks=active, local_tokens=loc, dist_tokens=dist)
+        )
+        rank_tokens += loc + dist[:, None]
+
+    return ExecutionPlan(
+        mesh=mesh,
+        ws=sched.ws,
+        n_cp=cp,
+        steps=steps,
+        rank_tokens=rank_tokens,
+    )
+
+
+__all__ = ["DevicePlacement", "MicroStep", "ExecutionPlan", "lower_schedule"]

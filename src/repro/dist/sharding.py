@@ -1,0 +1,98 @@
+"""ZeRO-3-style parameter sharding over the training mesh (docs/DESIGN.md §7).
+
+Every weight leaf is sharded along exactly ONE dimension; the axis choice is
+divisibility-aware and degrades gracefully:
+
+  1. flattened ``("data", "model")`` — the ZeRO-3 layout: the largest dim
+     divisible by dp*cp is sharded over BOTH intra-pod axes (dim ties break
+     toward the trailing dim, which keeps matmul contraction dims sharded),
+  2. the single larger axis, then the smaller one, for leaves only one axis
+     divides,
+  3. full replication for scalars and non-divisible leaves.
+
+The ``"pod"`` axis never appears in a weight spec: weights are replicated
+across pods (DCN is reserved for the second stage of the gradient hierarchy —
+see executor.hierarchical_psum). Optimizer state (AdamW m/v) mirrors the
+param layout; the step counter is replicated.
+
+``partition_spec`` is a pure function of (shape, axis sizes) so the rule set
+is unit-testable without any devices; ``shard_params`` binds the specs to a
+mesh as ``NamedSharding`` leaves suitable for ``jax.device_put`` /
+``jax.ShapeDtypeStruct(..., sharding=...)`` (both real arrays and abstract
+eval_shape trees work — only ``.shape`` is consulted).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Mapping, Sequence, Tuple
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+
+def mesh_axis_sizes(mesh) -> Mapping[str, int]:
+    return dict(zip(mesh.axis_names, mesh.devices.shape))
+
+
+def partition_spec(shape: Sequence[int], axis_sizes: Mapping[str, int]) -> P:
+    """Divisibility-aware single-dim spec for one weight leaf.
+
+    ``axis_sizes`` maps mesh axis name -> size (e.g. {"data": 16, "model": 16});
+    the "pod" entry, if present, is ignored (weights replicate across pods).
+    """
+    shape = tuple(int(s) for s in shape)
+    dp = int(axis_sizes.get("data", 1))
+    cp = int(axis_sizes.get("model", 1))
+    if len(shape) == 0 or max(shape) <= 1:
+        return P()  # scalars and unit leaves replicate
+
+    # candidate shard groups, most-devices first (ZeRO-3 flattened, then the
+    # larger single axis, then the smaller)
+    candidates: list[Tuple[Tuple[str, ...], int]] = []
+    if dp > 1 and cp > 1:
+        candidates.append((("data", "model"), dp * cp))
+    for name, size in sorted(
+        (("data", dp), ("model", cp)), key=lambda t: -t[1]
+    ):
+        if size > 1:
+            candidates.append(((name,), size))
+
+    for axes, size in candidates:
+        dims = [i for i, s in enumerate(shape) if s > 0 and s % size == 0 and s >= size]
+        if not dims:
+            continue  # non-divisible under this group: try a smaller group
+        d = max(dims, key=lambda i: (shape[i], i))  # largest dim, ties -> last
+        spec: list[Any] = [None] * len(shape)
+        spec[d] = axes if len(axes) > 1 else axes[0]
+        return P(*spec)
+    return P()  # replicate-scalar fallback
+
+
+def shard_params(params: Any, mesh) -> Any:
+    """Tree of NamedSharding matching ``params`` (arrays or ShapeDtypeStructs)."""
+    sizes = mesh_axis_sizes(mesh)
+    return jax.tree.map(
+        lambda leaf: NamedSharding(mesh, partition_spec(leaf.shape, sizes)), params
+    )
+
+
+def opt_shardings(param_shardings: Any, mesh) -> Tuple[Any, Any, NamedSharding]:
+    """AdamW layout contract: (m, v, step) — m/v mirror params, step replicates.
+    The single source of that rule (executor.place_state routes through it)."""
+    return param_shardings, param_shardings, NamedSharding(mesh, P())
+
+
+def buffer_sharding(mesh) -> NamedSharding:
+    """Packed Skrull buffers (ws, n_cp, c): DP rank dim over ("pod","data"),
+    CP rank dim over "model", token dim local."""
+    dp_axes = ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+    return NamedSharding(mesh, P(dp_axes, "model", None))
+
+
+__all__ = [
+    "mesh_axis_sizes",
+    "partition_spec",
+    "shard_params",
+    "opt_shardings",
+    "buffer_sharding",
+]

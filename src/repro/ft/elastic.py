@@ -20,10 +20,8 @@ from __future__ import annotations
 
 from typing import Any, Optional, Tuple
 
-import jax
-
 from ..checkpoint.manager import CheckpointManager
-from ..dist.sharding import shard_params
+from ..dist.executor import DistExecutor
 from ..launch.mesh import make_mesh
 
 
@@ -37,19 +35,10 @@ def rescale(
 ) -> Tuple[Any, Any, dict]:
     """Returns (mesh, restored_state_on_new_mesh, meta)."""
     mesh = make_mesh(new_dp, new_cp, pods)
-    shardings = jax.tree.map(
-        lambda _: None, template_state
-    )  # placeholder; params get real shardings below
     state, meta = ckpt.restore(template_state, step=step)
-    # place params + opt mirrors onto the new mesh's ZeRO-3 layout
-    param_sh = shard_params(state.params, mesh)
-    placed_params = jax.tree.map(jax.device_put, state.params, param_sh)
-    placed_opt_m = jax.tree.map(jax.device_put, state.opt.m, param_sh)
-    placed_opt_v = jax.tree.map(jax.device_put, state.opt.v, param_sh)
-    new_state = state._replace(
-        params=placed_params,
-        opt=state.opt._replace(m=placed_opt_m, v=placed_opt_v),
-    )
+    # re-shard: params + AdamW mirrors onto the new mesh's ZeRO-3 layout,
+    # step counter replicated (dist.executor owns the placement rules)
+    new_state = DistExecutor(mesh).place_state(state)
     return mesh, new_state, meta
 
 

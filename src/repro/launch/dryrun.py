@@ -34,6 +34,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from ..configs.base import SHAPES, ArchConfig, ShapeSpec, supports_long_context
 from ..configs.registry import REGISTRY
+from ..dist.executor import axis_size as _axis_size, dp_axes as _dp_axes, make_shard_fn
 from ..dist.sharding import shard_params
 from ..launch.hlo_stats import analyze_hlo
 from ..launch.mesh import make_production_mesh
@@ -46,20 +47,8 @@ from ..train.step import make_dense_train_step
 V5E_HBM = 16e9
 
 
-def _dp_axes(mesh):
-    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
-
-
 def _div(n, k):
     return n % k == 0
-
-
-def _axis_size(mesh, names):
-    s = 1
-    d = dict(zip(mesh.axis_names, mesh.devices.shape))
-    for n in names if isinstance(names, tuple) else (names,):
-        s *= d.get(n, 1)
-    return s
 
 
 def _sds(shape, dtype, mesh, spec):
@@ -69,53 +58,6 @@ def _sds(shape, dtype, mesh, spec):
 def _batch_spec(mesh, b):
     dp = _dp_axes(mesh)
     return dp if _div(b, _axis_size(mesh, dp)) else None
-
-
-def make_shard_fn(mesh):
-    """Activation sharding hook for CallConfig (perf iterations 1-2):
-    activations and logits stay (DP, CP, local) sharded; the DACP gathered-KV
-    is replicated over the CP axis (that IS the all-gather)."""
-    dp = _dp_axes(mesh)
-    model = _axis_size(mesh, "model")
-
-    def f(x, kind):
-        try:
-            if kind in ("activation", "logits") and x.ndim >= 3:
-                spec = [None] * x.ndim
-                if _div(x.shape[0], _axis_size(mesh, dp)):
-                    spec[0] = dp
-                if _div(x.shape[1], model):
-                    spec[1] = "model"
-                return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, P(*spec)))
-            if kind == "gathered_kv":
-                return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, P()))
-            if kind == "kv_rows" and x.ndim == 4:
-                # (rows, S, Hkv, D): rows stay on DP, sequence gathered over CP
-                spec = [None] * 4
-                if _div(x.shape[0], _axis_size(mesh, dp)):
-                    spec[0] = dp
-                return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, P(*spec)))
-            if kind == "ssm_rows" and x.ndim in (2, 3):
-                spec = [None] * x.ndim
-                if _div(x.shape[0], _axis_size(mesh, dp)):
-                    spec[0] = dp
-                return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, P(*spec)))
-            if kind == "moe_groups" and x.ndim == 3:
-                # (G, group, d): shard groups over every mesh axis that divides
-                all_axes = dp + ("model",)
-                if _div(x.shape[0], _axis_size(mesh, all_axes)):
-                    return jax.lax.with_sharding_constraint(
-                        x, NamedSharding(mesh, P(all_axes, None, None))
-                    )
-                if _div(x.shape[0], _axis_size(mesh, dp)):
-                    return jax.lax.with_sharding_constraint(
-                        x, NamedSharding(mesh, P(dp, None, None))
-                    )
-        except Exception:
-            return x
-        return x
-
-    return f
 
 
 def call_config(cfg: ArchConfig, shape: ShapeSpec, mesh=None) -> CallConfig:

@@ -3,7 +3,7 @@
 A FUNCTION (not a module-level constant) so importing this module never
 touches jax device state — the dry-run sets XLA_FLAGS before any jax init.
 
-Axis semantics (DESIGN.md §6):
+Axis semantics (docs/DESIGN.md §6):
   pod   — cross-pod data parallelism (DCN); gradient all-reduce hierarchy
   data  — intra-pod data parallelism (GDS bin-packs over pod*data DP ranks)
   model — the CP axis of the paper's DP x CP grid; also the second weight-

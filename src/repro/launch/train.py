@@ -44,14 +44,22 @@ def main():
     from ..configs.registry import get_arch
     from ..core.perf_model import TPU_V5E
     from ..data import DATASETS, SkrullDataLoader, SyntheticSFTDataset
+    from ..launch.mesh import make_mesh
     from ..models.transformer import CallConfig
     from ..train.loop import Trainer, TrainerConfig
 
     cfg = get_arch(args.arch)
     if args.reduced:
         cfg = cfg.reduced()
+    n_dev = len(jax.devices())
+    # the requested dp x cp (x pods) grid must tile the device fleet exactly;
+    # otherwise fall back to single-program execution (CPU smoke runs)
+    mesh = None
+    if n_dev > 1 and args.dp * args.cp * args.pods == n_dev:
+        mesh = make_mesh(args.dp, args.cp, args.pods)
     print(f"arch={cfg.name} params={cfg.param_count()/1e9:.2f}B "
-          f"devices={len(jax.devices())} dp={args.dp} cp={args.cp} pods={args.pods}")
+          f"devices={n_dev} dp={args.dp} cp={args.cp} pods={args.pods} "
+          f"mesh={'spmd' if mesh is not None else 'single-program'}")
 
     dataset = SyntheticSFTDataset(
         DATASETS[args.dataset](), vocab_size=cfg.vocab, seed=0, size=1_000_000,
@@ -62,14 +70,24 @@ def main():
         c_budget=args.bucket, profile=cfg.to_profile(), hw=TPU_V5E,
         cost_aware=args.cost_aware,
     )
+    from ..dist.executor import make_shard_fn
+
+    call = CallConfig(
+        attention_impl="chunked", remat="selective",
+        # under a mesh the activation/gathered-KV constraints are load-bearing:
+        # without them XLA all-reduces the online-softmax carry per kv chunk
+        # (transformer.py split=None note — 384x collective bytes)
+        shard_fn=make_shard_fn(mesh) if mesh is not None else (lambda x, k: x),
+    )
     trainer = Trainer(
         cfg,
-        CallConfig(attention_impl="chunked", remat="selective"),
+        call,
         loader,
         TrainerConfig(
             total_steps=args.steps, lr=args.lr,
             ckpt_dir=args.ckpt_dir, ckpt_every=max(args.steps // 10, 1),
         ),
+        mesh=mesh,
     )
     trainer.maybe_resume()
     trainer.run()

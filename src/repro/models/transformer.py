@@ -62,6 +62,10 @@ class CallConfig:
     capacity_factor: float = 1.25
     moe_group: int = 4096  # token group size for MoE routing
     dtype: Any = jnp.bfloat16  # activation/compute dtype (f32 for exactness tests)
+    # DACP dist-region exchange: "gather" = KV all-gather (Eq. 15 volume, via
+    # shard_fn); "ring" = repro.dist.collectives stripe exchange (O(S/N) KV
+    # memory per rank — the memory-bound regime)
+    dist_attn: str = "gather"
     # sharding hook: fn(x, kind) -> x; kind in {"activation", "gathered_kv"}
     shard_fn: Callable[[jnp.ndarray, str], jnp.ndarray] = lambda x, kind: x
 
@@ -202,20 +206,34 @@ def _attention_layer(
             )
             out_parts.append(out_loc)
         if c_dist:
-            # CP all-gather: K/V (+metadata) of the dist region, all rows
-            k_full = call.shard_fn(
-                k[:, c_loc:].reshape(r * c_dist, hkv, dh), "gathered_kv"
-            )
-            v_full = call.shard_fn(
-                v[:, c_loc:].reshape(r * c_dist, hkv, dh), "gathered_kv"
-            )
-            seg_full = segs[:, c_loc:].reshape(r * c_dist)
-            pos_full = pos[:, c_loc:].reshape(r * c_dist)
-            out_dist = jax.vmap(
-                lambda qq, ss, pp: attn(
-                    qq, k_full, v_full, ss, seg_full, pp, pos_full, cfg.window
+            if call.dist_attn == "ring":
+                # ring/stripe exchange: K/V stay row(=CP-rank)-sharded and the
+                # stripe loop carries the online softmax — the single-program
+                # twin of the shard_map ring (repro.dist.collectives); O(S/N)
+                # KV memory per rank instead of the gathered O(S)
+                from ..dist.collectives import ring_attention_rows
+
+                out_dist = ring_attention_rows(
+                    q[:, c_loc:], k[:, c_loc:], v[:, c_loc:],
+                    segs[:, c_loc:], pos[:, c_loc:], window=cfg.window,
                 )
-            )(q[:, c_loc:], segs[:, c_loc:], pos[:, c_loc:])
+            else:
+                # CP all-gather: K/V (+metadata) of the dist region, all rows
+                # (under the mesh the "gathered_kv" replication constraint IS
+                # the all-gather; the shard_map twin is dist.all_gather_kv)
+                k_full = call.shard_fn(
+                    k[:, c_loc:].reshape(r * c_dist, hkv, dh), "gathered_kv"
+                )
+                v_full = call.shard_fn(
+                    v[:, c_loc:].reshape(r * c_dist, hkv, dh), "gathered_kv"
+                )
+                seg_full = segs[:, c_loc:].reshape(r * c_dist)
+                pos_full = pos[:, c_loc:].reshape(r * c_dist)
+                out_dist = jax.vmap(
+                    lambda qq, ss, pp: attn(
+                        qq, k_full, v_full, ss, seg_full, pp, pos_full, cfg.window
+                    )
+                )(q[:, c_loc:], segs[:, c_loc:], pos[:, c_loc:])
             out_parts.append(out_dist)
         out = jnp.concatenate(out_parts, axis=1) if len(out_parts) > 1 else out_parts[0]
 

@@ -18,11 +18,12 @@ from typing import Any, Callable, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from ..checkpoint.manager import CheckpointManager
 from ..configs.base import ArchConfig
 from ..data.loader import SkrullDataLoader, LoaderState
+from ..dist.executor import DistExecutor, stack_row
+from ..dist.plan import lower_schedule
 from ..ft.health import HealthMonitor
 from ..models.transformer import CallConfig, init_model
 from ..optim.grad import tree_add, tree_zeros_like
@@ -60,9 +61,14 @@ class Trainer:
         self.loader = loader
         self.tcfg = tcfg
         self.mesh = mesh
+        # mesh given -> SPMD execution: state on the ZeRO-3 layout, packed
+        # buffers placed (DP, CP, local) per the lowered schedule plan
+        self.dist = DistExecutor(mesh) if mesh is not None else None
         if state is None:
             params = init_model(jax.random.PRNGKey(seed), cfg)
             state = init_train_state(params)
+        if self.dist is not None:
+            state = self.dist.place_state(state)
         self.state = state
         self.step = 0
         lr_fn = partial(
@@ -100,6 +106,9 @@ class Trainer:
             return False
         tree, meta = self.ckpt.restore(self._ckpt_tree())
         self.state = tree["state"]
+        if self.dist is not None:
+            # restore() yields host-layout leaves: re-place on the ZeRO-3 layout
+            self.state = self.dist.place_state(self.state)
         self.loader.restore(
             LoaderState.from_dict({k: int(v) for k, v in tree["loader"].items()})
         )
@@ -110,16 +119,15 @@ class Trainer:
     def train_step(self) -> Dict[str, float]:
         t0 = time.perf_counter()
         it = self.loader.next_iteration()
+        plan = lower_schedule(it.schedule, self.mesh) if self.dist else None
         denom = jnp.float32(it.denominator)
         acc = tree_zeros_like(self.state.params)
         loss_sum = 0.0
         valid = 0
         for row in it.microbatches:
-            # stack DP ranks: (ws, n_cp, c)
-            buffers = {
-                k: jnp.asarray(np.stack([mb.as_arrays()[k] for mb in row]))
-                for k in row[0].as_arrays()
-            }
+            buffers = stack_row(row)  # stack DP ranks: (ws, n_cp, c)
+            if self.dist is not None:
+                buffers = self.dist.put_buffers(buffers)
             grads, m = self._micro_grad(self.state.params, buffers, denom)
             acc = self._accum(acc, grads)
             loss_sum += float(m["loss_sum"])
@@ -132,7 +140,7 @@ class Trainer:
                 self.health.beat(r, step_time_s=dt)
             self.loader.set_speed_factors(self.health.speed_factors())
         self.step += 1
-        return {
+        out = {
             "step": self.step,
             "loss": loss_sum / max(valid, 1),
             "valid_tokens": valid,
@@ -141,6 +149,9 @@ class Trainer:
             "time_s": dt,
             "grad_norm": float(am["grad_norm"]),
         }
+        if plan is not None:
+            out["imbalance"] = plan.imbalance()
+        return out
 
     def run(self, steps: Optional[int] = None) -> List[Dict[str, float]]:
         self.maybe_resume()

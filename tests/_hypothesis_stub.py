@@ -1,0 +1,111 @@
+"""Minimal stand-in for the ``hypothesis`` API surface these tests use.
+
+The container has no ``hypothesis`` wheel and installs are off-limits, so
+conftest.py registers this module as ``sys.modules["hypothesis"]`` ONLY when
+the real package is missing — with hypothesis installed this file is inert.
+
+Semantics: ``@given(**strategies)`` runs the test ``max_examples`` times with
+pseudo-random draws from a PRNG seeded by the test name, so failures are
+reproducible run-to-run. No shrinking; the failing example is attached to the
+raised error instead.
+"""
+
+from __future__ import annotations
+
+import functools
+import inspect
+from typing import Any, Callable, Dict, Sequence
+
+import numpy as np
+
+DEFAULT_MAX_EXAMPLES = 50
+
+
+class _Assumption(Exception):
+    """Raised by assume(False): the example is discarded, not failed."""
+
+
+class _Strategy:
+    def __init__(self, draw: Callable[[np.random.Generator], Any]):
+        self._draw = draw
+
+    def draw(self, rng: np.random.Generator) -> Any:
+        return self._draw(rng)
+
+
+class strategies:
+    @staticmethod
+    def integers(min_value: int, max_value: int) -> _Strategy:
+        return _Strategy(lambda rng: int(rng.integers(min_value, max_value + 1)))
+
+    @staticmethod
+    def sampled_from(elements: Sequence[Any]) -> _Strategy:
+        elements = list(elements)
+        return _Strategy(lambda rng: elements[int(rng.integers(len(elements)))])
+
+    @staticmethod
+    def lists(elements: _Strategy, min_size: int = 0, max_size: int = 10) -> _Strategy:
+        def draw(rng: np.random.Generator):
+            n = int(rng.integers(min_size, max_size + 1))
+            return [elements.draw(rng) for _ in range(n)]
+
+        return _Strategy(draw)
+
+    @staticmethod
+    def booleans() -> _Strategy:
+        return _Strategy(lambda rng: bool(rng.integers(2)))
+
+    @staticmethod
+    def floats(min_value: float, max_value: float) -> _Strategy:
+        return _Strategy(
+            lambda rng: float(rng.uniform(min_value, max_value))
+        )
+
+
+def given(**strats: _Strategy):
+    def decorate(fn: Callable) -> Callable:
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            n = getattr(wrapper, "_max_examples", DEFAULT_MAX_EXAMPLES)
+            seed = np.frombuffer(
+                fn.__qualname__.encode(), dtype=np.uint8
+            ).sum() or 1
+            rng = np.random.default_rng(int(seed))
+            for i in range(n):
+                example: Dict[str, Any] = {k: s.draw(rng) for k, s in strats.items()}
+                try:
+                    fn(*args, **kwargs, **example)
+                except _Assumption:
+                    continue
+                except Exception as e:
+                    raise AssertionError(
+                        f"falsifying example ({i + 1}/{n}): {example!r}"
+                    ) from e
+
+        # hide strategy params from pytest's fixture resolution: the visible
+        # signature keeps only non-strategy params (real fixtures)
+        sig = inspect.signature(fn)
+        wrapper.__signature__ = sig.replace(
+            parameters=[p for n, p in sig.parameters.items() if n not in strats]
+        )
+        wrapper._hypothesis_given = True
+        return wrapper
+
+    return decorate
+
+
+def settings(max_examples: int = DEFAULT_MAX_EXAMPLES, deadline: Any = None, **_: Any):
+    def decorate(fn: Callable) -> Callable:
+        fn._max_examples = max_examples
+        return fn
+
+    return decorate
+
+
+def assume(condition: bool) -> None:
+    # no draw-rejection machinery: a failed assumption discards the example
+    if not condition:
+        raise _Assumption()
+
+
+__all__ = ["given", "settings", "strategies", "assume"]

@@ -4,6 +4,18 @@ import sys
 # src-layout import without install
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
+try:  # property tests prefer the real hypothesis when the wheel exists
+    import hypothesis  # noqa: F401
+except ModuleNotFoundError:  # container has no hypothesis: gate with the stub
+    import importlib.util
+
+    _spec = importlib.util.spec_from_file_location(
+        "hypothesis", os.path.join(os.path.dirname(__file__), "_hypothesis_stub.py")
+    )
+    _mod = importlib.util.module_from_spec(_spec)
+    _spec.loader.exec_module(_mod)
+    sys.modules["hypothesis"] = _mod
+
 import jax
 import numpy as np
 import pytest
