@@ -9,27 +9,31 @@ from __future__ import annotations
 import numpy as np
 
 from .common import H100, PAPER, emit
-from repro.core.baselines import deepspeed_static_schedule
-from repro.core.gds import schedule_global_batch
 from repro.core.simulator import simulate_iteration
 from repro.data.distributions import DATASETS
+from repro.sched import SchedulingContext, Topology, get_policy
 
 
 def run(iters: int = 12, seed: int = 0):
     prof = PAPER["qwen2.5-0.5b"].to_profile()
     dist = DATASETS["chatqa2"]()
     rng = np.random.default_rng(seed)
-    dp, cp, bucket = 4, 8, 26_000
+    bucket = 26_000
+    ctx = SchedulingContext(
+        topology=Topology(dp=4, cp=8), bucket_size=bucket, profile=prof, hw=H100
+    )
+    skrull = get_policy("skrull")
+    static = get_policy("deepspeed-static")
     out = {}
     for batch in (8, 16, 24, 32, 40, 48, 56, 64):
         ratios = []
         for _ in range(iters):
-            lengths = np.minimum(dist.sample(rng, batch), bucket * cp - cp)
+            lengths = np.minimum(dist.sample(rng, batch), ctx.cap - ctx.n_cp)
             sk = simulate_iteration(
-                schedule_global_batch(lengths, dp, cp, bucket, prof), prof, H100
+                skrull.schedule(lengths, ctx), prof, H100
             ).iteration_s
             ds = simulate_iteration(
-                deepspeed_static_schedule(lengths, dp, cp, bucket, prof), prof, H100
+                static.schedule(lengths, ctx), prof, H100
             ).iteration_s
             ratios.append(ds / sk)
         out[batch] = float(np.mean(ratios))

@@ -1,14 +1,15 @@
 """Figure 3 replay: end-to-end speedup of Skrull over DeepSpeed + step-by-step.
 
 For each (model x dataset) cell of the paper's grid, sample iterations from
-the matched length distribution, schedule them with each policy, and score
-with the calibrated H100 simulator (core/simulator.py — constants fitted to
-the paper's own Table 3 + H100 specs). Policies:
+the matched length distribution, schedule them with each registered policy
+(repro.sched), and score with the calibrated H100 simulator
+(core/simulator.py — constants fitted to the paper's own Table 3 + H100
+specs). Policies replayed for the paper grid:
 
-  deepspeed   — static baseline (fixed micro-batch, everything CP-sharded)
-  +dacp       — arrival-order batching, DACP per micro-batch (paper step 1)
-  skrull      — full GDS + DACP (paper step 2)
-  +cost-aware — beyond-paper DACP refinement (core/optimize.py)
+  deepspeed-static — static baseline (fixed micro-batch, everything CP-sharded)
+  dacp-only        — arrival-order batching, DACP per micro-batch (paper step 1)
+  skrull           — full GDS + DACP (paper step 2)
+  skrull+refine    — beyond-paper DACP refinement (core/optimize.py)
 
 Paper reference points: avg 3.76x (peak 7.54x); 0.5B avg 5.50x, 7B avg 2.03x.
 """
@@ -18,39 +19,11 @@ from __future__ import annotations
 import numpy as np
 
 from .common import H100, PAPER, PAPER_SETTINGS, emit
-from repro.core.baselines import _pack_arrival, deepspeed_static_schedule
-from repro.core.dacp import schedule_dacp
-from repro.core.gds import GlobalSchedule, RankSchedule, schedule_global_batch
-from repro.core.optimize import cost_aware_refine
 from repro.core.simulator import simulate_iteration
 from repro.data.distributions import DATASETS
+from repro.sched import SchedulingContext, Topology, get_policy
 
-
-def _dacp_only_schedule(lengths, ws, n_cp, c, prof):
-    s = np.asarray(lengths, dtype=np.int64)
-    ranks = []
-    for dp_rank in range(ws):
-        subset = np.arange(dp_rank, len(s), ws, dtype=np.int64)
-        mbs = _pack_arrival(subset, s, float(c) * n_cp)
-        dacps = [schedule_dacp(s[mb], c, n_cp, prof) for mb in mbs]
-        ranks.append(RankSchedule(dp_rank, mbs, dacps))
-    sched = GlobalSchedule(ranks, s, c, n_cp)
-    sched.validate()
-    return sched
-
-
-def _cost_aware(sched, prof, hw):
-    ranks = [
-        RankSchedule(
-            r.dp_rank,
-            r.microbatches,
-            [cost_aware_refine(d, prof, hw) for d in r.dacp],
-        )
-        for r in sched.ranks
-    ]
-    out = GlobalSchedule(ranks, sched.lengths, sched.bucket_size, sched.n_cp)
-    out.validate()
-    return out
+POLICIES = ("deepspeed-static", "dacp-only", "skrull", "skrull+refine")
 
 
 def run(iters: int = 16, seed: int = 0, hw=H100, verbose: bool = True):
@@ -59,19 +32,18 @@ def run(iters: int = 16, seed: int = 0, hw=H100, verbose: bool = True):
     all_speedups = []
     for (model, dataset), (dp, cp, batch, bucket) in PAPER_SETTINGS.items():
         prof = PAPER[model].to_profile()
+        ctx = SchedulingContext(
+            topology=Topology(dp=dp, cp=cp), bucket_size=bucket,
+            profile=prof, hw=hw,
+        )
         dist = DATASETS[dataset]()
-        t = {"deepspeed": [], "dacp": [], "skrull": [], "cost_aware": []}
+        t = {name: [] for name in POLICIES}
         for _ in range(iters):
             lengths = np.minimum(dist.sample(rng, batch), bucket * cp - cp)
-            ds = deepspeed_static_schedule(lengths, dp, cp, bucket, prof)
-            t["deepspeed"].append(simulate_iteration(ds, prof, hw).iteration_s)
-            da = _dacp_only_schedule(lengths, dp, cp, bucket, prof)
-            t["dacp"].append(simulate_iteration(da, prof, hw).iteration_s)
-            sk = schedule_global_batch(lengths, dp, cp, bucket, prof)
-            t["skrull"].append(simulate_iteration(sk, prof, hw).iteration_s)
-            ca = _cost_aware(sk, prof, hw)
-            t["cost_aware"].append(simulate_iteration(ca, prof, hw).iteration_s)
-        base = np.mean(t["deepspeed"])
+            for name in POLICIES:
+                sched = get_policy(name).schedule(lengths, ctx)
+                t[name].append(simulate_iteration(sched, prof, hw).iteration_s)
+        base = np.mean(t["deepspeed-static"])
         row = {k: float(base / np.mean(v)) for k, v in t.items()}
         results[(model, dataset)] = row
         all_speedups.append(row["skrull"])
@@ -79,8 +51,8 @@ def run(iters: int = 16, seed: int = 0, hw=H100, verbose: bool = True):
             emit(
                 f"fig3/{model}/{dataset}",
                 float(np.mean(t["skrull"]) * 1e6),
-                f"speedup_dacp={row['dacp']:.2f}x speedup_skrull={row['skrull']:.2f}x "
-                f"speedup_cost_aware={row['cost_aware']:.2f}x",
+                f"speedup_dacp={row['dacp-only']:.2f}x speedup_skrull={row['skrull']:.2f}x "
+                f"speedup_cost_aware={row['skrull+refine']:.2f}x",
             )
     avg = float(np.mean(all_speedups))
     peak = float(np.max(all_speedups))

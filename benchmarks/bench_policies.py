@@ -1,0 +1,60 @@
+"""Policy matrix: every registered scheduling policy on one small mixture.
+
+The registry (repro.sched) is the contract: any policy that registers itself
+is scored here with zero glue code. Emits modeled iteration time, imbalance
+and dist-token fraction per policy, plus a skrull-vs-deepspeed-static guard
+(``check=True`` raises if skrull fails to beat the static baseline on modeled
+step time — the paper's headline claim; CI runs this mode).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from .common import H100, PAPER, emit
+from repro.data.distributions import DATASETS
+from repro.sched import SchedulingContext, Topology, get_policy, list_policies
+
+
+def run(iters: int = 6, batch: int = 48, seed: int = 0, check: bool = False):
+    prof = PAPER["qwen2.5-0.5b"].to_profile()
+    ctx = SchedulingContext(
+        topology=Topology(dp=4, cp=8), bucket_size=26_000, profile=prof, hw=H100
+    )
+    dist = DATASETS["chatqa2"]()
+    rng = np.random.default_rng(seed)
+    batches = [
+        np.minimum(dist.sample(rng, batch), ctx.cap - ctx.n_cp)
+        for _ in range(iters)
+    ]
+    modeled = {}
+    for name in list_policies():
+        policy = get_policy(name)
+        times, imb, dtf, sched_us = [], [], [], []
+        for lengths in batches:
+            _, rep = policy.schedule_with_report(lengths, ctx)
+            times.append(rep.modeled_iteration_s)
+            imb.append(rep.imbalance)
+            dtf.append(rep.dist_token_frac)
+            sched_us.append(rep.sched_time_s * 1e6)
+        modeled[name] = float(np.mean(times))
+        emit(
+            f"policies/{name}",
+            float(np.mean(sched_us)),
+            f"modeled={modeled[name] * 1e3:.1f}ms imbalance={np.mean(imb):.2f} "
+            f"dist_tok={np.mean(dtf):.2f}",
+        )
+    ratio = modeled["deepspeed-static"] / modeled["skrull"]
+    emit("policies/skrull_vs_static", 0.0, f"speedup={ratio:.2f}x")
+    if check and ratio <= 1.0:
+        raise SystemExit(
+            f"skrull ({modeled['skrull'] * 1e3:.1f}ms) does not beat "
+            f"deepspeed-static ({modeled['deepspeed-static'] * 1e3:.1f}ms)"
+        )
+    return modeled
+
+
+if __name__ == "__main__":
+    import sys
+
+    run(check="--check" in sys.argv)

@@ -1,28 +1,38 @@
 """Scheduling overhead (§4.3 'near-zero cost online scheduling').
 
-Wall-clock latency of the FULL online pipeline (GDS + DACP over the global
-batch) at increasing batch sizes — must stay in the low-millisecond range to
-vanish behind a single device step."""
+Wall-clock latency of the FULL online pipeline at increasing batch sizes —
+must stay in the low-millisecond range to vanish behind a single device step.
+The skrull policy is swept over batch size (the paper's claim); every other
+registered policy is timed at the production batch for comparison."""
 
 from __future__ import annotations
 
 import numpy as np
 
 from .common import H100, PAPER, emit, timeit
-from repro.core.gds import schedule_global_batch
 from repro.data.distributions import DATASETS
+from repro.sched import SchedulingContext, Topology, get_policy, list_policies
 
 
 def run():
     prof = PAPER["qwen2.5-0.5b"].to_profile()
+    ctx = SchedulingContext(
+        topology=Topology(dp=4, cp=8), bucket_size=26_000, profile=prof, hw=H100
+    )
     dist = DATASETS["chatqa2"]()
     rng = np.random.default_rng(0)
+    skrull = get_policy("skrull")
     for batch in (64, 256, 1024):
         lengths = np.minimum(dist.sample(rng, batch), 26_000 * 8)
-        us = timeit(
-            lambda: schedule_global_batch(lengths, 4, 8, 26_000, prof), repeats=5
-        )
-        emit(f"scheduler/batch{batch}", us, f"{us/1e3:.2f}ms_per_iteration")
+        us = timeit(lambda: skrull.schedule(lengths, ctx), repeats=5)
+        emit(f"scheduler/batch{batch}", us, f"{us / 1e3:.2f}ms_per_iteration")
+    lengths = np.minimum(dist.sample(rng, 256), 26_000 * 8)
+    for name in list_policies():
+        if name == "skrull":
+            continue
+        policy = get_policy(name)
+        us = timeit(lambda: policy.schedule(lengths, ctx), repeats=5)
+        emit(f"scheduler/{name}/batch256", us, f"{us / 1e3:.2f}ms_per_iteration")
 
 
 if __name__ == "__main__":

@@ -3,9 +3,10 @@ the deployment target (TPU v5e), with BucketSize derived from real HBM
 headroom (App. A.1 methodology, v5e constants).
 
 For every text-LM assigned arch: C = (0.9*HBM - params*16B/256) / bytes-per-
-token, then Skrull vs DeepSpeed-static over sampled wikipedia + chatqa2
-batches on a DP=16 x CP=16 pod. Archs whose optimizer state leaves no
-activation headroom at 256 chips report the constraint instead.
+token, then the registered skrull / skrull+refine policies vs deepspeed-static
+over sampled wikipedia + chatqa2 batches on a DP=16 x CP=16 pod. Archs whose
+optimizer state leaves no activation headroom at 256 chips report the
+constraint instead.
 """
 
 from __future__ import annotations
@@ -14,17 +15,16 @@ import numpy as np
 
 from .common import TPU_V5E, emit
 from repro.configs.registry import ASSIGNED
-from repro.core.baselines import deepspeed_static_schedule
-from repro.core.gds import GlobalSchedule, RankSchedule, schedule_global_batch
-from repro.core.optimize import cost_aware_refine
 from repro.core.perf_model import derive_bucket_size
 from repro.core.simulator import simulate_iteration
 from repro.data.distributions import DATASETS
+from repro.sched import SchedulingContext, Topology, get_policy
 
 
 def run(iters: int = 8, seed: int = 0):
     rng = np.random.default_rng(seed)
-    dp, cp, batch = 16, 16, 256
+    topo = Topology(dp=16, cp=16)
+    batch = 256
     for name, cfg in sorted(ASSIGNED.items()):
         prof = cfg.to_profile()
         static = cfg.param_count() * 16.0 / 256  # ZeRO-3 over one pod
@@ -33,27 +33,24 @@ def run(iters: int = 8, seed: int = 0):
         except ValueError:
             emit(f"v5e/{name}", 0.0, "no-activation-headroom-at-256-chips")
             continue
+        ctx = SchedulingContext(
+            topology=topo, bucket_size=bucket, profile=prof, hw=TPU_V5E
+        )
         row = {}
         for ds_name in ("wikipedia", "chatqa2"):
             dist = DATASETS[ds_name]()
             r_sk, r_ca = [], []
             for _ in range(iters):
-                lengths = np.minimum(dist.sample(rng, batch), bucket * cp - cp)
-                sched = schedule_global_batch(lengths, dp, cp, bucket, prof)
-                sk = simulate_iteration(sched, prof, TPU_V5E).iteration_s
-                ca_sched = GlobalSchedule(
-                    [
-                        RankSchedule(
-                            r.dp_rank, r.microbatches,
-                            [cost_aware_refine(d, prof, TPU_V5E) for d in r.dacp],
-                        )
-                        for r in sched.ranks
-                    ],
-                    sched.lengths, sched.bucket_size, sched.n_cp,
-                )
-                ca = simulate_iteration(ca_sched, prof, TPU_V5E).iteration_s
+                lengths = np.minimum(dist.sample(rng, batch), ctx.cap - ctx.n_cp)
+                sk = simulate_iteration(
+                    get_policy("skrull").schedule(lengths, ctx), prof, TPU_V5E
+                ).iteration_s
+                ca = simulate_iteration(
+                    get_policy("skrull+refine").schedule(lengths, ctx),
+                    prof, TPU_V5E,
+                ).iteration_s
                 base = simulate_iteration(
-                    deepspeed_static_schedule(lengths, dp, cp, bucket, prof),
+                    get_policy("deepspeed-static").schedule(lengths, ctx),
                     prof, TPU_V5E,
                 ).iteration_s
                 r_sk.append(base / sk)

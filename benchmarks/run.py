@@ -7,6 +7,7 @@ Prints ``name,us_per_call,derived`` CSV rows (stub contract). Sections:
   fig5    — FLOPs-vs-length curves + quadratic transition
   fig3    — end-to-end speedup replay (+ step-by-step DACP/GDS/cost-aware)
   fig4    — speedup vs batch size
+  policies— every registered scheduling policy on one mixture (repro.sched)
   sched   — online scheduling overhead
   kernels — kernel microbench + Pallas correctness/structure
   roofline— summary over the dry-run artifact (if present)
@@ -27,6 +28,7 @@ def main() -> None:
         bench_e2e_speedup,
         bench_flops_curve,
         bench_kernels,
+        bench_policies,
         bench_scheduler,
         bench_v5e_projection,
     )
@@ -38,6 +40,7 @@ def main() -> None:
     bench_flops_curve.run()
     bench_e2e_speedup.run()
     bench_batchsize.run()
+    bench_policies.run()
     bench_scheduler.run()
     bench_kernels.run()
     bench_v5e_projection.run(iters=6)

@@ -1,8 +1,10 @@
-"""Inspect what Skrull actually decides: sample a global batch from each
-Long-SFT distribution, print the GDS/DACP plan, and compare simulated
-iteration time against the DeepSpeed-static baseline and LongAlign.
+"""Inspect what a scheduling policy actually decides: sample a global batch
+from each Long-SFT distribution, print the chosen plan, and compare simulated
+iteration time across every registered policy.
 
     PYTHONPATH=src python examples/schedule_explorer.py [--dataset chatqa2]
+    PYTHONPATH=src python examples/schedule_explorer.py --policy chunkflow
+    PYTHONPATH=src python examples/schedule_explorer.py --list
 """
 
 import argparse
@@ -14,10 +16,10 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 import numpy as np
 
 from repro.configs.registry import PAPER
-from repro.core import H100, schedule_global_batch, simulate_iteration
-from repro.core.baselines import deepspeed_static_schedule, longalign_sorted_schedule
+from repro.core import H100
 from repro.core.dacp import DISTRIBUTED
 from repro.data.distributions import DATASETS
+from repro.sched import SchedulingContext, Topology, get_policy, list_policies
 
 
 def main():
@@ -26,33 +28,46 @@ def main():
     ap.add_argument("--model", default="qwen2.5-0.5b")
     ap.add_argument("--batch", type=int, default=64)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--policy", default="skrull", choices=list_policies(),
+                    help="policy whose plan is printed in detail")
+    ap.add_argument("--list", action="store_true", help="list registered policies")
     args = ap.parse_args()
 
+    if args.list:
+        for name in list_policies():
+            print(name)
+        return
+
     prof = PAPER[args.model].to_profile()
-    dp, cp, bucket = 4, 8, 26_000
+    topo = Topology(dp=4, cp=8)
+    bucket = 26_000
+    ctx = SchedulingContext(
+        topology=topo, bucket_size=bucket, profile=prof, hw=H100
+    )
     rng = np.random.default_rng(args.seed)
-    lengths = np.minimum(DATASETS[args.dataset]().sample(rng, args.batch), bucket * cp)
+    lengths = np.minimum(
+        DATASETS[args.dataset]().sample(rng, args.batch), ctx.cap - topo.cp
+    )
     print(f"{args.dataset} batch of {args.batch}: "
           f"min={lengths.min()} median={int(np.median(lengths))} max={lengths.max()}")
 
-    sched = schedule_global_batch(lengths, dp, cp, bucket, prof)
+    sched, _ = get_policy(args.policy).schedule_with_report(lengths, ctx)
     for r in sched.ranks:
         toks = sum(int(lengths[mb].sum()) for mb in r.microbatches)
-        print(f"\nDP rank {r.dp_rank}: {len(r.microbatches)} micro-batches, {toks} tokens")
+        print(f"\n[{args.policy}] DP rank {r.dp_rank}: "
+              f"{len(r.microbatches)} micro-batches, {toks} tokens")
         for m, (mb, plan) in enumerate(zip(r.microbatches, r.dacp)):
             dist = [int(lengths[mb[i]]) for i in plan.dist_indices]
             local = [int(lengths[mb[i]]) for i in np.nonzero(plan.assignment != DISTRIBUTED)[0]]
             print(f"  mb{m}: {len(mb)} seqs | local {sorted(local, reverse=True)[:6]}"
                   f"{'...' if len(local) > 6 else ''} | distributed {dist}")
 
-    for name, policy in (
-        ("skrull", sched),
-        ("deepspeed-static", deepspeed_static_schedule(lengths, dp, cp, bucket, prof)),
-        ("longalign-sorted", longalign_sorted_schedule(lengths, dp, cp, bucket, prof)),
-    ):
-        rep = simulate_iteration(policy, prof, H100)
-        print(f"\n{name:18s} iteration={rep.iteration_s*1e3:8.1f} ms "
-              f"dist_frac={rep.dist_seq_frac:.2f} mbs={rep.n_microbatches.tolist()}")
+    print()
+    for name in list_policies():
+        _, rep = get_policy(name).schedule_with_report(lengths, ctx)
+        print(f"{name:18s} iteration={rep.modeled_iteration_s * 1e3:8.1f} ms "
+              f"imbalance={rep.imbalance:.2f} dist_tok={rep.dist_token_frac:.2f} "
+              f"mbs={rep.n_microsteps} sched={rep.sched_time_s * 1e3:.1f}ms")
 
 
 if __name__ == "__main__":

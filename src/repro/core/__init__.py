@@ -12,6 +12,7 @@ Public surface:
 
 from .cost import microbatch_tokens, tdacp
 from .dacp import DISTRIBUTED, DACPResult, DACPSchedulingError, feasible, schedule_dacp
+from .errors import ScheduleInvariantError
 from .gds import (
     GDSSchedulingError,
     GlobalSchedule,
@@ -36,6 +37,7 @@ __all__ = [
     "DISTRIBUTED",
     "DACPResult",
     "DACPSchedulingError",
+    "ScheduleInvariantError",
     "feasible",
     "schedule_dacp",
     "GDSSchedulingError",
@@ -58,3 +60,35 @@ __all__ = [
     "tdacp",
     "microbatch_tokens",
 ]
+
+# -- forwarding shims --------------------------------------------------------
+# The policy surface lives in repro.sched; repro.core stays importable as a
+# single entry point for scheduling call sites, but these lazy re-exports
+# warn so new code is steered to the canonical package. (Every pre-existing
+# repro.core name — schedule_global_batch, schedule_dacp, the baselines
+# modules — still resolves natively above; nothing was removed.)
+_SCHED_MOVED = {
+    "Topology",
+    "SchedulingContext",
+    "ScheduleReport",
+    "SchedulerPolicy",
+    "build_report",
+    "register_policy",
+    "get_policy",
+    "list_policies",
+}
+
+
+def __getattr__(name):
+    if name in _SCHED_MOVED:
+        import warnings
+
+        warnings.warn(
+            f"repro.core.{name} is deprecated; import it from repro.sched",
+            DeprecationWarning,
+            stacklevel=2,
+        )
+        from .. import sched
+
+        return getattr(sched, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -30,6 +30,7 @@ from typing import List, Optional, Sequence
 
 import numpy as np
 
+from .errors import ScheduleInvariantError
 from .perf_model import ModelProfile
 
 DISTRIBUTED = -1
@@ -70,11 +71,11 @@ class DACPResult:
         return float(local) + float(dist)
 
     def validate(self) -> None:
-        """Assert Eq. 6 (completeness, by construction) and Eq. 7 (memory)."""
+        """Check Eq. 6 (completeness, by construction) and Eq. 7 (memory)."""
         for j in range(self.n_cp):
             used = self.rank_tokens(j)
             if used > self.bucket_size + 1e-6:
-                raise AssertionError(
+                raise ScheduleInvariantError(
                     f"Eq.7 violated on rank {j}: {used} > C={self.bucket_size}"
                 )
 
@@ -172,4 +173,11 @@ def feasible(lengths: Sequence[int], bucket_size: int, n_cp: int) -> bool:
     return total / n_cp <= bucket_size
 
 
-__all__ = ["DISTRIBUTED", "DACPResult", "DACPSchedulingError", "schedule_dacp", "feasible"]
+__all__ = [
+    "DISTRIBUTED",
+    "DACPResult",
+    "DACPSchedulingError",
+    "ScheduleInvariantError",
+    "schedule_dacp",
+    "feasible",
+]

@@ -1,0 +1,18 @@
+"""Shared scheduling exceptions.
+
+``ScheduleInvariantError`` replaces the ad-hoc ``raise AssertionError`` calls
+that ``DACPResult.validate()`` / ``GlobalSchedule.validate()`` used to make:
+an explicit exception type survives ``python -O``, can be caught precisely
+(``core/optimize._feasible_after``), and reads as what it is — a violated
+schedule invariant (Eq. 7 memory, Eq. 9 completeness, Eq. 10 capacity), not a
+programming assertion.
+"""
+
+from __future__ import annotations
+
+
+class ScheduleInvariantError(RuntimeError):
+    """A schedule violates an Eq. 7 / Eq. 9 / Eq. 10 invariant."""
+
+
+__all__ = ["ScheduleInvariantError"]

@@ -26,6 +26,7 @@ from typing import List, Optional, Sequence
 import numpy as np
 
 from .dacp import DACPResult, DACPSchedulingError, schedule_dacp
+from .errors import ScheduleInvariantError
 from .perf_model import ModelProfile
 
 
@@ -60,11 +61,13 @@ class GlobalSchedule:
             for mb, d in zip(r.microbatches, r.dacp):
                 seen[mb] += 1
                 if self.lengths[mb].sum() > self.bucket_size * self.n_cp + 1e-6:
-                    raise AssertionError("Eq.10 violated")
+                    raise ScheduleInvariantError("Eq.10 violated")
                 d.validate()
         if not np.all(seen == 1):
             bad = np.nonzero(seen != 1)[0]
-            raise AssertionError(f"Eq.9 violated for sequences {bad.tolist()}")
+            raise ScheduleInvariantError(
+                f"Eq.9 violated for sequences {bad.tolist()}"
+            )
 
 
 def binpack_flops(

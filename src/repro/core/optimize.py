@@ -28,6 +28,7 @@ import numpy as np
 
 from .cost import tdacp
 from .dacp import DISTRIBUTED, DACPResult, schedule_dacp
+from .errors import ScheduleInvariantError
 from .perf_model import HardwareProfile, ModelProfile
 
 
@@ -35,7 +36,7 @@ def _feasible_after(res: DACPResult) -> bool:
     try:
         res.validate()
         return True
-    except AssertionError:
+    except ScheduleInvariantError:
         return False
 
 

@@ -101,6 +101,10 @@ def simulate_iteration(
     )
 
 
+# legacy mode names from before the repro.sched registry existed
+_POLICY_ALIASES = {"deepspeed": "deepspeed-static", "dacp": "dacp-only"}
+
+
 def speedup(
     lengths: Sequence[int],
     ws: int,
@@ -110,33 +114,25 @@ def speedup(
     hw: HardwareProfile,
     mode: str = "skrull",
 ) -> float:
-    """Convenience: iteration-time ratio baseline/policy for one global batch."""
-    from .baselines import deepspeed_static_schedule
-    from .gds import schedule_global_batch
+    """Convenience: iteration-time ratio deepspeed-static/policy for one
+    global batch. ``mode`` is any registered repro.sched policy name."""
+    from ..sched import SchedulingContext, Topology, get_policy
 
+    ctx = SchedulingContext(
+        topology=Topology(dp=ws, cp=n_cp),
+        bucket_size=bucket_size,
+        profile=profile,
+        hw=hw,
+    )
+    name = _POLICY_ALIASES.get(mode, mode)
     base = simulate_iteration(
-        deepspeed_static_schedule(lengths, ws, n_cp, bucket_size, profile), profile, hw
+        get_policy("deepspeed-static").schedule(lengths, ctx), profile, hw
     ).iteration_s
-    if mode == "deepspeed":
+    if name == "deepspeed-static":
         return 1.0
-    if mode == "dacp":
-        # DACP only: arrival-order batching (baseline GDS), DACP per micro-batch
-        from .baselines import _pack_arrival
-        from .dacp import schedule_dacp
-        from .gds import GlobalSchedule, RankSchedule
-
-        s = np.asarray(lengths, dtype=np.int64)
-        ranks = []
-        for dp_rank in range(ws):
-            subset = np.arange(dp_rank, len(s), ws, dtype=np.int64)
-            mbs = _pack_arrival(subset, s, float(bucket_size) * n_cp)
-            dacps = [schedule_dacp(s[mb], bucket_size, n_cp, profile) for mb in mbs]
-            ranks.append(RankSchedule(dp_rank, mbs, dacps))
-        sched = GlobalSchedule(ranks, s, bucket_size, n_cp)
-        sched.validate()
-    else:
-        sched = schedule_global_batch(lengths, ws, n_cp, bucket_size, profile)
-    mine = simulate_iteration(sched, profile, hw).iteration_s
+    mine = simulate_iteration(
+        get_policy(name).schedule(lengths, ctx), profile, hw
+    ).iteration_s
     return base / mine
 
 

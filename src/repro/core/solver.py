@@ -17,6 +17,7 @@ import numpy as np
 
 from .cost import tdacp
 from .dacp import DISTRIBUTED, DACPResult
+from .errors import ScheduleInvariantError
 from .perf_model import HardwareProfile, ModelProfile
 
 
@@ -47,7 +48,7 @@ def solve_dacp_exact(
             )
             try:
                 cand.validate()  # Eq. 7
-            except AssertionError:
+            except ScheduleInvariantError:
                 continue
             cost = tdacp(cand, profile, hw)
             if cost < best_cost:

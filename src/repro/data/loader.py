@@ -1,34 +1,43 @@
-"""SkrullDataLoader — online GDS+DACP scheduling inside the data path.
+"""SkrullDataLoader — online data scheduling inside the data path.
 
 Per iteration (paper Fig. 2):
   1. draw a global batch of sample indices (deterministic shuffled stream),
-  2. GDS (Alg. 2): FLOPs-balanced DP bins + interleaved micro-batching,
-  3. DACP (Alg. 1): per micro-batch local/distributed classification,
-  4. materialise fixed-shape packed buffers (packing.py) per DP rank,
-  5. pad every DP rank to the iteration's max micro-batch count with empty
+  2. run the configured ``SchedulerPolicy`` (default ``"skrull"`` = GDS+DACP;
+     any registered name or instance plugs in — see repro.sched),
+  3. materialise fixed-shape packed buffers (packing.py) per DP rank,
+  4. pad every DP rank to the iteration's max micro-batch count with empty
      buffers (SPMD lock-step; Eq. 8's max_i is exactly this padding cost).
 
 The loader is CHECKPOINTABLE (``state()`` / ``restore()``): epoch, cursor and
 the permutation seed fully determine the remaining stream, so training resumes
-bit-exact after preemption, and an elastic restart with a different ``ws``
-re-schedules the same sample stream onto the new topology.
+bit-exact after preemption, and an elastic restart with a different topology
+re-schedules the same sample stream onto the new grid
+(``set_topology(Topology(...))``).
 
 Scheduling runs on the host while the previous step executes on device —
 the paper's "near-zero overhead" claim is benchmarked in bench_scheduler.
+Every iteration carries the policy's uniform ``ScheduleReport`` telemetry
+(imbalance, dist-token fraction, modeled wall-time) for the trainer, health
+monitor and plan lowering to share.
 """
 
 from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Dict, Iterator, List, Optional, Sequence
+from typing import Dict, Iterator, List, Optional, Sequence, Union
 
 import numpy as np
 
-from ..core.dacp import DACPResult, schedule_dacp
-from ..core.gds import GlobalSchedule, schedule_global_batch
-from ..core.optimize import cost_aware_refine
 from ..core.perf_model import HardwareProfile, ModelProfile
+from ..core.gds import GlobalSchedule
+from ..sched import (
+    ScheduleReport,
+    SchedulerPolicy,
+    SchedulingContext,
+    Topology,
+    get_policy,
+)
 from .dataset import SyntheticSFTDataset
 from .packing import (
     BucketSpec,
@@ -63,12 +72,14 @@ class IterationBatch:
 
     ``microbatches[m][i]`` is DP rank i's m-th micro-batch (empty-padded).
     ``denominator`` is the global valid-token count for loss normalisation.
+    ``report`` is the policy's uniform telemetry (repro.sched.ScheduleReport).
     """
 
     microbatches: List[List[PackedMicrobatch]]
     denominator: int
     schedule: GlobalSchedule
     sched_time_s: float
+    report: Optional[ScheduleReport] = None
 
     @property
     def n_microsteps(self) -> int:
@@ -80,28 +91,52 @@ class SkrullDataLoader:
         self,
         dataset: SyntheticSFTDataset,
         global_batch: int,
-        ws: int,
-        n_cp: int,
-        c_budget: int,
+        ws: Optional[int] = None,
+        n_cp: Optional[int] = None,
+        c_budget: Optional[int] = None,
         profile: Optional[ModelProfile] = None,
         hw: Optional[HardwareProfile] = None,
         cost_aware: bool = False,
         speed_factors: Optional[Sequence[float]] = None,
         seed: int = 0,
         ladder_steps: int = 8,
+        policy: Union[str, SchedulerPolicy] = "skrull",
+        topology: Optional[Topology] = None,
     ):
+        if topology is None:
+            if ws is None or n_cp is None:
+                raise ValueError("pass topology=Topology(...) or ws= and n_cp=")
+            topology = Topology(dp=ws, cp=n_cp)
+        if speed_factors is not None:
+            topology = topology.with_speed_factors(speed_factors)
+        if c_budget is None or c_budget < 1:
+            raise ValueError(f"c_budget must be a positive int, got {c_budget}")
         self.dataset = dataset
         self.global_batch = global_batch
-        self.ws = ws
-        self.n_cp = n_cp
+        self.topology = topology
         self.c_budget = c_budget
-        self.ladder = bucket_ladder(c_budget, n_cp, ladder_steps)
+        self._ladder_steps = ladder_steps
+        self.ladder = bucket_ladder(c_budget, topology.cp, ladder_steps)
         self.c_sched = scheduler_bucket_size(c_budget, ladder_steps)
         self.profile = profile
         self.hw = hw
-        self.cost_aware = cost_aware and profile is not None and hw is not None
-        self.speed_factors = list(speed_factors) if speed_factors is not None else None
+        if cost_aware and isinstance(policy, str) and policy == "skrull":
+            policy = "skrull+refine"  # legacy flag for the refinement pass
+        self.policy = get_policy(policy)
         self._state = LoaderState(epoch=0, cursor=0, seed=seed)
+
+    # -- topology views ------------------------------------------------------
+    @property
+    def ws(self) -> int:
+        return self.topology.ws
+
+    @property
+    def n_cp(self) -> int:
+        return self.topology.cp
+
+    @property
+    def speed_factors(self) -> Optional[Sequence[float]]:
+        return self.topology.speed_factors
 
     # -- checkpointable state ------------------------------------------------
     def state(self) -> LoaderState:
@@ -112,11 +147,26 @@ class SkrullDataLoader:
 
     def set_speed_factors(self, factors: Optional[Sequence[float]]) -> None:
         """FT hook: straggler telemetry updates next iteration's bin-packing."""
-        self.speed_factors = list(factors) if factors is not None else None
+        self.topology = self.topology.with_speed_factors(factors)
 
-    def set_topology(self, ws: int) -> None:
-        """Elastic rescale: new DP world size from the next iteration on."""
-        self.ws = ws
+    def set_topology(self, topology: Union[int, Topology]) -> None:
+        """Elastic rescale: schedule for a new grid from the next iteration.
+
+        Accepts a full ``Topology`` or (legacy) a bare DP world size, which
+        rebuilds the current topology with ``pods`` folded into ``dp``.
+        """
+        if isinstance(topology, Topology):
+            if topology.cp != self.topology.cp:
+                # the bucket ladder is a per-chip property of C and N
+                self.ladder = bucket_ladder(
+                    self.c_budget, topology.cp, self._ladder_steps
+                )
+            self.topology = topology
+        else:
+            self.topology = Topology(dp=int(topology), cp=self.topology.cp)
+
+    def set_policy(self, policy: Union[str, SchedulerPolicy]) -> None:
+        self.policy = get_policy(policy)
 
     # -- iteration -----------------------------------------------------------
     def _permutation(self, epoch: int) -> np.ndarray:
@@ -140,6 +190,15 @@ class SkrullDataLoader:
         self._state = LoaderState(epoch=epoch, cursor=cursor, seed=self._state.seed)
         return np.asarray(out, dtype=np.int64)
 
+    def scheduling_context(self) -> SchedulingContext:
+        return SchedulingContext(
+            topology=self.topology,
+            bucket_size=self.c_sched,
+            profile=self.profile,
+            hw=self.hw,
+            simulate=False,  # hot path: don't pay Eq. 8 simulation per step
+        )
+
     def next_iteration(self) -> IterationBatch:
         indices = self._next_indices()
         lengths = self.dataset.lengths(indices)
@@ -150,21 +209,9 @@ class SkrullDataLoader:
         cap = self.c_sched * self.n_cp - self.n_cp
         lengths = np.minimum(lengths, cap)
 
-        t0 = time.perf_counter()
-        sched = schedule_global_batch(
-            lengths,
-            self.ws,
-            self.n_cp,
-            self.c_sched,
-            self.profile,
-            speed_factors=self.speed_factors,
+        sched, report = self.policy.schedule_with_report(
+            lengths, self.scheduling_context()
         )
-        if self.cost_aware:
-            for r in sched.ranks:
-                r.dacp = [
-                    cost_aware_refine(d, self.profile, self.hw) for d in r.dacp
-                ]
-        sched_time = time.perf_counter() - t0
 
         # ---- cross-rank step alignment --------------------------------------
         # One SPMD micro-step = one pjit call over the whole mesh: all DP
@@ -230,7 +277,8 @@ class SkrullDataLoader:
             microbatches=steps,
             denominator=max(denominator, 1),
             schedule=sched,
-            sched_time_s=sched_time,
+            sched_time_s=report.sched_time_s,
+            report=report,
         )
 
     def __iter__(self) -> Iterator[IterationBatch]:

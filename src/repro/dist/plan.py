@@ -93,10 +93,17 @@ class ExecutionPlan:
         return float(loads.max() / mean) if mean > 0 else 1.0
 
 
-def lower_schedule(sched: GlobalSchedule, mesh) -> ExecutionPlan:
+def lower_schedule(sched: GlobalSchedule, mesh, report=None) -> ExecutionPlan:
     """Bind a GlobalSchedule to the mesh. The DP world must equal the
     ("pod" x) "data" extent and the CP degree the "model" extent — GDS
-    bin-packs over exactly the mesh's DP ranks (launch/mesh.py semantics)."""
+    bin-packs over exactly the mesh's DP ranks (launch/mesh.py semantics).
+
+    ``report`` (a repro.sched.ScheduleReport for the same schedule) is the
+    shared telemetry structure: its ``rank_tokens`` must agree with the
+    loads derived here (raises ValueError on a report/schedule mismatch —
+    the integration invariant between the policy surface and lowering), and
+    the plan carries the report's array so downstream consumers reference
+    one object."""
     sizes = mesh_axis_sizes(mesh)
     pods = sizes.get("pod", 1)
     dp = sizes.get("data", 1)
@@ -128,6 +135,16 @@ def lower_schedule(sched: GlobalSchedule, mesh) -> ExecutionPlan:
             MicroStep(index=m, active_ranks=active, local_tokens=loc, dist_tokens=dist)
         )
         rank_tokens += loc + dist[:, None]
+
+    if report is not None:
+        if report.rank_tokens.shape != rank_tokens.shape or not np.array_equal(
+            report.rank_tokens, rank_tokens
+        ):
+            raise ValueError(
+                f"ScheduleReport (policy={report.policy!r}) does not describe "
+                f"this schedule: per-device loads disagree"
+            )
+        rank_tokens = report.rank_tokens  # one shared array downstream
 
     return ExecutionPlan(
         mesh=mesh,

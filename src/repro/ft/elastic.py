@@ -1,14 +1,16 @@
-"""Elastic rescale: rebuild the job on a different topology from checkpoint.
+"""Elastic rescale: rebuild the job on a different Topology from checkpoint.
 
-Because (a) checkpoints are topology-agnostic host arrays, (b) the Skrull
-scheduler is stateless per iteration (GDS takes ``ws`` as an argument), and
-(c) the loader's stream state is (epoch, cursor, seed), a rescale is just:
+Because (a) checkpoints are topology-agnostic host arrays, (b) scheduling
+policies are stateless per iteration (they read the grid from the frozen
+``repro.sched.Topology`` in the SchedulingContext), and (c) the loader's
+stream state is (epoch, cursor, seed), a rescale is just:
 
     1. drain + final checkpoint (or use the last one on failure),
-    2. build the new mesh (launch/mesh.make_mesh),
+    2. build the new Topology and its mesh (launch/mesh.make_mesh),
     3. restore params/opt onto the new shardings,
-    4. loader.set_topology(new_ws) — next iteration schedules for the new DP
-       world; BucketSize C is unchanged (per-chip property).
+    4. loader.set_topology(topology) — next iteration schedules for the new
+       grid; BucketSize C is unchanged (per-chip property). Stale per-rank
+       speed factors are dropped by Topology.with_dp/the rebuild.
 
 Mathematical note: rescaling mid-epoch replays the same sample stream in the
 same order (cursor-based), so the data seen is identical; only the partition
@@ -23,23 +25,33 @@ from typing import Any, Optional, Tuple
 from ..checkpoint.manager import CheckpointManager
 from ..dist.executor import DistExecutor
 from ..launch.mesh import make_mesh
+from ..sched import Topology
 
 
 def rescale(
     ckpt: CheckpointManager,
     template_state: Any,
-    new_dp: int,
-    new_cp: int,
+    new_dp: Optional[int] = None,
+    new_cp: Optional[int] = None,
     pods: int = 1,
     step: Optional[int] = None,
-) -> Tuple[Any, Any, dict]:
-    """Returns (mesh, restored_state_on_new_mesh, meta)."""
-    mesh = make_mesh(new_dp, new_cp, pods)
+    topology: Optional[Topology] = None,
+) -> Tuple[Any, Any, dict, Topology]:
+    """Returns (mesh, restored_state_on_new_mesh, meta, topology).
+
+    Pass either a ready ``topology`` or the legacy ``new_dp``/``new_cp`` ints
+    (a fresh Topology is built from them — never mutate the old one).
+    """
+    if topology is None:
+        if new_dp is None or new_cp is None:
+            raise ValueError("pass topology=Topology(...) or new_dp= and new_cp=")
+        topology = Topology(dp=new_dp, cp=new_cp, pods=pods)
+    mesh = make_mesh(topology.dp, topology.cp, topology.pods)
     state, meta = ckpt.restore(template_state, step=step)
     # re-shard: params + AdamW mirrors onto the new mesh's ZeRO-3 layout,
     # step counter replicated (dist.executor owns the placement rules)
     new_state = DistExecutor(mesh).place_state(state)
-    return mesh, new_state, meta
+    return mesh, new_state, meta, topology
 
 
 __all__ = ["rescale"]

@@ -30,6 +30,26 @@ class HealthMonitor:
     def __post_init__(self):
         self._last_beat = {i: time.monotonic() for i in range(self.ws)}
         self._speed = np.ones(self.ws)
+        self.last_report = None
+        self._imbalance_ema: Optional[float] = None
+
+    def ingest(self, report) -> None:
+        """Consume the iteration's ScheduleReport (repro.sched): per-rank load
+        attribution for straggler diagnosis plus an imbalance EMA — the
+        monitor no longer recomputes imbalance from raw schedules."""
+        if report is None:
+            return
+        self.last_report = report
+        if self._imbalance_ema is None:
+            self._imbalance_ema = float(report.imbalance)
+        else:
+            self._imbalance_ema = (
+                self.ema * self._imbalance_ema + (1 - self.ema) * float(report.imbalance)
+            )
+
+    @property
+    def imbalance(self) -> float:
+        return 1.0 if self._imbalance_ema is None else self._imbalance_ema
 
     def beat(self, rank: int, step_time_s: Optional[float] = None, now: Optional[float] = None):
         self._last_beat[rank] = time.monotonic() if now is None else now
@@ -57,6 +77,8 @@ class HealthMonitor:
         self.ws = ws
         self._last_beat = {i: time.monotonic() for i in range(ws)}
         self._speed = np.ones(ws)
+        self.last_report = None
+        self._imbalance_ema = None
 
 
 __all__ = ["HealthMonitor"]

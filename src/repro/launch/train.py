@@ -17,9 +17,14 @@ import os
 
 
 def main():
+    # numpy-only imports: argparse choices come from the registries, so new
+    # datasets/policies show up here without touching this file
+    from ..data.distributions import DATASETS
+    from ..sched import Topology, list_policies
+
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
-    ap.add_argument("--dataset", default="chatqa2", choices=["wikipedia", "lmsyschat", "chatqa2"])
+    ap.add_argument("--dataset", default="chatqa2", choices=sorted(DATASETS))
     ap.add_argument("--dp", type=int, default=4)
     ap.add_argument("--cp", type=int, default=8)
     ap.add_argument("--pods", type=int, default=1)
@@ -29,21 +34,22 @@ def main():
     ap.add_argument("--lr", type=float, default=3e-4)
     ap.add_argument("--seq-cap", type=int, default=0, help="truncate samples (CPU testing)")
     ap.add_argument("--ckpt-dir", default=None)
-    ap.add_argument("--cost-aware", action="store_true")
+    ap.add_argument("--policy", default="skrull", choices=list_policies(),
+                    help="registered scheduling policy (repro.sched)")
+    ap.add_argument("--cost-aware", action="store_true",
+                    help="legacy alias for --policy skrull+refine")
     ap.add_argument("--reduced", action="store_true", help="use the smoke-size config")
     ap.add_argument("--distributed", action="store_true", help="multi-host: jax.distributed.initialize()")
     args = ap.parse_args()
 
-    if args.distributed:
-        import jax
-
-        jax.distributed.initialize()
-
     import jax
+
+    if args.distributed:
+        jax.distributed.initialize()
 
     from ..configs.registry import get_arch
     from ..core.perf_model import TPU_V5E
-    from ..data import DATASETS, SkrullDataLoader, SyntheticSFTDataset
+    from ..data import SkrullDataLoader, SyntheticSFTDataset
     from ..launch.mesh import make_mesh
     from ..models.transformer import CallConfig
     from ..train.loop import Trainer, TrainerConfig
@@ -54,11 +60,14 @@ def main():
     n_dev = len(jax.devices())
     # the requested dp x cp (x pods) grid must tile the device fleet exactly;
     # otherwise fall back to single-program execution (CPU smoke runs)
+    topo = Topology(dp=args.dp, cp=args.cp, pods=args.pods)
     mesh = None
-    if n_dev > 1 and args.dp * args.cp * args.pods == n_dev:
-        mesh = make_mesh(args.dp, args.cp, args.pods)
+    if n_dev > 1 and topo.n_devices == n_dev:
+        mesh = make_mesh(topo.dp, topo.cp, topo.pods)
+    policy = "skrull+refine" if args.cost_aware and args.policy == "skrull" else args.policy
     print(f"arch={cfg.name} params={cfg.param_count()/1e9:.2f}B "
-          f"devices={n_dev} dp={args.dp} cp={args.cp} pods={args.pods} "
+          f"devices={n_dev} dp={topo.dp} cp={topo.cp} pods={topo.pods} "
+          f"policy={policy} "
           f"mesh={'spmd' if mesh is not None else 'single-program'}")
 
     dataset = SyntheticSFTDataset(
@@ -66,9 +75,9 @@ def main():
         max_len=args.seq_cap or 0,
     )
     loader = SkrullDataLoader(
-        dataset, global_batch=args.batch, ws=args.dp * args.pods, n_cp=args.cp,
+        dataset, global_batch=args.batch, topology=topo,
         c_budget=args.bucket, profile=cfg.to_profile(), hw=TPU_V5E,
-        cost_aware=args.cost_aware,
+        policy=policy,
     )
     from ..dist.executor import make_shard_fn
 

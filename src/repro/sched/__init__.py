@@ -1,0 +1,38 @@
+"""repro.sched — the unified data-scheduling policy surface.
+
+Three abstractions (docs/DESIGN.md §9):
+
+  * ``Topology``          — frozen dp x cp (x pods) grid + speed factors,
+  * ``SchedulerPolicy``   — ``schedule(lengths, ctx) -> GlobalSchedule`` with
+    ``SchedulingContext`` carrying Topology/BucketSize/cost-model profiles and
+    ``schedule_with_report`` emitting the uniform ``ScheduleReport``,
+  * the registry          — ``@register_policy("name")`` / ``get_policy`` /
+    ``list_policies``; importing this package registers the shipped policies.
+
+Adding a policy: subclass SchedulerPolicy, decorate with @register_policy,
+and every consumer (loader, trainer, simulator, benchmarks, explorer) can run
+it by name.
+"""
+
+from .api import (
+    ScheduleReport,
+    SchedulerPolicy,
+    SchedulingContext,
+    build_report,
+)
+from .registry import get_policy, list_policies, register_policy
+from .topology import Topology
+from . import policies as _policies  # noqa: F401  (registers shipped policies)
+from ..core.errors import ScheduleInvariantError
+
+__all__ = [
+    "Topology",
+    "SchedulingContext",
+    "ScheduleReport",
+    "SchedulerPolicy",
+    "ScheduleInvariantError",
+    "build_report",
+    "register_policy",
+    "get_policy",
+    "list_policies",
+]

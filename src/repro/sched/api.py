@@ -1,0 +1,209 @@
+"""The SchedulerPolicy API — one surface for every data-scheduling policy.
+
+Skrull's contribution is *pluggable* data scheduling (paper §4-§6): the
+interesting question is always "policy A vs. policy B on this mixture and
+topology". Every policy therefore implements one method,
+
+    schedule(lengths, ctx) -> GlobalSchedule
+
+where ``ctx`` is a ``SchedulingContext`` (Topology + BucketSize + cost-model
+profiles), and every caller that wants telemetry goes through
+``schedule_with_report`` which validates the schedule (Eq. 7/9/10) and emits a
+uniform ``ScheduleReport`` — the single structure the trainer logs, the health
+monitor ingests, and ``dist/plan.lower_schedule`` consumes instead of
+re-deriving per-device loads.
+
+Policies are looked up by name through the registry (``registry.py``); the
+shipped adapters live in ``policies.py``.
+"""
+
+from __future__ import annotations
+
+import abc
+import dataclasses
+import time
+from typing import Optional, Sequence
+
+import numpy as np
+
+from ..core.dacp import DISTRIBUTED
+from ..core.gds import GlobalSchedule
+from ..core.perf_model import HardwareProfile, ModelProfile
+from ..core.simulator import simulate_iteration
+from .topology import Topology
+
+
+@dataclasses.dataclass(frozen=True)
+class SchedulingContext:
+    """Everything a policy may consult besides the lengths themselves.
+
+    ``bucket_size`` is the per-CP-rank token budget C (Eq. 7); ``profile`` /
+    ``hw`` enable FLOPs-accurate bin-packing and cost-aware refinement —
+    policies must degrade gracefully when they are ``None`` (token-proxy
+    costs, no refinement).
+    """
+
+    topology: Topology
+    bucket_size: int
+    profile: Optional[ModelProfile] = None
+    hw: Optional[HardwareProfile] = None
+    rollback_policy: str = "first"
+    train: bool = True
+    # run the Eq. 8 simulator inside build_report (modeled_iteration_s).
+    # Benchmarks/explorer want it; the training loader turns it off — the
+    # hot path should not pay a simulation whose result is only logged.
+    simulate: bool = True
+
+    def __post_init__(self):
+        if self.bucket_size < 1:
+            raise ValueError(f"bucket_size must be >= 1, got {self.bucket_size}")
+
+    @property
+    def ws(self) -> int:
+        return self.topology.ws
+
+    @property
+    def n_cp(self) -> int:
+        return self.topology.cp
+
+    @property
+    def cap(self) -> int:
+        """The C*N micro-batch token capacity (Eq. 10)."""
+        return self.bucket_size * self.topology.cp
+
+
+@dataclasses.dataclass
+class ScheduleReport:
+    """Uniform per-iteration telemetry, identical across policies.
+
+    ``rank_tokens[(ws, n_cp)]`` is the per-device token load including
+    ceil-divided shards of distributed packs — the same accounting
+    ``dist/plan.lower_schedule`` binds to physical devices, so downstream
+    consumers share one structure instead of recomputing it.
+    ``modeled_iteration_s`` / ``per_rank_s`` are the Eq. 8 simulator's
+    wall-time estimates and are ``None`` when the context lacks profiles.
+    """
+
+    policy: str
+    sched_time_s: float  # host-side schedule + validate + report time
+    n_microsteps: int
+    rank_tokens: np.ndarray  # (ws, n_cp) int64
+    imbalance: float  # max/mean per-device token load (Eq. 8 padding proxy)
+    dist_seq_frac: float  # fraction of sequences CP-sharded
+    dist_token_frac: float  # fraction of tokens in distributed packs
+    modeled_iteration_s: Optional[float] = None
+    per_rank_s: Optional[np.ndarray] = None  # (ws,) modeled
+
+    @property
+    def per_rank_tokens(self) -> np.ndarray:
+        """(ws,) total token load per DP rank (summed over CP ranks)."""
+        return self.rank_tokens.sum(axis=1)
+
+    def summary(self) -> str:
+        model = (
+            f" modeled={self.modeled_iteration_s * 1e3:.1f}ms"
+            if self.modeled_iteration_s is not None
+            else ""
+        )
+        return (
+            f"{self.policy}: mbs={self.n_microsteps} "
+            f"imbalance={self.imbalance:.2f} dist_tok={self.dist_token_frac:.2f}"
+            f"{model}"
+        )
+
+
+def build_report(
+    sched: GlobalSchedule,
+    ctx: SchedulingContext,
+    policy_name: str,
+    sched_time_s: float = 0.0,
+) -> ScheduleReport:
+    """Derive the uniform telemetry from any validated GlobalSchedule."""
+    ws, cp = sched.ws, sched.n_cp
+    rank_tokens = np.zeros((ws, cp), dtype=np.int64)
+    dist_seqs = 0
+    total_seqs = 0
+    dist_tokens = 0
+    for r in sched.ranks:
+        for d in r.dacp:
+            for j in range(cp):
+                rank_tokens[r.dp_rank, j] += int(
+                    d.lengths[d.assignment == j].sum()
+                )
+            dist_total = int(d.lengths[d.assignment == DISTRIBUTED].sum())
+            if dist_total:
+                rank_tokens[r.dp_rank, :] += -(-dist_total // cp)  # ceil share
+            dist_tokens += dist_total
+            dist_seqs += int(d.dist_indices.size)
+            total_seqs += len(d.lengths)
+    loads = rank_tokens.reshape(-1).astype(np.float64)
+    mean = loads.mean()
+    modeled = None
+    per_rank_s = None
+    if ctx.simulate and ctx.profile is not None and ctx.hw is not None:
+        rep = simulate_iteration(
+            sched, ctx.profile, ctx.hw,
+            speed_factors=ctx.topology.speed_factors, train=ctx.train,
+        )
+        modeled = rep.iteration_s
+        per_rank_s = rep.per_rank_s
+    total_tokens = int(sched.lengths.sum())
+    return ScheduleReport(
+        policy=policy_name,
+        sched_time_s=sched_time_s,
+        n_microsteps=max((len(r.microbatches) for r in sched.ranks), default=0),
+        rank_tokens=rank_tokens,
+        imbalance=float(loads.max() / mean) if mean > 0 else 1.0,
+        dist_seq_frac=dist_seqs / max(total_seqs, 1),
+        dist_token_frac=dist_tokens / max(total_tokens, 1),
+        modeled_iteration_s=modeled,
+        per_rank_s=per_rank_s,
+    )
+
+
+class SchedulerPolicy(abc.ABC):
+    """Base class / protocol for data-scheduling policies.
+
+    Subclasses set ``name`` and implement ``schedule``. Any object with a
+    compatible ``schedule(lengths, ctx)`` duck-types through ``get_policy``.
+    """
+
+    name: str = "unnamed"
+
+    @abc.abstractmethod
+    def schedule(
+        self, lengths: Sequence[int], ctx: SchedulingContext
+    ) -> GlobalSchedule:
+        """Partition one global batch for ``ctx.topology``. Must satisfy
+        Eq. 9 (each sequence exactly once), Eq. 10 (micro-batch capacity)
+        and per-micro-batch Eq. 7 (memory) — ``schedule_with_report``
+        re-validates."""
+
+    def schedule_with_report(
+        self, lengths: Sequence[int], ctx: SchedulingContext
+    ) -> "tuple[GlobalSchedule, ScheduleReport]":
+        # sched_time_s covers the WHOLE host-side cost — scheduling,
+        # re-validation and report derivation — so the paper's near-zero
+        # overhead claim is measured against what the loader actually pays
+        t0 = time.perf_counter()
+        sched = self.schedule(lengths, ctx)
+        sched.validate()
+        report = build_report(sched, ctx, self.name)
+        report.sched_time_s = time.perf_counter() - t0
+        return sched, report
+
+    def __call__(
+        self, lengths: Sequence[int], ctx: SchedulingContext
+    ) -> GlobalSchedule:
+        return self.schedule(lengths, ctx)
+
+    def __repr__(self) -> str:
+        return f"{type(self).__name__}(name={self.name!r})"
+
+
+__all__ = [
+    "SchedulingContext",
+    "ScheduleReport",
+    "SchedulerPolicy",
+    "build_report",
+]

@@ -1,0 +1,196 @@
+"""Registered scheduling policies — Skrull and the baselines it is evaluated
+against (paper §5/§6), each adapted to the SchedulerPolicy surface.
+
+  skrull            GDS (Alg. 2) + DACP (Alg. 1) — the paper's scheduler
+  skrull+refine     skrull + the Eq. 1-5 cost-aware local search
+                    (core/optimize.py); falls back to plain skrull when the
+                    context lacks profile/hw (refinement needs the cost model)
+  dacp-only         arrival-order batching, DACP per micro-batch — the
+                    paper's ablation step 1 (previously re-implemented by
+                    hand in bench_e2e_speedup and simulator.speedup)
+  deepspeed-static  DeepSpeed ZeRO+CP static provisioning, mbs=1, everything
+                    CP-sharded — the paper's baseline
+  deepspeed-packed  same with arrival-order packing (stronger-than-paper)
+  longalign-sorted  LongAlign's sorted batching [PAPERS.md]
+  chunkflow         ChunkFlow-style fixed token-budget chunks [PAPERS.md]:
+                    first-fit-decreasing into uniform-compute chunks, chunks
+                    LPT-balanced across DP ranks, DACP placement per chunk
+"""
+
+from __future__ import annotations
+
+from typing import List, Sequence
+
+import numpy as np
+
+from ..core.baselines import (
+    _all_distributed,
+    _pack_arrival,
+    deepspeed_static_schedule,
+    longalign_sorted_schedule,
+)
+from ..core.dacp import DACPSchedulingError, schedule_dacp
+from ..core.gds import (
+    GDSSchedulingError,
+    GlobalSchedule,
+    RankSchedule,
+    schedule_global_batch,
+)
+from ..core.optimize import cost_aware_refine
+from .api import SchedulerPolicy, SchedulingContext
+from .registry import register_policy
+
+
+@register_policy("skrull")
+class SkrullPolicy(SchedulerPolicy):
+    """Full GDS + DACP scheduling (paper Alg. 1-3)."""
+
+    name = "skrull"
+
+    def schedule(self, lengths, ctx: SchedulingContext) -> GlobalSchedule:
+        return schedule_global_batch(
+            lengths,
+            ctx.ws,
+            ctx.n_cp,
+            ctx.bucket_size,
+            ctx.profile,
+            speed_factors=ctx.topology.speed_factors,
+            rollback_policy=ctx.rollback_policy,
+        )
+
+
+@register_policy("skrull+refine")
+class SkrullRefinePolicy(SkrullPolicy):
+    """Skrull plus the beyond-paper cost-aware DACP refinement pass."""
+
+    name = "skrull+refine"
+
+    def schedule(self, lengths, ctx: SchedulingContext) -> GlobalSchedule:
+        sched = super().schedule(lengths, ctx)
+        if ctx.profile is None or ctx.hw is None:
+            return sched  # no cost model to refine against
+        for r in sched.ranks:
+            r.dacp = [
+                cost_aware_refine(d, ctx.profile, ctx.hw, train=ctx.train)
+                for d in r.dacp
+            ]
+        return sched
+
+
+def _dacp_per_microbatch(mb, lengths, ctx: SchedulingContext):
+    """DACP a micro-batch; fall back to all-distributed (always Eq. 7
+    feasible for totals <= C*N) if the greedy raises on a pathological mix."""
+    try:
+        return schedule_dacp(
+            lengths[mb], ctx.bucket_size, ctx.n_cp, ctx.profile,
+            ctx.rollback_policy,
+        )
+    except DACPSchedulingError:
+        return _all_distributed(mb, lengths, ctx.bucket_size, ctx.n_cp)
+
+
+@register_policy("dacp-only")
+class DacpOnlyPolicy(SchedulerPolicy):
+    """Round-robin DP dealing + arrival-order packing + DACP per micro-batch:
+    the paper's '+DACP' ablation (GDS disabled)."""
+
+    name = "dacp-only"
+
+    def schedule(self, lengths, ctx: SchedulingContext) -> GlobalSchedule:
+        s = np.asarray(lengths, dtype=np.int64)
+        ranks = []
+        for dp_rank in range(ctx.ws):
+            subset = np.arange(dp_rank, len(s), ctx.ws, dtype=np.int64)
+            mbs = _pack_arrival(subset, s, float(ctx.cap))
+            dacps = [_dacp_per_microbatch(mb, s, ctx) for mb in mbs]
+            ranks.append(RankSchedule(dp_rank, mbs, dacps))
+        sched = GlobalSchedule(ranks, s, ctx.bucket_size, ctx.n_cp)
+        sched.validate()  # Eq. 9/10, like every core schedule builder
+        return sched
+
+
+@register_policy("deepspeed-static")
+class DeepSpeedStaticPolicy(SchedulerPolicy):
+    name = "deepspeed-static"
+
+    def schedule(self, lengths, ctx: SchedulingContext) -> GlobalSchedule:
+        return deepspeed_static_schedule(
+            lengths, ctx.ws, ctx.n_cp, ctx.bucket_size, ctx.profile
+        )
+
+
+@register_policy("deepspeed-packed")
+class DeepSpeedPackedPolicy(SchedulerPolicy):
+    name = "deepspeed-packed"
+
+    def schedule(self, lengths, ctx: SchedulingContext) -> GlobalSchedule:
+        return deepspeed_static_schedule(
+            lengths, ctx.ws, ctx.n_cp, ctx.bucket_size, ctx.profile,
+            packing=True,
+        )
+
+
+@register_policy("longalign-sorted")
+class LongAlignSortedPolicy(SchedulerPolicy):
+    name = "longalign-sorted"
+
+    def schedule(self, lengths, ctx: SchedulingContext) -> GlobalSchedule:
+        return longalign_sorted_schedule(
+            lengths, ctx.ws, ctx.n_cp, ctx.bucket_size, ctx.profile
+        )
+
+
+@register_policy("chunkflow")
+class ChunkFlowPolicy(SchedulerPolicy):
+    """Fixed token-budget chunks in the spirit of ChunkFlow: first-fit-
+    decreasing packs sequences into chunks of near-uniform token count (one
+    chunk = one micro-batch), chunks are LPT-balanced across DP ranks, and
+    DACP places each chunk's sequences on the CP group. Uniform chunks give
+    steady per-step compute but, unlike GDS, ignore the FLOPs quadratic —
+    the gap Skrull's evaluation measures."""
+
+    name = "chunkflow"
+
+    def schedule(self, lengths, ctx: SchedulingContext) -> GlobalSchedule:
+        s = np.asarray(lengths, dtype=np.int64)
+        cap = float(ctx.cap)
+        chunks: List[List[int]] = []
+        loads: List[float] = []
+        for i in np.argsort(-s, kind="stable"):  # first-fit-decreasing
+            size = float(s[i])
+            for c, chunk in enumerate(chunks):
+                if loads[c] + size < cap:  # strict: Alg. 2 line 8 semantics
+                    chunk.append(int(i))
+                    loads[c] += size
+                    break
+            else:
+                chunks.append([int(i)])
+                loads.append(size)
+        # LPT chunks onto DP ranks (balance chunk-count * load, min-max)
+        rank_mbs: List[List[np.ndarray]] = [[] for _ in range(ctx.ws)]
+        rank_load = np.zeros(ctx.ws)
+        for c in np.argsort(-np.asarray(loads), kind="stable"):
+            r = int(np.argmin(rank_load))
+            rank_mbs[r].append(np.asarray(chunks[int(c)], dtype=np.int64))
+            rank_load[r] += loads[int(c)]
+        ranks = []
+        for dp_rank in range(ctx.ws):
+            dacps = [
+                _dacp_per_microbatch(mb, s, ctx) for mb in rank_mbs[dp_rank]
+            ]
+            ranks.append(RankSchedule(dp_rank, rank_mbs[dp_rank], dacps))
+        sched = GlobalSchedule(ranks, s, ctx.bucket_size, ctx.n_cp)
+        sched.validate()  # Eq. 9/10, like every core schedule builder
+        return sched
+
+
+__all__ = [
+    "SkrullPolicy",
+    "SkrullRefinePolicy",
+    "DacpOnlyPolicy",
+    "DeepSpeedStaticPolicy",
+    "DeepSpeedPackedPolicy",
+    "LongAlignSortedPolicy",
+    "ChunkFlowPolicy",
+    "GDSSchedulingError",
+]

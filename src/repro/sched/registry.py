@@ -1,0 +1,64 @@
+"""String-keyed policy registry.
+
+    @register_policy("skrull")
+    class SkrullPolicy(SchedulerPolicy): ...
+
+    get_policy("skrull").schedule(lengths, ctx)
+    list_policies()  # ["chunkflow", "dacp-only", ...]
+
+``get_policy`` also passes through ready-made instances (anything with a
+``schedule`` method), so APIs take ``policy: str | SchedulerPolicy``
+uniformly. Registration stores the *class* (or zero-arg factory); policies
+are stateless, so one cached instance per name is shared.
+"""
+
+from __future__ import annotations
+
+from typing import Callable, Dict, List, Union
+
+from .api import SchedulerPolicy
+
+_REGISTRY: Dict[str, Callable[[], SchedulerPolicy]] = {}
+_INSTANCES: Dict[str, SchedulerPolicy] = {}
+
+
+def register_policy(name: str) -> Callable:
+    """Class/factory decorator binding ``name`` in the registry."""
+
+    if not name or not isinstance(name, str):
+        raise ValueError(f"policy name must be a non-empty string, got {name!r}")
+
+    def deco(factory: Callable[[], SchedulerPolicy]):
+        if name in _REGISTRY:
+            raise ValueError(f"policy {name!r} is already registered")
+        _REGISTRY[name] = factory
+        return factory
+
+    return deco
+
+
+def get_policy(policy: Union[str, SchedulerPolicy]) -> SchedulerPolicy:
+    """Resolve a policy name or pass an instance through."""
+    if not isinstance(policy, str):
+        if hasattr(policy, "schedule"):
+            return policy
+        raise TypeError(
+            f"expected a policy name or an object with .schedule, got {policy!r}"
+        )
+    if policy not in _REGISTRY:
+        raise ValueError(
+            f"unknown scheduling policy {policy!r}; "
+            f"registered: {', '.join(list_policies())}"
+        )
+    if policy not in _INSTANCES:
+        inst = _REGISTRY[policy]()
+        inst.name = policy
+        _INSTANCES[policy] = inst
+    return _INSTANCES[policy]
+
+
+def list_policies() -> List[str]:
+    return sorted(_REGISTRY)
+
+
+__all__ = ["register_policy", "get_policy", "list_policies"]

@@ -1,0 +1,85 @@
+"""Topology — the one object that names the DP x CP (x pod) grid.
+
+Before this existed, ``ws`` / ``n_cp`` / ``pods`` ints were threaded loosely
+through gds/dacp/loader/dist/elastic and mutated in place on rescale.
+``Topology`` is frozen: an elastic rescale *rebuilds* it (``with_dp``), and
+straggler telemetry attaches per-DP-rank ``speed_factors`` without touching
+the grid (``with_speed_factors``). GDS bin-packs over the ``ws = dp * pods``
+DP ranks; DACP shards over the ``cp`` ranks of each CP group (DESIGN.md §6).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence, Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class Topology:
+    """Frozen description of the device grid a schedule targets.
+
+    ``speed_factors`` (optional, one per DP rank, mean ~1) bias GDS's
+    bin-packing toward faster ranks — the FT layer's straggler telemetry.
+    """
+
+    dp: int
+    cp: int = 1
+    pods: int = 1
+    speed_factors: Optional[Tuple[float, ...]] = None
+
+    def __post_init__(self):
+        if self.dp < 1 or self.cp < 1 or self.pods < 1:
+            raise ValueError(
+                f"topology extents must be >= 1, got dp={self.dp} "
+                f"cp={self.cp} pods={self.pods}"
+            )
+        if self.speed_factors is not None:
+            factors = tuple(float(f) for f in self.speed_factors)
+            if len(factors) != self.ws:
+                raise ValueError(
+                    f"speed_factors has {len(factors)} entries for "
+                    f"ws={self.ws} DP ranks"
+                )
+            if any(f <= 0 for f in factors):
+                raise ValueError("speed factors must be positive")
+            object.__setattr__(self, "speed_factors", factors)
+
+    @property
+    def ws(self) -> int:
+        """DP world size: the number of GDS bins (``pod x data`` extent)."""
+        return self.dp * self.pods
+
+    @property
+    def n_devices(self) -> int:
+        return self.dp * self.cp * self.pods
+
+    def with_speed_factors(
+        self, factors: Optional[Sequence[float]]
+    ) -> "Topology":
+        return dataclasses.replace(
+            self,
+            speed_factors=None if factors is None else tuple(float(f) for f in factors),
+        )
+
+    def with_dp(self, dp: int, pods: Optional[int] = None) -> "Topology":
+        """Elastic rescale to a new DP extent. Stale per-rank speed factors
+        are dropped — the new ranks start from uniform speed."""
+        return dataclasses.replace(
+            self, dp=dp, pods=self.pods if pods is None else pods,
+            speed_factors=None,
+        )
+
+    @staticmethod
+    def from_mesh(mesh) -> "Topology":
+        """Build from a jax mesh with (pod,) data, model axes (DESIGN.md §6)."""
+        from ..dist.sharding import mesh_axis_sizes
+
+        sizes = mesh_axis_sizes(mesh)
+        return Topology(
+            dp=sizes.get("data", 1),
+            cp=sizes.get("model", 1),
+            pods=sizes.get("pod", 1),
+        )
+
+
+__all__ = ["Topology"]

@@ -119,7 +119,12 @@ class Trainer:
     def train_step(self) -> Dict[str, float]:
         t0 = time.perf_counter()
         it = self.loader.next_iteration()
-        plan = lower_schedule(it.schedule, self.mesh) if self.dist else None
+        # lowering reuses the policy's ScheduleReport for per-device loads
+        plan = (
+            lower_schedule(it.schedule, self.mesh, report=it.report)
+            if self.dist
+            else None
+        )
         denom = jnp.float32(it.denominator)
         acc = tree_zeros_like(self.state.params)
         loss_sum = 0.0
@@ -134,8 +139,10 @@ class Trainer:
             valid += int(m["valid"])
         self.state, am = self._apply(self.state, acc)
         dt = time.perf_counter() - t0
-        # feed telemetry: per-rank projected times from the schedule report
+        # feed telemetry: the health monitor ingests the policy's schedule
+        # report (load attribution) alongside the measured step time
         if self.tcfg.straggler_aware:
+            self.health.ingest(it.report)
             for r in range(self.loader.ws):
                 self.health.beat(r, step_time_s=dt)
             self.loader.set_speed_factors(self.health.speed_factors())
@@ -149,8 +156,12 @@ class Trainer:
             "time_s": dt,
             "grad_norm": float(am["grad_norm"]),
         }
-        if plan is not None:
-            out["imbalance"] = plan.imbalance()
+        if it.report is not None:
+            out["policy"] = it.report.policy
+            out["imbalance"] = it.report.imbalance
+            out["dist_token_frac"] = it.report.dist_token_frac
+            if it.report.modeled_iteration_s is not None:
+                out["modeled_s"] = it.report.modeled_iteration_s
         return out
 
     def run(self, steps: Optional[int] = None) -> List[Dict[str, float]]:

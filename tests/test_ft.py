@@ -71,8 +71,9 @@ def test_elastic_rescale_roundtrip(tiny_dense, tmp_path):
     state = init_train_state(params)
     ckpt = CheckpointManager(str(tmp_path), async_save=False)
     ckpt.save(7, state)
-    mesh, new_state, meta = rescale(ckpt, state, new_dp=1, new_cp=1)
+    mesh, new_state, meta, topo = rescale(ckpt, state, new_dp=1, new_cp=1)
     assert meta["step"] == 7
+    assert (topo.dp, topo.cp, topo.pods) == (1, 1, 1)
     for a, b in zip(jax.tree.leaves(state.params), jax.tree.leaves(new_state.params)):
         assert (np.asarray(a) == np.asarray(b)).all()
     # placed on the new mesh with real shardings

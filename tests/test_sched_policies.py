@@ -1,0 +1,247 @@
+"""repro.sched: policy registry, Topology, shared validate property,
+skrull<->schedule_global_batch equivalence, ScheduleInvariantError."""
+
+import dataclasses
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import ScheduleInvariantError
+from repro.core.dacp import DISTRIBUTED, DACPResult
+from repro.core.gds import GlobalSchedule, schedule_global_batch
+from repro.core.optimize import _feasible_after
+from repro.core.perf_model import H100, ModelProfile, estimate_bytes_per_token
+from repro.sched import (
+    SchedulerPolicy,
+    SchedulingContext,
+    Topology,
+    get_policy,
+    list_policies,
+    register_policy,
+)
+from repro.sched import registry as _registry
+
+PROF = ModelProfile(
+    hidden=896, kv_dim=128, n_layers=24, d_ff=4864, vocab=151936,
+    bytes_per_token=estimate_bytes_per_token(896, 24),
+)
+
+
+def _ctx(dp=4, cp=8, pods=1, bucket=4000, **kw):
+    return SchedulingContext(
+        topology=Topology(dp=dp, cp=cp, pods=pods), bucket_size=bucket,
+        profile=PROF, hw=H100, **kw,
+    )
+
+
+# -- Topology ----------------------------------------------------------------
+
+
+def test_topology_extents():
+    t = Topology(dp=4, cp=8, pods=2)
+    assert t.ws == 8 and t.n_devices == 64
+    with pytest.raises(ValueError):
+        Topology(dp=0, cp=1)
+
+
+def test_topology_is_frozen():
+    t = Topology(dp=2, cp=2)
+    with pytest.raises(dataclasses.FrozenInstanceError):
+        t.dp = 4
+
+
+def test_topology_speed_factors():
+    t = Topology(dp=2, cp=2, speed_factors=[1.0, 3.0])
+    assert t.speed_factors == (1.0, 3.0)
+    with pytest.raises(ValueError):  # one factor per DP rank
+        Topology(dp=4, cp=2, speed_factors=[1.0, 2.0])
+    with pytest.raises(ValueError):
+        Topology(dp=2, cp=2, speed_factors=[1.0, -1.0])
+
+
+def test_topology_rescale_drops_stale_factors():
+    t = Topology(dp=4, cp=8, speed_factors=[1.0, 1.0, 1.0, 2.0])
+    t2 = t.with_dp(2)
+    assert (t2.dp, t2.cp, t2.speed_factors) == (2, 8, None)
+    assert t.dp == 4  # rebuilt, not mutated
+
+
+# -- registry ----------------------------------------------------------------
+
+
+def test_registry_lists_shipped_policies():
+    names = list_policies()
+    assert len(names) >= 5
+    for expected in (
+        "skrull", "skrull+refine", "deepspeed-static", "longalign-sorted",
+        "chunkflow", "dacp-only",
+    ):
+        assert expected in names
+
+
+def test_get_policy_unknown_name():
+    with pytest.raises(ValueError, match="registered"):
+        get_policy("no-such-policy")
+
+
+def test_get_policy_instance_passthrough():
+    inst = get_policy("skrull")
+    assert get_policy(inst) is inst
+    with pytest.raises(TypeError):
+        get_policy(42)
+
+
+def test_register_policy_duplicate_and_custom():
+    class EchoSkrull(SchedulerPolicy):
+        def schedule(self, lengths, ctx):
+            return schedule_global_batch(
+                lengths, ctx.ws, ctx.n_cp, ctx.bucket_size, ctx.profile
+            )
+
+    try:
+        register_policy("test-echo")(EchoSkrull)
+        assert "test-echo" in list_policies()
+        sched = get_policy("test-echo").schedule([100, 200, 300], _ctx(dp=1, cp=1))
+        sched.validate()
+        with pytest.raises(ValueError, match="already registered"):
+            register_policy("test-echo")(EchoSkrull)
+    finally:  # keep the global registry clean for other tests
+        _registry._REGISTRY.pop("test-echo", None)
+        _registry._INSTANCES.pop("test-echo", None)
+
+
+def test_core_deprecation_shim():
+    import repro.core as core
+
+    with pytest.warns(DeprecationWarning):
+        assert core.get_policy is get_policy or callable(core.get_policy)
+
+
+# -- shared validate property over every registered policy -------------------
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n_body=st.integers(4, 24),
+    n_tail=st.integers(0, 5),
+    grid=st.sampled_from([(1, 1, 1), (2, 2, 1), (4, 8, 1), (2, 4, 2)]),
+    seed=st.integers(0, 10_000),
+)
+def test_every_policy_schedules_and_validates(n_body, n_tail, grid, seed):
+    """Every registered policy must emit a GlobalSchedule passing Eq. 9
+    (partition) + Eq. 10 (capacity) + per-micro-batch Eq. 7 (memory) on
+    random bimodal/long-tail mixtures and topologies, with a sane report."""
+    dp, cp, pods = grid
+    bucket = 4000
+    cap = bucket * cp - cp
+    rng = np.random.default_rng(seed)
+    body = rng.integers(10, 600, size=n_body)
+    tail = rng.integers(bucket // 2, cap + 1, size=n_tail)
+    lengths = np.minimum(np.concatenate([body, tail]), cap)
+    ctx = _ctx(dp=dp, cp=cp, pods=pods, bucket=bucket)
+    for name in list_policies():
+        sched, rep = get_policy(name).schedule_with_report(lengths, ctx)
+        assert isinstance(sched, GlobalSchedule)
+        sched.validate()
+        total = sum(len(mb) for r in sched.ranks for mb in r.microbatches)
+        assert total == len(lengths), f"{name}: Eq. 9 partition broken"
+        assert rep.policy == name
+        assert rep.rank_tokens.shape == (ctx.ws, cp)
+        assert 0.0 <= rep.dist_token_frac <= 1.0
+        assert 0.0 <= rep.dist_seq_frac <= 1.0
+        assert rep.imbalance >= 1.0 - 1e-9
+        assert rep.n_microsteps == max(len(r.microbatches) for r in sched.ranks)
+        assert rep.modeled_iteration_s > 0  # profile+hw present in ctx
+
+
+# -- skrull adapter equivalence ----------------------------------------------
+
+
+def _assert_schedules_identical(a: GlobalSchedule, b: GlobalSchedule):
+    assert a.ws == b.ws and a.n_cp == b.n_cp and a.bucket_size == b.bucket_size
+    assert np.array_equal(a.lengths, b.lengths)
+    for ra, rb in zip(a.ranks, b.ranks):
+        assert ra.dp_rank == rb.dp_rank
+        assert len(ra.microbatches) == len(rb.microbatches)
+        for mba, mbb in zip(ra.microbatches, rb.microbatches):
+            assert np.array_equal(mba, mbb)
+        for da, db in zip(ra.dacp, rb.dacp):
+            assert np.array_equal(da.assignment, db.assignment)
+            assert np.array_equal(da.lengths, db.lengths)
+
+
+def test_skrull_policy_reproduces_schedule_global_batch():
+    rng = np.random.default_rng(3)
+    lengths = rng.integers(50, 2000, size=64)
+    a = get_policy("skrull").schedule(lengths, _ctx())
+    b = schedule_global_batch(lengths, ws=4, n_cp=8, bucket_size=4000, profile=PROF)
+    _assert_schedules_identical(a, b)
+
+
+def test_skrull_policy_reproduces_with_speed_factors():
+    rng = np.random.default_rng(4)
+    lengths = rng.integers(50, 2000, size=32)
+    factors = [1.0, 2.0]
+    ctx = SchedulingContext(
+        topology=Topology(dp=2, cp=4, speed_factors=factors),
+        bucket_size=4000, profile=PROF, hw=H100,
+    )
+    a = get_policy("skrull").schedule(lengths, ctx)
+    b = schedule_global_batch(
+        lengths, ws=2, n_cp=4, bucket_size=4000, profile=PROF,
+        speed_factors=factors,
+    )
+    _assert_schedules_identical(a, b)
+
+
+def test_deepspeed_static_shards_everything():
+    rng = np.random.default_rng(5)
+    lengths = rng.integers(50, 2000, size=16)
+    _, rep = get_policy("deepspeed-static").schedule_with_report(lengths, _ctx())
+    assert rep.dist_seq_frac == 1.0 and rep.dist_token_frac == 1.0
+
+
+def test_refine_policy_never_worse_on_model():
+    rng = np.random.default_rng(6)
+    lengths = np.minimum(rng.integers(500, 30_000, size=24), 4000 * 8 - 8)
+    ctx = _ctx()
+    _, base = get_policy("skrull").schedule_with_report(lengths, ctx)
+    _, refined = get_policy("skrull+refine").schedule_with_report(lengths, ctx)
+    assert refined.modeled_iteration_s <= base.modeled_iteration_s * (1 + 1e-9)
+
+
+# -- ScheduleInvariantError --------------------------------------------------
+
+
+def _infeasible_dacp():
+    return DACPResult(
+        assignment=np.array([0, 0]), lengths=np.array([900, 900]),
+        n_cp=2, bucket_size=1000,
+    )
+
+
+def test_validate_raises_schedule_invariant_error():
+    with pytest.raises(ScheduleInvariantError):
+        _infeasible_dacp().validate()
+    assert not _feasible_after(_infeasible_dacp())
+    ok = DACPResult(
+        assignment=np.array([0, DISTRIBUTED]), lengths=np.array([900, 900]),
+        n_cp=2, bucket_size=1400,
+    )
+    assert _feasible_after(ok)
+
+
+def test_global_schedule_eq9_violation():
+    lengths = np.array([100, 200])
+    d = DACPResult(
+        assignment=np.array([0]), lengths=lengths[:1], n_cp=1, bucket_size=1000
+    )
+    from repro.core.gds import RankSchedule
+
+    sched = GlobalSchedule(
+        ranks=[RankSchedule(0, [np.array([0])], [d])],  # seq 1 never scheduled
+        lengths=lengths, bucket_size=1000, n_cp=1,
+    )
+    with pytest.raises(ScheduleInvariantError, match="Eq.9"):
+        sched.validate()
