@@ -8,6 +8,7 @@ Prints ``name,us_per_call,derived`` CSV rows (stub contract). Sections:
   fig3    — end-to-end speedup replay (+ step-by-step DACP/GDS/cost-aware)
   fig4    — speedup vs batch size
   policies— every registered scheduling policy on one mixture (repro.sched)
+  pipeline— schedule-ahead prefetch vs serial (writes BENCH_pipeline.json)
   sched   — online scheduling overhead
   kernels — kernel microbench + Pallas correctness/structure
   roofline— summary over the dry-run artifact (if present)
@@ -28,6 +29,7 @@ def main() -> None:
         bench_e2e_speedup,
         bench_flops_curve,
         bench_kernels,
+        bench_pipeline,
         bench_policies,
         bench_scheduler,
         bench_v5e_projection,
@@ -41,6 +43,7 @@ def main() -> None:
     bench_e2e_speedup.run()
     bench_batchsize.run()
     bench_policies.run()
+    bench_pipeline.run()  # writes BENCH_pipeline.json
     bench_scheduler.run()
     bench_kernels.run()
     bench_v5e_projection.run(iters=6)

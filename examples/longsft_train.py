@@ -27,6 +27,8 @@ def main():
     ap.add_argument("--steps", type=int, default=200)
     ap.add_argument("--ckpt", default="artifacts/longsft_ckpt")
     ap.add_argument("--batch", type=int, default=16)
+    ap.add_argument("--prefetch-depth", type=int, default=2,
+                    help="schedule-ahead queue depth; 0 = serial path")
     args = ap.parse_args()
 
     # ~100M params: qwen-0.5b family at half width/depth
@@ -57,6 +59,7 @@ def main():
         TrainerConfig(
             total_steps=args.steps, lr=3e-4, warmup=20,
             ckpt_every=25, ckpt_dir=args.ckpt, log_every=5,
+            prefetch_depth=args.prefetch_depth,
         ),
     )
     resumed = trainer.maybe_resume()

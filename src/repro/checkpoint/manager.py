@@ -28,7 +28,10 @@ import numpy as np
 
 def _flatten(tree: Any) -> Tuple[List[np.ndarray], Any]:
     leaves, treedef = jax.tree.flatten(tree)
-    return [np.asarray(x) for x in leaves], treedef
+    # one batched device_get instead of per-leaf np.asarray: with the
+    # schedule-ahead trainer this D2H gather is the only remaining sync on
+    # the save path, so fetch all leaves in a single transfer
+    return [np.asarray(x) for x in jax.device_get(leaves)], treedef
 
 
 class CheckpointManager:

@@ -24,6 +24,7 @@ monitor and plan lowering to share.
 from __future__ import annotations
 
 import dataclasses
+import threading
 import time
 from typing import Dict, Iterator, List, Optional, Sequence, Union
 
@@ -73,6 +74,16 @@ class IterationBatch:
     ``microbatches[m][i]`` is DP rank i's m-th micro-batch (empty-padded).
     ``denominator`` is the global valid-token count for loss normalisation.
     ``report`` is the policy's uniform telemetry (repro.sched.ScheduleReport).
+
+    Schedule-ahead fields (repro.pipeline): ``loader_state`` is the cursor
+    snapshot from BEFORE this batch's indices were drawn and
+    ``loader_state_end`` from after — with a prefetcher running ``depth``
+    iterations ahead, checkpoints save the consumed batch's *end* state (not
+    the loader's live cursor) so resume replays exactly the unconsumed
+    stream, and ``Prefetcher.flush`` rewinds to a queued batch's *pre* state.
+    ``telemetry_version`` stamps which straggler-feedback generation this
+    batch was scheduled under; ``produce_time_s`` is the full host cost
+    (schedule + validate + pack) the pipeline tries to hide.
     """
 
     microbatches: List[List[PackedMicrobatch]]
@@ -80,6 +91,11 @@ class IterationBatch:
     schedule: GlobalSchedule
     sched_time_s: float
     report: Optional[ScheduleReport] = None
+    indices: Optional[np.ndarray] = None
+    loader_state: Optional[LoaderState] = None
+    loader_state_end: Optional[LoaderState] = None
+    telemetry_version: int = 0
+    produce_time_s: float = 0.0
 
     @property
     def n_microsteps(self) -> int:
@@ -124,6 +140,14 @@ class SkrullDataLoader:
             policy = "skrull+refine"  # legacy flag for the refinement pass
         self.policy = get_policy(policy)
         self._state = LoaderState(epoch=0, cursor=0, seed=seed)
+        self._telemetry_version = 0
+        # serialises cursor/topology mutation against a schedule-ahead
+        # producer thread (repro.pipeline): a direct set_topology /
+        # set_speed_factors / restore while next_iteration is in flight sees
+        # a consistent loader, never a half-updated topology/ladder pair.
+        # Uncontended in the serial path; RLock because next_iteration calls
+        # state()/scheduling_context() internally.
+        self._mu = threading.RLock()
 
     # -- topology views ------------------------------------------------------
     @property
@@ -140,14 +164,30 @@ class SkrullDataLoader:
 
     # -- checkpointable state ------------------------------------------------
     def state(self) -> LoaderState:
-        return dataclasses.replace(self._state)
+        with self._mu:
+            return dataclasses.replace(self._state)
 
     def restore(self, state: LoaderState) -> None:
-        self._state = dataclasses.replace(state)
+        with self._mu:
+            self._state = dataclasses.replace(state)
 
-    def set_speed_factors(self, factors: Optional[Sequence[float]]) -> None:
-        """FT hook: straggler telemetry updates next iteration's bin-packing."""
-        self.topology = self.topology.with_speed_factors(factors)
+    def set_speed_factors(
+        self,
+        factors: Optional[Sequence[float]],
+        version: Optional[int] = None,
+    ) -> None:
+        """FT hook: straggler telemetry updates next iteration's bin-packing.
+
+        ``version`` is the HealthMonitor's telemetry version; with a
+        prefetcher the factors are applied iterations after they were
+        measured, and each scheduled batch records the version it used so
+        staleness is observable. Unversioned callers get a bump per update.
+        """
+        with self._mu:
+            self.topology = self.topology.with_speed_factors(factors)
+            self._telemetry_version = (
+                int(version) if version is not None else self._telemetry_version + 1
+            )
 
     def set_topology(self, topology: Union[int, Topology]) -> None:
         """Elastic rescale: schedule for a new grid from the next iteration.
@@ -155,15 +195,16 @@ class SkrullDataLoader:
         Accepts a full ``Topology`` or (legacy) a bare DP world size, which
         rebuilds the current topology with ``pods`` folded into ``dp``.
         """
-        if isinstance(topology, Topology):
-            if topology.cp != self.topology.cp:
-                # the bucket ladder is a per-chip property of C and N
-                self.ladder = bucket_ladder(
-                    self.c_budget, topology.cp, self._ladder_steps
-                )
-            self.topology = topology
-        else:
-            self.topology = Topology(dp=int(topology), cp=self.topology.cp)
+        with self._mu:
+            if isinstance(topology, Topology):
+                if topology.cp != self.topology.cp:
+                    # the bucket ladder is a per-chip property of C and N
+                    self.ladder = bucket_ladder(
+                        self.c_budget, topology.cp, self._ladder_steps
+                    )
+                self.topology = topology
+            else:
+                self.topology = Topology(dp=int(topology), cp=self.topology.cp)
 
     def set_policy(self, policy: Union[str, SchedulerPolicy]) -> None:
         self.policy = get_policy(policy)
@@ -197,21 +238,29 @@ class SkrullDataLoader:
             profile=self.profile,
             hw=self.hw,
             simulate=False,  # hot path: don't pay Eq. 8 simulation per step
+            telemetry_version=self._telemetry_version,
         )
 
     def next_iteration(self) -> IterationBatch:
-        indices = self._next_indices()
+        t_produce = time.perf_counter()
+        with self._mu:
+            state_before = self.state()  # pre-draw snapshot: flush/rewind anchor
+            indices = self._next_indices()
+            state_after = self.state()  # post-draw snapshot: resume anchor
+            # bind the grid + ladder this batch schedules against; a
+            # concurrent set_topology takes effect from the NEXT iteration
+            ctx = self.scheduling_context()
+            ladder = self.ladder
+            ws = ctx.ws
         lengths = self.dataset.lengths(indices)
         # overlong sequences are truncated strictly below the schedulable
         # maximum C*N (Alg. 2 line 8 rejects micro-batches at >= C*N, so a
         # sequence of exactly C*N could never schedule); production
         # alternative: route to a bigger-CP job queue.
-        cap = self.c_sched * self.n_cp - self.n_cp
+        cap = ctx.bucket_size * ctx.n_cp - ctx.n_cp
         lengths = np.minimum(lengths, cap)
 
-        sched, report = self.policy.schedule_with_report(
-            lengths, self.scheduling_context()
-        )
+        sched, report = self.policy.schedule_with_report(lengths, ctx)
 
         # ---- cross-rank step alignment --------------------------------------
         # One SPMD micro-step = one pjit call over the whole mesh: all DP
@@ -231,15 +280,15 @@ class SkrullDataLoader:
             queues.append(q)
 
         steps: List[List[PackedMicrobatch]] = []
-        cursors = [0] * self.ws
-        while any(cursors[i] < len(queues[i]) for i in range(self.ws)):
-            active = [i for i in range(self.ws) if cursors[i] < len(queues[i])]
+        cursors = [0] * ws
+        while any(cursors[i] < len(queues[i]) for i in range(ws)):
+            active = [i for i in range(ws) if cursors[i] < len(queues[i])]
             # try to advance everyone
             chosen = list(active)
             while True:
                 max_loc = max(queues[i][cursors[i]][2][0] for i in chosen)
                 max_dist = max(queues[i][cursors[i]][2][1] for i in chosen)
-                if ladder_fits(self.ladder, max_loc, max_dist):
+                if ladder_fits(ladder, max_loc, max_dist):
                     break
                 # drop the rank whose plan least matches the majority shape:
                 # keep dist-dominant plans together (they forced max_dist)
@@ -252,12 +301,12 @@ class SkrullDataLoader:
                 victim = max(drop_pool, key=lambda i: queues[i][cursors[i]][2][0])
                 chosen.remove(victim)
             spec = choose_bucket(
-                self.ladder,
+                ladder,
                 max(queues[i][cursors[i]][2][0] for i in chosen),
                 max(queues[i][cursors[i]][2][1] for i in chosen),
             )
             row: List[PackedMicrobatch] = []
-            for i in range(self.ws):
+            for i in range(ws):
                 if i in chosen:
                     mb_idx, plan, _ = queues[i][cursors[i]]
                     samples = []
@@ -279,6 +328,11 @@ class SkrullDataLoader:
             schedule=sched,
             sched_time_s=report.sched_time_s,
             report=report,
+            indices=indices,
+            loader_state=state_before,
+            loader_state_end=state_after,
+            telemetry_version=self._telemetry_version,
+            produce_time_s=time.perf_counter() - t_produce,
         )
 
     def __iter__(self) -> Iterator[IterationBatch]:

@@ -164,6 +164,21 @@ class DistExecutor:
         self.mesh = mesh
         self._buffer_sh = buffer_sharding(mesh)
         self._replicated = NamedSharding(mesh, P())
+        # shape -> chosen sharding; bounded by the packing ladder, so the
+        # divisibility checks run once per bucket shape, not once per put
+        self._sh_cache: Dict[tuple, Any] = {}
+
+    def _sharding_for(self, shape: tuple):
+        sh = self._sh_cache.get(shape)
+        if sh is None:
+            ok = (
+                len(shape) == 3
+                and _div(shape[0], axis_size(self.mesh, dp_axes(self.mesh)))
+                and _div(shape[1], axis_size(self.mesh, "model"))
+            )
+            sh = self._buffer_sh if ok else self._replicated
+            self._sh_cache[shape] = sh
+        return sh
 
     # -- state ---------------------------------------------------------------
     def place_state(self, state: Any) -> Any:
@@ -184,16 +199,17 @@ class DistExecutor:
         """(ws, n_cp, c) host buffers -> device, DP/CP dims on the mesh.
 
         Falls back to replication when the stacked dims don't divide the mesh
-        (e.g. a debug loader with ws smaller than the DP extent)."""
+        (e.g. a debug loader with ws smaller than the DP extent).
+
+        One async ``device_put`` straight from the host array per buffer —
+        the old ``jnp.asarray`` first committed to the default device and
+        re-placed, a double copy the transfer pipeline (repro.pipeline)
+        would otherwise hide but single-program callers still paid.
+        """
         out = {}
         for k, v in buffers.items():
-            arr = jnp.asarray(v)
-            ok = (
-                arr.ndim == 3
-                and _div(arr.shape[0], axis_size(self.mesh, dp_axes(self.mesh)))
-                and _div(arr.shape[1], axis_size(self.mesh, "model"))
-            )
-            out[k] = jax.device_put(arr, self._buffer_sh if ok else self._replicated)
+            arr = np.asarray(v)
+            out[k] = jax.device_put(arr, self._sharding_for(arr.shape))
         return out
 
 

@@ -36,21 +36,36 @@ def rescale(
     pods: int = 1,
     step: Optional[int] = None,
     topology: Optional[Topology] = None,
+    prefetcher: Any = None,
+    health: Any = None,
 ) -> Tuple[Any, Any, dict, Topology]:
     """Returns (mesh, restored_state_on_new_mesh, meta, topology).
 
     Pass either a ready ``topology`` or the legacy ``new_dp``/``new_cp`` ints
     (a fresh Topology is built from them — never mutate the old one).
+
+    Schedule-ahead jobs pass their ``prefetcher`` (repro.pipeline): batches
+    queued for the old grid are flushed — the loader rewinds to the earliest
+    unconsumed snapshot, so the same samples are re-scheduled for the new
+    topology. ``health`` (ft.health.HealthMonitor) is resized to the new DP
+    world size so its speed/heartbeat arrays don't go stale (they would
+    otherwise keep the old ws until the next explicit resize).
     """
     if topology is None:
         if new_dp is None or new_cp is None:
             raise ValueError("pass topology=Topology(...) or new_dp= and new_cp=")
         topology = Topology(dp=new_dp, cp=new_cp, pods=pods)
+    # validate inputs before the side-effecting flush (halts the producer,
+    # drops queued work, rewinds the loader cursor)
+    if prefetcher is not None:
+        prefetcher.flush()
     mesh = make_mesh(topology.dp, topology.cp, topology.pods)
     state, meta = ckpt.restore(template_state, step=step)
     # re-shard: params + AdamW mirrors onto the new mesh's ZeRO-3 layout,
     # step counter replicated (dist.executor owns the placement rules)
     new_state = DistExecutor(mesh).place_state(state)
+    if health is not None:
+        health.resize(topology.ws)
     return mesh, new_state, meta, topology
 
 

@@ -32,6 +32,18 @@ class HealthMonitor:
         self._speed = np.ones(self.ws)
         self.last_report = None
         self._imbalance_ema: Optional[float] = None
+        self._version = 0
+
+    @property
+    def telemetry_version(self) -> int:
+        """Monotonic generation counter, bumped on every timing update.
+
+        Schedules stamp the version they consumed (SchedulingContext /
+        ScheduleReport.telemetry_version); with a schedule-ahead prefetcher
+        ``telemetry_version - report.telemetry_version`` is the feedback
+        staleness in updates, an explicit observable instead of a silent race.
+        """
+        return self._version
 
     def ingest(self, report) -> None:
         """Consume the iteration's ScheduleReport (repro.sched): per-rank load
@@ -57,6 +69,26 @@ class HealthMonitor:
             # relative speed: inverse step time, normalised below
             inv = 1.0 / step_time_s
             self._speed[rank] = self.ema * self._speed[rank] + (1 - self.ema) * inv
+            self._version += 1
+
+    def beat_round(self, step_times_s: Sequence[float], now: Optional[float] = None):
+        """One full round of per-rank step times (one per DP rank).
+
+        Times are normalised by the round's mean before the EMA, so only the
+        *relative* spread feeds the speed estimate: the iteration's absolute
+        wall-clock (which every rank shares in a lock-step SPMD step) cancels
+        exactly. That makes the factors a deterministic function of the
+        measured load shares — identical across serial and pipelined runs.
+        """
+        times = np.asarray(step_times_s, dtype=np.float64)
+        if len(times) != self.ws:
+            raise ValueError(f"got {len(times)} step times for ws={self.ws}")
+        mean = times.mean()
+        if mean <= 0:
+            return
+        rel = np.maximum(times / mean, 1e-9)
+        for r in range(self.ws):
+            self.beat(r, step_time_s=float(rel[r]), now=now)
 
     def failed_ranks(self, now: Optional[float] = None) -> List[int]:
         t = time.monotonic() if now is None else now
@@ -66,9 +98,20 @@ class HealthMonitor:
             if t - last > self.heartbeat_timeout_s
         ]
 
-    def speed_factors(self) -> np.ndarray:
+    def speed_factors(self, deadband: float = 0.0) -> Optional[np.ndarray]:
+        """Per-rank relative speed, mean ~1, clipped to [0.2, 5].
+
+        ``deadband > 0`` returns ``None`` when every factor is within
+        ``deadband`` of 1.0: discrete bin-packing should not chase
+        sub-noise-level speed deltas, and a healthy fleet keeps the factors
+        OFF entirely — which also keeps serial and schedule-ahead runs on
+        bit-identical schedules (the feedback only differs when it matters).
+        """
         s = self._speed / max(self._speed.mean(), 1e-9)
-        return np.clip(s, 0.2, 5.0)
+        s = np.clip(s, 0.2, 5.0)
+        if deadband > 0.0 and np.all(np.abs(s - 1.0) <= deadband):
+            return None
+        return s
 
     def remove_rank(self, rank: int):
         self._last_beat.pop(rank, None)

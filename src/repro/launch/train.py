@@ -36,6 +36,9 @@ def main():
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--policy", default="skrull", choices=list_policies(),
                     help="registered scheduling policy (repro.sched)")
+    ap.add_argument("--prefetch-depth", type=int, default=0,
+                    help="schedule-ahead queue depth (repro.pipeline); "
+                         "0 = serial reference path, bit-identical losses")
     ap.add_argument("--cost-aware", action="store_true",
                     help="legacy alias for --policy skrull+refine")
     ap.add_argument("--reduced", action="store_true", help="use the smoke-size config")
@@ -67,7 +70,7 @@ def main():
     policy = "skrull+refine" if args.cost_aware and args.policy == "skrull" else args.policy
     print(f"arch={cfg.name} params={cfg.param_count()/1e9:.2f}B "
           f"devices={n_dev} dp={topo.dp} cp={topo.cp} pods={topo.pods} "
-          f"policy={policy} "
+          f"policy={policy} prefetch={args.prefetch_depth} "
           f"mesh={'spmd' if mesh is not None else 'single-program'}")
 
     dataset = SyntheticSFTDataset(
@@ -95,6 +98,7 @@ def main():
         TrainerConfig(
             total_steps=args.steps, lr=args.lr,
             ckpt_dir=args.ckpt_dir, ckpt_every=max(args.steps // 10, 1),
+            prefetch_depth=args.prefetch_depth,
         ),
         mesh=mesh,
     )

@@ -1,0 +1,25 @@
+"""repro.pipeline — asynchronous schedule-ahead execution (DESIGN.md §10).
+
+Three stages turn the serial loader→trainer→device dataflow into a pipeline:
+
+* ``Prefetcher`` (prefetch.py) — runs GDS+DACP+packing ``depth`` iterations
+  ahead on a background thread, with bit-exact resume snapshots and
+  staleness-versioned straggler feedback.
+* ``TransferPipeline`` (transfer.py) — double-buffered host stacking + H2D,
+  staging micro-step m+1 while m computes.
+* metrics.py — sync-free accounting proving how much host time was hidden.
+"""
+
+from .metrics import PrefetchStats, TransferStats, pipeline_summary
+from .prefetch import Prefetcher
+from .transfer import TransferPipeline, default_put, shape_key
+
+__all__ = [
+    "Prefetcher",
+    "TransferPipeline",
+    "default_put",
+    "shape_key",
+    "PrefetchStats",
+    "TransferStats",
+    "pipeline_summary",
+]

@@ -1,0 +1,99 @@
+"""Sync-free pipeline telemetry (docs/DESIGN.md §10).
+
+The schedule-ahead pipeline's whole point is that host work (GDS+DACP,
+packing, stacking, H2D) stops appearing in step time. These counters make
+that claim *measurable* without adding any host<->device syncs themselves:
+everything here is host-side wall-clock bookkeeping.
+
+Accounting model: every consumed ``IterationBatch`` carries
+``produce_time_s`` — the full host cost of scheduling + packing it. The
+consumer (the trainer) pays only ``wait_s``, the time it actually blocked on
+the queue. The difference is scheduling time *hidden* behind device compute:
+
+    overlap_efficiency = hidden_s / produce_s = 1 - wait_s / produce_s
+
+In the serial path (depth=0) the consumer runs ``next_iteration`` inline, so
+``wait_s == produce_s`` and efficiency is exactly 0 — the serial baseline
+falls out of the same accounting instead of being special-cased.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Set, Tuple
+
+
+@dataclasses.dataclass
+class PrefetchStats:
+    """Producer/consumer counters for one ``Prefetcher``."""
+
+    produced: int = 0  # batches the producer finished (incl. still queued)
+    consumed: int = 0  # batches the trainer pulled
+    wait_s: float = 0.0  # consumer-visible stall waiting on the queue
+    produce_s: float = 0.0  # host schedule+pack time of CONSUMED batches
+    flushes: int = 0  # staleness flushes (topology change / resume)
+
+    @property
+    def hidden_s(self) -> float:
+        """Host scheduling time that never hit the critical path."""
+        return max(self.produce_s - self.wait_s, 0.0)
+
+    @property
+    def overlap_efficiency(self) -> float:
+        """Fraction of sched+pack time hidden behind device compute.
+
+        0.0 for the serial path by construction; approaches 1.0 when the
+        queue never runs dry.
+        """
+        if self.produce_s <= 0.0:
+            return 0.0
+        return self.hidden_s / self.produce_s
+
+    def as_dict(self) -> Dict[str, float]:
+        return {
+            "produced": self.produced,
+            "consumed": self.consumed,
+            "wait_s": self.wait_s,
+            "produce_s": self.produce_s,
+            "hidden_s": self.hidden_s,
+            "overlap_efficiency": self.overlap_efficiency,
+            "flushes": self.flushes,
+        }
+
+
+@dataclasses.dataclass
+class TransferStats:
+    """Double-buffered H2D staging counters for one ``TransferPipeline``."""
+
+    staged: int = 0  # micro-steps staged (stack_row + device_put issued)
+    overlapped: int = 0  # of those, staged while a previous step computed
+    shape_keys: Set[Tuple] = dataclasses.field(default_factory=set)
+
+    @property
+    def n_shapes(self) -> int:
+        """Distinct bucket shapes seen — must stay bounded by the packing
+        ladder or the compiled-step cache is being thrashed."""
+        return len(self.shape_keys)
+
+    def as_dict(self) -> Dict[str, float]:
+        return {
+            "staged": self.staged,
+            "overlapped": self.overlapped,
+            "n_shapes": self.n_shapes,
+        }
+
+
+def pipeline_summary(
+    prefetch_stats: Optional[PrefetchStats],
+    transfer_stats: Optional[TransferStats] = None,
+) -> Dict[str, float]:
+    """One flat dict for logs / BENCH_pipeline.json rows."""
+    out: Dict[str, float] = {}
+    if prefetch_stats is not None:
+        out.update({f"prefetch_{k}": v for k, v in prefetch_stats.as_dict().items()})
+    if transfer_stats is not None:
+        out.update({f"transfer_{k}": v for k, v in transfer_stats.as_dict().items()})
+    return out
+
+
+__all__ = ["PrefetchStats", "TransferStats", "pipeline_summary"]

@@ -1,0 +1,226 @@
+"""Schedule-ahead prefetcher: GDS+DACP+packing off the critical path.
+
+``Prefetcher`` wraps a ``SkrullDataLoader`` and runs ``next_iteration()``
+up to ``depth`` iterations ahead on a background thread, feeding the trainer
+through a bounded queue. The loader's online scheduling is pure host-side
+numpy, so the producer overlaps perfectly with device compute — this is the
+mechanism behind the paper's "near-zero cost online scheduling" claim, made
+real rather than asserted (bench_pipeline measures the hidden fraction).
+
+Three contracts keep the pipeline honest:
+
+* **Resume is bit-exact.** Every ``IterationBatch`` carries the loader's
+  cursor snapshot from *before* its indices were drawn (``loader_state``)
+  and after (``loader_state_end``). The trainer checkpoints the *end* state
+  of the batch it last trained on — not the loader's live cursor, which runs
+  ``depth`` iterations ahead — so a restore replays exactly the unconsumed
+  stream.
+
+* **Feedback is versioned, not racy.** Straggler speed factors arrive
+  ``depth`` iterations late. ``set_speed_factors(factors, version)`` parks
+  the update in a lock-protected cell; the producer applies it before its
+  next ``next_iteration()`` call, so updated factors affect not-yet-scheduled
+  iterations only, and every batch records the telemetry version it was
+  scheduled under (``IterationBatch.telemetry_version`` — staleness is
+  observable, never silent).
+
+* **``flush()`` rewinds, never drops data.** On topology change (elastic
+  rescale) the queued batches were scheduled for the wrong grid. Flush halts
+  the producer, discards the queue, and restores the loader to the earliest
+  unconsumed batch's pre-draw snapshot — the same samples are re-scheduled
+  for the new topology, so the training stream stays identical.
+
+``depth=0`` degenerates to calling ``next_iteration()`` inline on the
+consumer thread (no thread, no queue): the serial reference path, bit-identical
+to pre-pipeline behaviour and to any ``depth>0`` run with healthy telemetry.
+"""
+
+from __future__ import annotations
+
+import queue
+import threading
+import time
+from typing import Optional
+
+from ..data.loader import IterationBatch, LoaderState, SkrullDataLoader
+from .metrics import PrefetchStats
+
+# distinguishes "no pending update" from "update to None" (clear factors)
+_UNSET = object()
+
+
+class Prefetcher:
+    def __init__(self, loader: SkrullDataLoader, depth: int = 0):
+        if depth < 0:
+            raise ValueError(f"prefetch depth must be >= 0, got {depth}")
+        self.loader = loader
+        self.depth = int(depth)
+        self.stats = PrefetchStats()
+        self._lock = threading.Lock()
+        self._pending_factors = _UNSET  # (factors, version) | _UNSET
+        self._q: Optional[queue.Queue] = (
+            queue.Queue(maxsize=self.depth) if self.depth > 0 else None
+        )
+        # producer acquires a slot BEFORE drawing from the loader, consumer
+        # releases on get: the cursor never runs more than ``depth``
+        # iterations past the consumed stream (a queue bound alone would
+        # allow depth+1 — queued batches plus one parked mid-put)
+        self._slots = threading.Semaphore(self.depth)
+        self._thread: Optional[threading.Thread] = None
+        self._stop = threading.Event()
+        self._inflight: Optional[IterationBatch] = None  # produced, not queued
+        self._error: Optional[BaseException] = None
+
+    # -- producer ------------------------------------------------------------
+    def _apply_pending_factors(self) -> None:
+        """Producer-side (or inline) application of the latest feedback."""
+        with self._lock:
+            pending = self._pending_factors
+            self._pending_factors = _UNSET
+        if pending is not _UNSET:
+            factors, version = pending
+            if factors is not None and len(factors) != self.loader.ws:
+                # factors staged for a grid the loader no longer has (a
+                # topology change raced the feedback) — stale, drop them
+                return
+            self.loader.set_speed_factors(factors, version=version)
+
+    def _produce(self) -> None:
+        while not self._stop.is_set():
+            if not self._slots.acquire(timeout=0.05):
+                continue
+            state_before = self.loader.state()
+            try:
+                self._apply_pending_factors()
+                it = self.loader.next_iteration()
+            except BaseException as e:  # surface on the consumer side
+                # a failed draw may have advanced the cursor before raising;
+                # rewind so the batch is retried after recovery, never
+                # silently skipped (flush()'s no-data-loss contract)
+                self.loader.restore(state_before)
+                self._error = e
+                return
+            self._inflight = it
+            while not self._stop.is_set():
+                try:
+                    # never blocks for long: a held slot implies queue space
+                    self._q.put(it, timeout=0.05)
+                    self._inflight = None
+                    self.stats.produced += 1
+                    break
+                except queue.Full:
+                    continue
+
+    def _ensure_started(self) -> None:
+        if self.depth == 0 or (self._thread is not None and self._thread.is_alive()):
+            return
+        if self._error is not None:
+            raise RuntimeError("prefetch producer failed") from self._error
+        self._stop.clear()
+        self._thread = threading.Thread(
+            target=self._produce, name="skrull-prefetch", daemon=True
+        )
+        self._thread.start()
+
+    def _halt(self) -> None:
+        """Stop the producer thread (idempotent); it restarts on next get()."""
+        if self._thread is not None:
+            self._stop.set()
+            self._thread.join()
+            self._thread = None
+            self._stop.clear()
+
+    def _drain(self) -> list:
+        """Empty the queue (producer must be halted) and reset the slot
+        budget — drained/abandoned batches never get consumer releases."""
+        items = []
+        if self._q is not None:
+            while True:
+                try:
+                    items.append(self._q.get_nowait())
+                except queue.Empty:
+                    break
+        self._slots = threading.Semaphore(self.depth)
+        return items
+
+    # -- consumer API ---------------------------------------------------------
+    def get(self) -> IterationBatch:
+        """Next iteration's batch. Blocks only when the queue is dry (that
+        blocked time is the pipeline's *visible* cost — see metrics.py)."""
+        if self.depth == 0:
+            self._apply_pending_factors()
+            it = self.loader.next_iteration()
+            # serial path: the full produce cost is consumer-visible
+            self.stats.produced += 1
+            self.stats.consumed += 1
+            self.stats.wait_s += it.produce_time_s
+            self.stats.produce_s += it.produce_time_s
+            return it
+        self._ensure_started()
+        t0 = time.perf_counter()
+        while True:
+            try:
+                it = self._q.get(timeout=0.1)
+                break
+            except queue.Empty:
+                if self._error is not None:
+                    raise RuntimeError("prefetch producer failed") from self._error
+                if self._thread is None or not self._thread.is_alive():
+                    # producer died without recording an error (shouldn't
+                    # happen) — restart rather than spinning forever
+                    self._thread = None
+                    self._ensure_started()
+        self._slots.release()  # consumed: the producer may draw one further
+        self.stats.wait_s += time.perf_counter() - t0
+        self.stats.consumed += 1
+        self.stats.produce_s += it.produce_time_s
+        return it
+
+    def set_speed_factors(self, factors, version: int) -> None:
+        """Stage straggler feedback for iterations not yet scheduled.
+
+        Never touches the loader directly while the producer owns it — the
+        producer picks the update up at its next iteration boundary.
+        """
+        with self._lock:
+            self._pending_factors = (factors, version)
+
+    def flush(self) -> None:
+        """Discard schedule-ahead work; rewind the loader so the same samples
+        are re-scheduled. Call on topology change (ft/elastic.rescale,
+        Trainer.set_topology) — queued batches target the old grid."""
+        self._halt()
+        items = self._drain()
+        earliest = items[0] if items else self._inflight
+        self._inflight = None
+        if earliest is not None and earliest.loader_state is not None:
+            self.loader.restore(earliest.loader_state)
+        with self._lock:
+            # staged feedback is sized for the pre-flush grid — a flush is
+            # almost always followed by set_topology, so drop it
+            self._pending_factors = _UNSET
+        self._error = None  # flush is a recovery point
+        self.stats.flushes += 1
+
+    def reset(self, state: Optional[LoaderState] = None) -> None:
+        """Resume support: drop queued work and (optionally) restore the
+        loader to a checkpointed cursor. Unlike flush(), does NOT rewind to
+        queued batches — the caller names the authoritative state."""
+        self._halt()
+        self._drain()
+        self._inflight = None
+        with self._lock:
+            self._pending_factors = _UNSET
+        # a restored cursor is a clean slate: forget any producer failure so
+        # resume-after-transient-error actually resumes
+        self._error = None
+        if state is not None:
+            self.loader.restore(state)
+
+    def close(self) -> None:
+        self._halt()
+        self._drain()
+        self._inflight = None
+
+
+__all__ = ["Prefetcher"]

@@ -1,0 +1,97 @@
+"""Double-buffered host-stacking + H2D transfer for packed micro-steps.
+
+The serial loop paid ``stack_row`` (host numpy stacking of the per-DP-rank
+``PackedMicrobatch`` buffers) and ``device_put`` on the critical path of
+every micro-step. ``TransferPipeline.rows`` turns that into a two-slot
+pipeline: while micro-step *m* computes on device, a single worker thread
+stacks and issues the transfer for micro-step *m+1*, so the compute stream
+never waits on host staging.
+
+Shape discipline: staged buffers keep exactly the bucket-ladder shapes the
+loader packed (the pipeline only reorders *when* transfers happen, never
+*what* is transferred), so the trainer's compiled-step cache — keyed by
+bucket shape — is untouched. ``TransferStats.shape_keys`` records every
+distinct shape staged; tests assert it stays within the ladder.
+
+``overlap=False`` (the depth=0 serial reference) stages inline on the
+consumer thread — byte-identical buffers, same order, no thread.
+"""
+
+from __future__ import annotations
+
+from concurrent.futures import Future, ThreadPoolExecutor
+from typing import Any, Callable, Dict, Iterable, Iterator, List, Optional, Sequence
+
+import jax.numpy as jnp
+
+from ..dist.executor import stack_row
+from .metrics import TransferStats
+
+
+def default_put(buffers: Dict[str, Any]) -> Dict[str, jnp.ndarray]:
+    """Single-program path: commit host buffers to the default device.
+
+    ``jnp.asarray`` issues an async H2D copy per buffer — calling it from the
+    staging worker is exactly the overlap we want on accelerators, and a
+    no-cost pass-through on CPU.
+    """
+    return {k: jnp.asarray(v) for k, v in buffers.items()}
+
+
+def shape_key(row: Sequence[Any]) -> tuple:
+    """Bucket identity of one micro-step row: (n_ranks, loc_cap, dist_cap)."""
+    mb = row[0]
+    return (len(row), int(mb.spec.c_loc), int(mb.spec.c_dist))
+
+
+class TransferPipeline:
+    """Stages ``stack_row`` + ``put_fn`` one micro-step ahead of compute.
+
+    ``put_fn`` is ``DistExecutor.put_buffers`` under a mesh (sharded
+    placement) or ``default_put`` single-program. One worker thread is
+    enough: there are only two live slots (the buffer being consumed and the
+    one being staged), matching a classic double buffer.
+    """
+
+    def __init__(
+        self,
+        put_fn: Optional[Callable[[Dict[str, Any]], Dict[str, Any]]] = None,
+        overlap: bool = True,
+    ):
+        self.put = put_fn if put_fn is not None else default_put
+        self.overlap = overlap
+        self.stats = TransferStats()
+        self._pool: Optional[ThreadPoolExecutor] = None
+
+    def _stage(self, row: Sequence[Any]) -> Dict[str, Any]:
+        self.stats.shape_keys.add(shape_key(row))
+        self.stats.staged += 1
+        return self.put(stack_row(row))
+
+    def rows(self, microbatch_rows: Iterable[Sequence[Any]]) -> Iterator[Dict[str, Any]]:
+        """Yield device-ready buffer dicts, staging one row ahead."""
+        rows: List[Sequence[Any]] = list(microbatch_rows)
+        if not self.overlap or len(rows) <= 1:
+            for row in rows:
+                yield self._stage(row)
+            return
+        if self._pool is None:
+            self._pool = ThreadPoolExecutor(
+                max_workers=1, thread_name_prefix="skrull-h2d"
+            )
+        fut: Future = self._pool.submit(self._stage, rows[0])
+        for m in range(len(rows)):
+            current = fut.result()
+            if m + 1 < len(rows):
+                # staged while the caller dispatches micro-step m's compute
+                fut = self._pool.submit(self._stage, rows[m + 1])
+                self.stats.overlapped += 1
+            yield current
+
+    def close(self) -> None:
+        if self._pool is not None:
+            self._pool.shutdown(wait=True)
+            self._pool = None
+
+
+__all__ = ["TransferPipeline", "default_put", "shape_key"]

@@ -53,6 +53,11 @@ class SchedulingContext:
     # Benchmarks/explorer want it; the training loader turns it off — the
     # hot path should not pay a simulation whose result is only logged.
     simulate: bool = True
+    # which straggler-feedback generation topology.speed_factors came from
+    # (HealthMonitor.telemetry_version). With a schedule-ahead prefetcher
+    # factors are applied ``depth`` iterations late; the stamp propagates
+    # into the ScheduleReport so that staleness is observable downstream.
+    telemetry_version: int = 0
 
     def __post_init__(self):
         if self.bucket_size < 1:
@@ -93,6 +98,7 @@ class ScheduleReport:
     dist_token_frac: float  # fraction of tokens in distributed packs
     modeled_iteration_s: Optional[float] = None
     per_rank_s: Optional[np.ndarray] = None  # (ws,) modeled
+    telemetry_version: int = 0  # feedback generation the schedule used
 
     @property
     def per_rank_tokens(self) -> np.ndarray:
@@ -158,6 +164,7 @@ def build_report(
         dist_token_frac=dist_tokens / max(total_tokens, 1),
         modeled_iteration_s=modeled,
         per_rank_s=per_rank_s,
+        telemetry_version=ctx.telemetry_version,
     )
 
 

@@ -2,6 +2,7 @@ from .state import TrainState, init_train_state
 from .step import (
     accumulate,
     dense_loss,
+    make_accumulate,
     make_apply_update,
     make_dense_train_step,
     make_micro_grad,
@@ -13,6 +14,7 @@ __all__ = [
     "init_train_state",
     "accumulate",
     "dense_loss",
+    "make_accumulate",
     "make_apply_update",
     "make_dense_train_step",
     "make_micro_grad",

@@ -1,12 +1,21 @@
-"""End-to-end Skrull training loop.
+"""End-to-end Skrull training loop — schedule-ahead pipelined execution.
 
-Per iteration: loader runs GDS+DACP online (host, overlapped with device
-work), each packed micro-step runs a compiled ``micro_grad`` (cached per
-bucket shape), a jitted accumulator sums gradient contributions, one AdamW
-update applies, the health monitor ingests step timings (straggler telemetry
-feeds the NEXT iteration's bin-packing), and the checkpoint manager saves
-asynchronously every ``ckpt_every`` steps. ``run()`` auto-resumes from the
-latest checkpoint, restoring params, optimizer, RNG and loader cursor.
+Per iteration: a ``repro.pipeline.Prefetcher`` has already run the loader's
+GDS+DACP+packing up to ``prefetch_depth`` iterations ahead on a background
+thread (depth=0 is the serial reference path — same code, inline, bit-identical
+losses); each packed micro-step runs a compiled ``micro_grad`` (cached per
+bucket shape) while a ``TransferPipeline`` stages the NEXT micro-step's host
+stacking + ``device_put``; a fused jitted accumulator keeps gradients AND
+loss/valid metrics on device (host syncs only at log/checkpoint boundaries);
+one AdamW update applies; the health monitor ingests per-rank step timings
+derived from the schedule's load attribution (straggler telemetry feeds
+not-yet-scheduled iterations through a staleness-versioned cell); and the
+checkpoint manager saves asynchronously every ``ckpt_every`` steps.
+
+Resume semantics under schedule-ahead: checkpoints save the *consumed*
+batch's end-of-draw loader snapshot (each ``IterationBatch`` carries it), not
+the loader's live cursor — which runs ``depth`` iterations ahead — so
+``run()`` auto-resumes bit-exact regardless of queue depth.
 """
 
 from __future__ import annotations
@@ -14,22 +23,29 @@ from __future__ import annotations
 import dataclasses
 import time
 from functools import partial
-from typing import Any, Callable, Dict, List, Optional
+from typing import Any, Dict, List, Optional, Union
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from ..checkpoint.manager import CheckpointManager
 from ..configs.base import ArchConfig
 from ..data.loader import SkrullDataLoader, LoaderState
-from ..dist.executor import DistExecutor, stack_row
+from ..dist.executor import DistExecutor
 from ..dist.plan import lower_schedule
 from ..ft.health import HealthMonitor
 from ..models.transformer import CallConfig, init_model
-from ..optim.grad import tree_add, tree_zeros_like
+from ..optim.grad import tree_zeros_like
 from ..optim.schedule import linear_warmup_cosine
+from ..pipeline import Prefetcher, TransferPipeline
+from ..sched import Topology
 from .state import TrainState, init_train_state
-from .step import make_apply_update, make_micro_grad
+from .step import make_accumulate, make_apply_update, make_micro_grad
+
+# float keys train_step leaves as on-device scalars; _finalize_metrics
+# fetches them (valid_tokens is handled separately — it finalizes to int)
+_DEVICE_KEYS = ("loss", "grad_norm")
 
 
 @dataclasses.dataclass
@@ -43,6 +59,12 @@ class TrainerConfig:
     ckpt_dir: Optional[str] = None
     log_every: int = 10
     straggler_aware: bool = True
+    # schedule-ahead queue depth (repro.pipeline); 0 = serial reference path
+    prefetch_depth: int = 0
+    # speed factors within this band of 1.0 are treated as "healthy fleet"
+    # and cleared — bin-packing must not chase timing noise, and schedules
+    # stay identical across prefetch depths while no real straggler exists
+    speed_deadband: float = 0.05
 
 
 class Trainer:
@@ -79,27 +101,50 @@ class Trainer:
         )
         self._micro_grad = jax.jit(make_micro_grad(cfg, call))
         self._apply = jax.jit(make_apply_update(cfg, lr_fn, tcfg.clip_norm, tcfg.weight_decay))
-        self._accum = jax.jit(
-            lambda acc, g: tree_add(acc, jax.tree.map(lambda x: x.astype(jnp.float32), g))
-        )
+        # fused grad+metrics accumulator; donating the f32 accumulator and
+        # the metric scalars lets XLA update them in place (CPU lacks
+        # donation support and would only warn, so gate on backend)
+        donate = (0, 1, 2) if jax.default_backend() != "cpu" else ()
+        self._accum = jax.jit(make_accumulate(), donate_argnums=donate)
         self.health = HealthMonitor(ws=loader.ws)
+        self.prefetch = Prefetcher(loader, depth=tcfg.prefetch_depth)
+        # stage the next micro-step's stacking+H2D only when a real
+        # accelerator computes independently of the host — on the CPU
+        # backend "device compute" runs on the same cores as staging, so the
+        # worker hop is pure overhead (the prefetcher still helps there: its
+        # producer overlaps with the queue's *latency*, not its cores)
+        self.transfer = TransferPipeline(
+            self.dist.put_buffers if self.dist is not None else None,
+            overlap=tcfg.prefetch_depth > 0 and jax.default_backend() != "cpu",
+        )
         self.ckpt = (
             CheckpointManager(tcfg.ckpt_dir) if tcfg.ckpt_dir else None
         )
         self.history: List[Dict[str, float]] = []
+        self.last_iteration = None  # most recently consumed IterationBatch
+        # loader snapshot to resume from: end-of-draw state of the batch the
+        # trainer last CONSUMED (the live cursor runs depth iterations ahead)
+        self._resume_state: LoaderState = loader.state()
 
     # -- checkpoint integration ---------------------------------------------
     def _ckpt_tree(self):
         return {
             "state": self.state,
             "loader": {
-                k: jnp.asarray(v) for k, v in self.loader.state().to_dict().items()
+                k: jnp.asarray(v) for k, v in self._resume_state.to_dict().items()
             },
         }
 
     def save(self):
         if self.ckpt:
-            self.ckpt.save(self.step, self._ckpt_tree(), meta={"step": self.step})
+            self.ckpt.save(
+                self.step,
+                self._ckpt_tree(),
+                meta={
+                    "step": self.step,
+                    "telemetry_version": self.health.telemetry_version,
+                },
+            )
 
     def maybe_resume(self) -> bool:
         if not self.ckpt or self.ckpt.latest_step() is None:
@@ -109,16 +154,31 @@ class Trainer:
         if self.dist is not None:
             # restore() yields host-layout leaves: re-place on the ZeRO-3 layout
             self.state = self.dist.place_state(self.state)
-        self.loader.restore(
-            LoaderState.from_dict({k: int(v) for k, v in tree["loader"].items()})
+        restored = LoaderState.from_dict(
+            {k: int(v) for k, v in tree["loader"].items()}
         )
+        # drop any schedule-ahead work drawn past the checkpoint and rewind
+        # the loader under a halted producer (restart is lazy, on next get)
+        self.prefetch.reset(restored)
+        self._resume_state = restored
         self.step = int(meta["step"])
         return True
+
+    # -- topology -------------------------------------------------------------
+    def set_topology(self, topology: Union[int, Topology]) -> None:
+        """Elastic hook: flush stale schedule-ahead work, re-grid the loader,
+        and resize the health monitor so its speed arrays track the new ws."""
+        self.prefetch.flush()
+        self.loader.set_topology(topology)
+        self.health.resize(self.loader.ws)
 
     # -- iteration ------------------------------------------------------------
     def train_step(self) -> Dict[str, float]:
         t0 = time.perf_counter()
-        it = self.loader.next_iteration()
+        it = self.prefetch.get()
+        self.last_iteration = it
+        if it.loader_state_end is not None:
+            self._resume_state = it.loader_state_end
         # lowering reuses the policy's ScheduleReport for per-device loads
         plan = (
             lower_schedule(it.schedule, self.mesh, report=it.report)
@@ -127,61 +187,117 @@ class Trainer:
         )
         denom = jnp.float32(it.denominator)
         acc = tree_zeros_like(self.state.params)
-        loss_sum = 0.0
-        valid = 0
-        for row in it.microbatches:
-            buffers = stack_row(row)  # stack DP ranks: (ws, n_cp, c)
-            if self.dist is not None:
-                buffers = self.dist.put_buffers(buffers)
+        loss_sum = jnp.zeros((), jnp.float32)
+        valid = jnp.zeros((), jnp.int32)
+        # transfer.rows stages micro-step m+1's stack_row + device_put while
+        # micro-step m's compute is in flight (double buffer, ladder shapes)
+        for buffers in self.transfer.rows(it.microbatches):
             grads, m = self._micro_grad(self.state.params, buffers, denom)
-            acc = self._accum(acc, grads)
-            loss_sum += float(m["loss_sum"])
-            valid += int(m["valid"])
+            acc, loss_sum, valid = self._accum(acc, loss_sum, valid, grads, m)
         self.state, am = self._apply(self.state, acc)
+        # host-loop time: on CPU this equals step latency (dispatch is
+        # effectively synchronous); on accelerators the sync-free loop makes
+        # it dispatch+queue-wait time — steady-state THROUGHPUT is what the
+        # pipeline optimises, measured as wall time across steps
         dt = time.perf_counter() - t0
         # feed telemetry: the health monitor ingests the policy's schedule
-        # report (load attribution) alongside the measured step time
+        # report; per-rank times come from the report's load attribution
+        # (modeled share x measured step time) — a single-process run measures
+        # one wall clock, so identical beats could never tell ranks apart
         if self.tcfg.straggler_aware:
+            if it.schedule.ws != self.loader.ws:
+                # loader was re-gridded behind our back (direct set_topology;
+                # Trainer.set_topology is the supported path) — this batch
+                # was scheduled for the old grid. Training it is still
+                # correct (GDS is partition-invariant), but drop any queued
+                # old-grid batches so the stream re-schedules for the new one.
+                self.prefetch.flush()
+            if self.health.ws != self.loader.ws:
+                self.health.resize(self.loader.ws)
             self.health.ingest(it.report)
-            for r in range(self.loader.ws):
-                self.health.beat(r, step_time_s=dt)
-            self.loader.set_speed_factors(self.health.speed_factors())
+            if it.report is not None:
+                share = it.report.per_rank_tokens.astype(np.float64)
+                share = share / max(share.mean(), 1e-9)
+                times = dt * np.maximum(share, 1e-6)
+            else:
+                times = np.full(self.loader.ws, dt)
+            if len(times) == self.health.ws:
+                self.health.beat_round(times)
+            factors = self.health.speed_factors(deadband=self.tcfg.speed_deadband)
+            # versioned hand-off: the prefetcher applies this to iterations
+            # that have not been scheduled yet (never to queued batches)
+            self.prefetch.set_speed_factors(
+                factors, version=self.health.telemetry_version
+            )
         self.step += 1
         out = {
             "step": self.step,
-            "loss": loss_sum / max(valid, 1),
+            # on-device scalars — _finalize_metrics fetches them at log/ckpt
+            # boundaries so no host sync sits on the step critical path
+            "loss": loss_sum / jnp.maximum(valid, 1).astype(jnp.float32),
             "valid_tokens": valid,
+            "grad_norm": am["grad_norm"],
             "microsteps": it.n_microsteps,
             "sched_ms": it.sched_time_s * 1e3,
+            "produce_ms": it.produce_time_s * 1e3,
             "time_s": dt,
-            "grad_norm": float(am["grad_norm"]),
         }
         if it.report is not None:
             out["policy"] = it.report.policy
             out["imbalance"] = it.report.imbalance
             out["dist_token_frac"] = it.report.dist_token_frac
+            out["telemetry_staleness"] = (
+                self.health.telemetry_version - it.telemetry_version
+            )
             if it.report.modeled_iteration_s is not None:
                 out["modeled_s"] = it.report.modeled_iteration_s
         return out
 
+    def _finalize_metrics(self, metrics: List[Dict[str, Any]]) -> None:
+        """Fetch deferred on-device scalars to host floats, in place.
+
+        Idempotent (float-of-float is a no-op), so no bookkeeping key is
+        needed and the dicts stay plain ``{str: float}`` rows.
+        """
+        for m in metrics:
+            for k in _DEVICE_KEYS:
+                if k in m:
+                    m[k] = float(m[k])
+            if "valid_tokens" in m:
+                m["valid_tokens"] = int(m["valid_tokens"])
+
     def run(self, steps: Optional[int] = None) -> List[Dict[str, float]]:
         self.maybe_resume()
         n = steps if steps is not None else self.tcfg.total_steps
+        pending: List[Dict[str, float]] = []
         while self.step < n:
             m = self.train_step()
             self.history.append(m)
-            if self.step % self.tcfg.log_every == 0 or self.step == n:
+            pending.append(m)
+            log_now = self.step % self.tcfg.log_every == 0 or self.step == n
+            ckpt_now = bool(self.ckpt) and self.step % self.tcfg.ckpt_every == 0
+            if log_now or ckpt_now:
+                # the ONLY host<->device syncs in steady state happen here
+                self._finalize_metrics(pending)
+                pending.clear()
+            if log_now:
                 print(
                     f"step {m['step']:5d} loss {m['loss']:.4f} "
                     f"tokens {m['valid_tokens']} mbs {m['microsteps']} "
                     f"sched {m['sched_ms']:.1f}ms t {m['time_s']:.2f}s"
                 )
-            if self.ckpt and self.step % self.tcfg.ckpt_every == 0:
+            if ckpt_now:
                 self.save()
+        self._finalize_metrics(pending)
         if self.ckpt:
             self.save()
             self.ckpt.wait()
         return self.history
+
+    def close(self) -> None:
+        """Stop pipeline threads (safe to call between run() segments)."""
+        self.prefetch.close()
+        self.transfer.close()
 
 
 __all__ = ["Trainer", "TrainerConfig"]

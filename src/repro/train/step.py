@@ -76,6 +76,27 @@ def accumulate(acc, grads):
     return tree_add(acc, jax.tree.map(lambda g: g.astype(jnp.float32), grads))
 
 
+def make_accumulate():
+    """Sync-free accumulator for the pipelined loop (DESIGN.md §10):
+    ``(acc, loss_sum, valid, grads, metrics) -> (acc', loss_sum', valid')``.
+
+    Folding the loss/valid running sums into the same jitted call as the
+    gradient accumulation keeps ALL per-micro-step metrics on device — the
+    trainer fetches them only at log/checkpoint boundaries, so no
+    ``float(...)`` host sync sits on the micro-step critical path. The
+    caller donates ``acc``/``loss_sum``/``valid`` (argnums 0-2) on
+    accelerators so the f32 gradient buffer is updated in place.
+    """
+
+    def f(acc, loss_sum, valid, grads, metrics):
+        acc = tree_add(acc, jax.tree.map(lambda g: g.astype(jnp.float32), grads))
+        loss_sum = loss_sum + metrics["loss_sum"].astype(jnp.float32)
+        valid = valid + metrics["valid"].astype(jnp.int32)
+        return acc, loss_sum, valid
+
+    return f
+
+
 def make_apply_update(
     cfg: ArchConfig,
     lr_fn,
@@ -199,6 +220,7 @@ __all__ = [
     "packed_loss",
     "make_micro_grad",
     "accumulate",
+    "make_accumulate",
     "make_apply_update",
     "dense_loss",
     "make_dense_train_step",

@@ -66,6 +66,84 @@ def test_elastic_rescale_training_continues(tiny_dense, tmp_path):
     assert h2[-1]["loss"] < h1[0]["loss"]  # still descending after rescale
 
 
+def test_health_monitor_resizes_on_topology_change(tiny_dense, tmp_path):
+    """Loader re-grid must not leave the monitor's ws/speed arrays stale —
+    both through Trainer.set_topology and a direct loader.set_topology."""
+    from repro.core.perf_model import H100
+    from repro.data import SkrullDataLoader, SyntheticSFTDataset, wikipedia_like
+    from repro.models.transformer import CallConfig
+    from repro.sched import Topology
+    from repro.train.loop import Trainer, TrainerConfig
+
+    cfg = tiny_dense
+    call = CallConfig(attention_impl="dense", remat="none", logits_chunk=512)
+    ds = SyntheticSFTDataset(wikipedia_like(), vocab_size=cfg.vocab, seed=5,
+                             size=64, max_len=200)
+    loader = SkrullDataLoader(ds, global_batch=4, ws=2, n_cp=2, c_budget=1024,
+                              profile=cfg.to_profile(), hw=H100, seed=1)
+    t = Trainer(cfg, call, loader,
+                TrainerConfig(total_steps=4, log_every=100, lr=1e-3))
+    t.run(1)
+    assert t.health.ws == 2 and len(t.health.speed_factors()) == 2
+    # explicit hook: flushes schedule-ahead work and resizes the monitor
+    t.set_topology(Topology(dp=1, cp=2))
+    assert t.health.ws == 1 and len(t.health.speed_factors()) == 1
+    t.run(2)
+    # legacy path: poking the loader directly — train_step self-heals
+    t.loader.set_topology(2)
+    t.run(3)
+    assert t.health.ws == 2 and len(t.health.speed_factors()) == 2
+    t.close()
+
+
+def test_direct_regrid_self_heals_under_prefetch(tiny_dense):
+    """Direct loader.set_topology at depth>0: the consumed old-grid batch
+    still trains, queued old-grid batches are flushed and re-scheduled."""
+    from repro.core.perf_model import H100
+    from repro.data import SkrullDataLoader, SyntheticSFTDataset, wikipedia_like
+    from repro.models.transformer import CallConfig
+    from repro.train.loop import Trainer, TrainerConfig
+
+    cfg = tiny_dense
+    call = CallConfig(attention_impl="dense", remat="none", logits_chunk=512)
+    ds = SyntheticSFTDataset(wikipedia_like(), vocab_size=cfg.vocab, seed=5,
+                             size=64, max_len=200)
+    loader = SkrullDataLoader(ds, global_batch=4, ws=2, n_cp=2, c_budget=1024,
+                              profile=cfg.to_profile(), hw=H100, seed=1)
+    t = Trainer(cfg, call, loader,
+                TrainerConfig(total_steps=6, log_every=100, lr=1e-3,
+                              prefetch_depth=2))
+    t.run(2)
+    t.loader.set_topology(1)  # unsupported-but-tolerated direct poke
+    t.run(5)
+    assert t.health.ws == 1
+    assert t.prefetch.stats.flushes >= 1  # queued ws=2 batches were dropped
+    assert t.last_iteration.schedule.ws == 1
+    t.close()
+
+
+def test_rescale_resizes_health_and_flushes_prefetch(tiny_dense, tmp_path):
+    from repro.data import SkrullDataLoader, SyntheticSFTDataset, wikipedia_like
+    from repro.pipeline import Prefetcher
+
+    params = init_model(jax.random.PRNGKey(0), tiny_dense)
+    state = init_train_state(params)
+    ckpt = CheckpointManager(str(tmp_path), async_save=False)
+    ckpt.save(2, state)
+    ds = SyntheticSFTDataset(wikipedia_like(), vocab_size=128, seed=7,
+                             size=64, max_len=200)
+    loader = SkrullDataLoader(ds, global_batch=4, ws=2, n_cp=2, c_budget=512)
+    pf = Prefetcher(loader, depth=2)
+    pf.get()
+    mon = HealthMonitor(ws=2)
+    mesh, new_state, meta, topo = rescale(
+        ckpt, state, new_dp=1, new_cp=1, prefetcher=pf, health=mon
+    )
+    assert mon.ws == topo.ws == 1
+    assert pf.stats.flushes == 1
+    pf.close()
+
+
 def test_elastic_rescale_roundtrip(tiny_dense, tmp_path):
     params = init_model(jax.random.PRNGKey(0), tiny_dense)
     state = init_train_state(params)

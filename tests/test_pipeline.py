@@ -1,0 +1,308 @@
+"""repro.pipeline — schedule-ahead prefetch, transfer overlap, staleness
+versioning, and the flush/rewind + resume-snapshot contracts."""
+
+import numpy as np
+import pytest
+
+from repro.data import SkrullDataLoader, SyntheticSFTDataset, wikipedia_like
+from repro.data.loader import LoaderState
+from repro.dist.executor import stack_row
+from repro.ft.health import HealthMonitor
+from repro.pipeline import (
+    PrefetchStats,
+    Prefetcher,
+    TransferPipeline,
+    shape_key,
+)
+
+
+def _loader(seed=3, batch=6):
+    ds = SyntheticSFTDataset(
+        wikipedia_like(), vocab_size=128, seed=7, size=64, max_len=200
+    )
+    return SkrullDataLoader(ds, global_batch=batch, ws=2, n_cp=2, c_budget=512, seed=seed)
+
+
+def _consume(prefetcher, n):
+    return [prefetcher.get() for _ in range(n)]
+
+
+# ---------------------------------------------------------------------------
+# Prefetcher: stream equivalence + snapshots
+# ---------------------------------------------------------------------------
+
+
+def test_prefetch_stream_matches_serial():
+    ref = _loader()
+    serial = [ref.next_iteration() for _ in range(5)]
+    pf = Prefetcher(_loader(), depth=2)
+    ahead = _consume(pf, 5)
+    pf.close()
+    for a, b in zip(serial, ahead):
+        np.testing.assert_array_equal(a.indices, b.indices)
+        assert a.denominator == b.denominator
+        assert a.n_microsteps == b.n_microsteps
+
+
+def test_batches_carry_state_chain():
+    loader = _loader()
+    first_state = loader.state()
+    pf = Prefetcher(loader, depth=2)
+    batches = _consume(pf, 4)
+    pf.close()
+    assert batches[0].loader_state == first_state
+    for prev, nxt in zip(batches, batches[1:]):
+        # pre-draw snapshot of batch k+1 IS the post-draw snapshot of batch k
+        assert nxt.loader_state == prev.loader_state_end
+
+
+def test_depth0_is_inline():
+    pf = Prefetcher(_loader(), depth=0)
+    it = pf.get()
+    assert pf._thread is None  # no producer thread on the serial path
+    assert it.loader_state is not None
+    assert pf.stats.overlap_efficiency == 0.0  # serial: nothing hidden
+    assert pf.stats.wait_s == pytest.approx(pf.stats.produce_s)
+
+
+def test_lookahead_bounded_by_depth():
+    """The loader cursor never runs more than depth draws past consumption
+    (the in-flight batch counts against the budget, not on top of it)."""
+    import time
+
+    loader = _loader(batch=6)  # dataset size 64 -> no epoch wrap below
+    pf = Prefetcher(loader, depth=1)
+    pf.get()  # 1 consumed
+    time.sleep(0.5)  # give the producer every chance to overrun
+    state = loader.state()
+    assert state.epoch == 0
+    assert state.cursor <= (1 + 1) * 6  # consumed + depth batches, no more
+    pf.close()
+
+
+def test_depth2_overlap_accounting():
+    pf = Prefetcher(_loader(), depth=2)
+    _consume(pf, 1)
+    import time
+
+    time.sleep(0.3)  # producer fills the queue while "device compute" runs
+    _consume(pf, 2)
+    pf.close()
+    s = pf.stats
+    assert s.consumed == 3
+    assert s.produce_s > 0
+    assert 0.0 <= s.overlap_efficiency <= 1.0
+    assert s.hidden_s == pytest.approx(s.produce_s - s.wait_s)
+
+
+# ---------------------------------------------------------------------------
+# Prefetcher: flush/rewind + reset
+# ---------------------------------------------------------------------------
+
+
+def test_flush_rewinds_to_earliest_unconsumed():
+    ref = _loader()
+    serial = [ref.next_iteration() for _ in range(6)]
+    loader = _loader()
+    pf = Prefetcher(loader, depth=3)
+    consumed = _consume(pf, 2)
+    for a, b in zip(serial, consumed):
+        np.testing.assert_array_equal(a.indices, b.indices)
+    pf.flush()  # queued batches 2..4 discarded, loader rewound
+    assert pf.stats.flushes == 1
+    resumed = _consume(pf, 3)
+    pf.close()
+    for a, b in zip(serial[2:], resumed):
+        # the SAME samples are re-scheduled — no data skipped or repeated
+        np.testing.assert_array_equal(a.indices, b.indices)
+
+
+def test_flush_then_topology_change_reschedules_same_stream():
+    ref = _loader()
+    serial = [ref.next_iteration() for _ in range(4)]
+    loader = _loader()
+    pf = Prefetcher(loader, depth=2)
+    _consume(pf, 1)
+    pf.flush()
+    loader.set_topology(1)  # safe: producer is halted until the next get()
+    after = _consume(pf, 2)
+    pf.close()
+    for a, b in zip(serial[1:], after):
+        np.testing.assert_array_equal(a.indices, b.indices)
+        assert len(b.microbatches[0]) == 1  # scheduled for the new ws
+
+
+def test_reset_restores_checkpointed_cursor():
+    loader = _loader()
+    pf = Prefetcher(loader, depth=2)
+    batches = _consume(pf, 3)
+    ckpt_state = batches[0].loader_state_end  # "trained 1 step, then crashed"
+    pf.reset(ckpt_state)
+    replay = _consume(pf, 2)
+    pf.close()
+    for a, b in zip(batches[1:], replay):
+        np.testing.assert_array_equal(a.indices, b.indices)
+
+
+# ---------------------------------------------------------------------------
+# Staleness-versioned feedback
+# ---------------------------------------------------------------------------
+
+
+def test_speed_factors_apply_to_unscheduled_iterations_only():
+    pf = Prefetcher(_loader(), depth=2)
+    first = pf.get()
+    assert first.telemetry_version == 0
+    pf.set_speed_factors((1.5, 0.5), version=7)
+    seen = []
+    for _ in range(8):
+        it = pf.get()
+        seen.append(it.telemetry_version)
+        if it.telemetry_version == 7:
+            break
+    pf.close()
+    # queued batches keep their old stamp; within depth+1 gets the producer
+    # has applied the update and stamps the new version
+    assert seen[-1] == 7
+    assert all(v in (0, 7) for v in seen)
+    assert pf.loader.topology.speed_factors == (1.5, 0.5)
+
+
+def test_versioned_factors_depth0_apply_next_iteration():
+    pf = Prefetcher(_loader(), depth=0)
+    pf.get()
+    pf.set_speed_factors((2.0, 0.5), version=3)
+    it = pf.get()
+    assert it.telemetry_version == 3
+    assert it.report.telemetry_version == 3
+
+
+def test_stale_factors_dropped_across_topology_change():
+    """Rescale race: factors staged for the old ws must not crash (or, at
+    depth>0, silently kill) the producer after flush + set_topology."""
+    loader = _loader()
+    pf = Prefetcher(loader, depth=2)
+    pf.get()
+    pf.set_speed_factors((1.5, 0.5), version=3)  # sized for ws=2
+    pf.flush()
+    loader.set_topology(1)
+    it = pf.get()  # must not raise / hang
+    assert len(it.microbatches[0]) == 1
+    # the same guard holds when the update lands after the re-grid (no flush)
+    pf.set_speed_factors((1.5, 0.5), version=4)
+    it = pf.get()
+    assert loader.topology.speed_factors is None  # stale update dropped
+    pf.close()
+
+
+def test_producer_error_surfaces_on_consumer():
+    loader = _loader()
+    pf = Prefetcher(loader, depth=2)
+    pf.get()
+    pf._halt()
+
+    real_next = loader.next_iteration
+
+    def boom():
+        raise RuntimeError("dataset exploded")
+
+    loader.next_iteration = boom
+    with pytest.raises(RuntimeError, match="prefetch producer failed"):
+        for _ in range(8):
+            pf.get()
+    # reset() is a recovery point: a transient failure must not poison the
+    # prefetcher forever once the fault is gone
+    loader.next_iteration = real_next
+    pf.reset(loader.state())
+    assert pf.get() is not None
+    pf.close()
+
+
+def test_failed_draw_is_retried_not_skipped():
+    """A producer failure AFTER the cursor advanced must rewind: recovery
+    via flush() resumes at the failed batch, never past it (no silent
+    global-batch skip)."""
+    ref = _loader()
+    serial = [ref.next_iteration() for _ in range(8)]
+    loader = _loader()
+    pf = Prefetcher(loader, depth=2)
+    got = [pf.get()]
+
+    real_lengths = loader.dataset.lengths
+
+    def boom(indices):  # fires inside next_iteration, after _next_indices
+        raise RuntimeError("transient I/O failure")
+
+    loader.dataset.lengths = boom
+    with pytest.raises(RuntimeError, match="prefetch producer failed"):
+        for _ in range(8):
+            got.append(pf.get())  # already-queued batches drain first
+    loader.dataset.lengths = real_lengths
+    pf.flush()  # recovery point: must not lose the failed batch
+    # the stream continues exactly where it stopped — nothing skipped
+    for want, have in zip(serial, got):
+        np.testing.assert_array_equal(want.indices, have.indices)
+    nxt = pf.get()
+    np.testing.assert_array_equal(nxt.indices, serial[len(got)].indices)
+    pf.close()
+
+
+def test_health_monitor_versioned_deadband():
+    mon = HealthMonitor(ws=2, ema=0.0)
+    v0 = mon.telemetry_version
+    mon.beat_round([1.0, 1.0])
+    assert mon.telemetry_version > v0
+    # healthy fleet: factors inside the deadband clear to None
+    assert mon.speed_factors(deadband=0.05) is None
+    assert mon.speed_factors() is not None  # legacy callers: always an array
+    mon.beat_round([1.0, 4.0])
+    f = mon.speed_factors(deadband=0.05)
+    assert f is not None and f[0] > f[1]
+
+
+# ---------------------------------------------------------------------------
+# Transfer pipeline
+# ---------------------------------------------------------------------------
+
+
+def test_transfer_rows_match_serial_stacking():
+    it = _loader().next_iteration()
+    serial = [stack_row(row) for row in it.microbatches]
+    tp = TransferPipeline(overlap=True)
+    staged = list(tp.rows(it.microbatches))
+    tp.close()
+    assert len(staged) == len(serial)
+    for a, b in zip(serial, staged):
+        assert set(a) == set(b)
+        for k in a:
+            np.testing.assert_array_equal(a[k], np.asarray(b[k]))
+
+
+def test_transfer_shapes_stay_in_ladder():
+    loader = _loader(batch=8)
+    tp = TransferPipeline(overlap=True)
+    for _ in range(3):
+        it = loader.next_iteration()
+        for _ in tp.rows(it.microbatches):
+            pass
+    tp.close()
+    ladder_keys = {
+        (loader.ws, spec.c_loc, spec.c_dist) for spec in loader.ladder
+    }
+    # staging introduces no shapes beyond the packing ladder: the compiled
+    # micro-step cache is untouched by the pipeline
+    assert tp.stats.shape_keys <= ladder_keys
+    assert tp.stats.staged > 0
+
+
+def test_shape_key_identity():
+    it = _loader().next_iteration()
+    row = it.microbatches[0]
+    assert shape_key(row) == (len(row), row[0].spec.c_loc, row[0].spec.c_dist)
+
+
+def test_prefetch_stats_dict_roundtrip():
+    s = PrefetchStats(produced=3, consumed=2, wait_s=0.5, produce_s=2.0)
+    d = s.as_dict()
+    assert d["hidden_s"] == pytest.approx(1.5)
+    assert d["overlap_efficiency"] == pytest.approx(0.75)

@@ -69,3 +69,68 @@ def test_cost_aware_scheduling_trains(tiny_dense, tmp_path):
     t = _trainer(tiny_dense, tmp_path / "d", steps=3, cost_aware=True)
     hist = t.run()
     assert all(np.isfinite(h["loss"]) for h in hist)
+
+
+# ---------------------------------------------------------------------------
+# schedule-ahead pipeline (repro.pipeline)
+# ---------------------------------------------------------------------------
+
+
+def _pipelined_trainer(cfg, tmp, steps, depth):
+    ds = SyntheticSFTDataset(
+        wikipedia_like(), vocab_size=cfg.vocab, seed=5, size=256, max_len=300
+    )
+    loader = SkrullDataLoader(
+        ds, global_batch=8, ws=2, n_cp=2, c_budget=1024,
+        profile=cfg.to_profile(), hw=H100, seed=1,
+    )
+    tc = TrainerConfig(
+        total_steps=steps, ckpt_every=3, ckpt_dir=str(tmp), log_every=100,
+        lr=1e-3, prefetch_depth=depth,
+    )
+    return Trainer(cfg, CALL, loader, tc)
+
+
+def _drive(t, n):
+    """Step manually, recording (indices, loss) — losses finalized per step."""
+    out = []
+    while t.step < n:
+        m = t.train_step()
+        t._finalize_metrics([m])
+        out.append((t.last_iteration.indices.copy(), m["loss"]))
+    return out
+
+
+def test_prefetched_losses_bit_identical_to_serial(tiny_dense, tmp_path):
+    """depth=2 must replay the same schedules, hence bit-identical losses."""
+    t0 = _pipelined_trainer(tiny_dense, tmp_path / "s0", steps=4, depth=0)
+    t2 = _pipelined_trainer(tiny_dense, tmp_path / "s2", steps=4, depth=2)
+    h0, h2 = t0.run(), t2.run()
+    t0.close(), t2.close()
+    assert [m["loss"] for m in h0] == [m["loss"] for m in h2]
+    assert t2.prefetch.stats.overlap_efficiency > 0.0
+    assert t0.prefetch.stats.overlap_efficiency == 0.0
+
+
+def test_resume_mid_epoch_deterministic_with_prefetch(tiny_dense, tmp_path):
+    """Checkpoint at step 3 with the cursor running 2 iterations ahead;
+    restore into a fresh Trainer: index stream and losses bit-match an
+    uninterrupted run (the checkpoint saved the CONSUMED batch's snapshot,
+    not the prefetcher's live cursor)."""
+    ref = _pipelined_trainer(tiny_dense, tmp_path / "ref", steps=6, depth=2)
+    assert not ref.maybe_resume()
+    seq_ref = _drive(ref, 6)
+    ref.close()
+
+    t_a = _pipelined_trainer(tiny_dense, tmp_path / "mid", steps=3, depth=2)
+    t_a.run()  # checkpoints at step 3, queue is 2 batches ahead
+    t_a.close()
+    t_b = _pipelined_trainer(tiny_dense, tmp_path / "mid", steps=6, depth=2)
+    assert t_b.maybe_resume() and t_b.step == 3
+    seq_b = _drive(t_b, 6)
+    t_b.close()
+
+    assert len(seq_b) == 3
+    for (idx_ref, loss_ref), (idx_b, loss_b) in zip(seq_ref[3:], seq_b):
+        np.testing.assert_array_equal(idx_ref, idx_b)
+        assert loss_ref == loss_b  # bit-identical
