@@ -11,6 +11,7 @@ Prints ``name,us_per_call,derived`` CSV rows (stub contract). Sections:
   pipeline— schedule-ahead prefetch vs serial (writes BENCH_pipeline.json)
   sched   — online scheduling overhead
   kernels — kernel microbench + Pallas correctness/structure
+  flash   — segment-block-sparse tile skipping (writes BENCH_flash.json)
   roofline— summary over the dry-run artifact (if present)
 """
 
@@ -27,6 +28,7 @@ def main() -> None:
         bench_comm_table,
         bench_distributions,
         bench_e2e_speedup,
+        bench_flash,
         bench_flops_curve,
         bench_kernels,
         bench_pipeline,
@@ -46,6 +48,7 @@ def main() -> None:
     bench_pipeline.run()  # writes BENCH_pipeline.json
     bench_scheduler.run()
     bench_kernels.run()
+    bench_flash.run()  # writes BENCH_flash.json
     bench_v5e_projection.run(iters=6)
     if os.path.exists("artifacts/dryrun.jsonl"):
         from . import roofline

@@ -18,7 +18,7 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 from repro.configs.base import ArchConfig
 from repro.core.perf_model import TPU_V5E
 from repro.data import SkrullDataLoader, SyntheticSFTDataset, chatqa2_like
-from repro.models.transformer import CallConfig
+from repro.models.transformer import ATTENTION_IMPL_CHOICES, CallConfig
 from repro.train.loop import Trainer, TrainerConfig
 
 
@@ -29,6 +29,10 @@ def main():
     ap.add_argument("--batch", type=int, default=16)
     ap.add_argument("--prefetch-depth", type=int, default=2,
                     help="schedule-ahead queue depth; 0 = serial path")
+    ap.add_argument("--attention-impl", default="chunked",
+                    choices=ATTENTION_IMPL_CHOICES,
+                    help="XLA reference paths or the Pallas "
+                         "segment-block-sparse flash kernel")
     args = ap.parse_args()
 
     # ~100M params: qwen-0.5b family at half width/depth
@@ -54,7 +58,7 @@ def main():
     )
     trainer = Trainer(
         cfg,
-        CallConfig(attention_impl="chunked", kv_chunk=512, remat="selective"),
+        CallConfig(attention_impl=args.attention_impl, kv_chunk=512, remat="selective"),
         loader,
         TrainerConfig(
             total_steps=args.steps, lr=3e-4, warmup=20,

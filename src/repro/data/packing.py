@@ -41,37 +41,71 @@ class BucketSpec:
         return self.c_loc + self.c_dist
 
 
-def bucket_ladder(c_budget: int, n_cp: int, steps: int = 8) -> List[BucketSpec]:
+# every ladder capacity is a multiple of the Pallas flash tile (kernels/
+# flash_attention.DEFAULT_BLOCK_Q) so the kernel's ``t % block == 0``
+# assertion can never fire on a ladder bucket and no runtime padding is paid
+FLASH_BLOCK = 128
+
+
+def _ladder_align(c_budget: int, steps: int, align: int) -> Tuple[int, int, int]:
+    """(align, c_aligned, unit) shared by bucket_ladder and
+    scheduler_bucket_size — the coverage proof in choose_bucket needs both
+    to agree on the aligned budget and the ladder unit.
+
+    Budgets too small to align (< 2*align: the aligned C_sched would hit 0)
+    fall back to the unaligned ladder; the flash wrapper pads those."""
+    if c_budget < 2 * align:
+        align = 1
+    c_aln = (c_budget // align) * align
+    unit = max((max(c_aln // steps, 1) // align) * align, align)
+    return align, c_aln, unit
+
+
+def bucket_ladder(
+    c_budget: int, n_cp: int, steps: int = 8, align: int = FLASH_BLOCK
+) -> List[BucketSpec]:
     """Bucket shapes for the compiled-step cache.
 
-    Full-budget splits (c_loc = k*unit, c_dist = C - c_loc, k = 0..steps)
+    Full-budget splits (c_loc = k*unit, c_dist = C_aln - c_loc, k = 0 until
+    c_loc reaches C_aln — alignment rounds unit DOWN, so stopping at
+    k = steps could leave max c_loc < C_sched and break coverage)
     guarantee coverage of every feasible plan (see choose_bucket); additional
     sub-budget totals (C/2, C/4, C/8 with coarse splits) cut padding compute
     for small micro-batches — all entries allocate <= the C_budget activation
-    bound, so Eq. 7 memory safety is shape-independent. Entries are ordered
-    smallest-total-first, then least-c_loc, so choose_bucket's first match is
-    the cheapest covering shape.
+    bound (alignment rounds DOWN), so Eq. 7 memory safety is
+    shape-independent. Every c_loc/c_dist is a multiple of ``align`` (the
+    flash kernel tile). Entries are ordered smallest-total-first, then
+    least-c_loc, so choose_bucket's first match is the cheapest covering
+    shape.
     """
-    unit = max(c_budget // steps, 1)
+    align, c_aln, unit = _ladder_align(c_budget, steps, align)
     specs = set()
-    for k in range(steps + 1):
-        c_loc = min(unit * k, c_budget)
-        specs.add((c_loc, c_budget - c_loc))
+    k = 0
+    while True:
+        c_loc = min(unit * k, c_aln)
+        specs.add((c_loc, c_aln - c_loc))
+        if c_loc >= c_aln:
+            break
+        k += 1
     for denom, subsplits in ((8, 2), (4, 2), (2, 4)):
-        total = c_budget // denom
+        total = (c_aln // denom // align) * align
         if total < unit:
             continue
         for k in range(subsplits + 1):
-            c_loc = total * k // subsplits
+            c_loc = (total * k // subsplits // align) * align
             specs.add((c_loc, total - c_loc))
     ordered = sorted(specs, key=lambda p: (p[0] + p[1], p[0]))
     return [BucketSpec(n_cp=n_cp, c_loc=a, c_dist=b) for a, b in ordered]
 
 
-def scheduler_bucket_size(c_budget: int, steps: int = 8) -> int:
-    """C_sched handed to Alg. 1/2: one ladder unit of slack guarantees a
-    ladder entry covers any feasible (local, dist) split."""
-    return c_budget - max(c_budget // steps, 1)
+def scheduler_bucket_size(
+    c_budget: int, steps: int = 8, align: int = FLASH_BLOCK
+) -> int:
+    """C_sched handed to Alg. 1/2: one ladder unit of slack below the
+    aligned budget guarantees a ladder entry covers any feasible
+    (local, dist) split."""
+    _, c_aln, unit = _ladder_align(c_budget, steps, align)
+    return c_aln - unit
 
 
 def choose_bucket(
@@ -79,9 +113,11 @@ def choose_bucket(
 ) -> BucketSpec:
     """Smallest-c_loc ladder entry covering the micro-batch.
 
-    For any plan with loc + dist <= C_sched = C - unit: the chosen
-    c_loc = ceil(loc/unit)*unit >= loc and c_dist = C - c_loc >=
-    C - loc - unit >= dist. Hence coverage always exists.
+    For any plan with loc + dist <= C_sched = C_aln - unit: the chosen
+    c_loc = ceil(loc/unit)*unit >= loc and c_dist = C_aln - c_loc >=
+    C_aln - loc - unit >= dist. Hence coverage always exists (C_aln and
+    unit are the shared ``_ladder_align`` values, so the slack argument is
+    unchanged by flash-tile alignment).
     """
     for spec in ladder:  # ladder is ascending in c_loc
         if spec.c_loc >= loc_needed and spec.c_dist >= dist_needed:
@@ -233,6 +269,7 @@ def pack_microbatch(
 
 __all__ = [
     "BucketSpec",
+    "FLASH_BLOCK",
     "bucket_ladder",
     "scheduler_bucket_size",
     "choose_bucket",

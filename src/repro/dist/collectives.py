@@ -21,8 +21,9 @@ models/transformer.py (``CallConfig.dist_attn="ring"``).
 
 The per-stripe update is ``_ring_step_xla`` (pure jnp, differentiable) or
 ``ring_step_pallas`` — a Pallas TPU kernel performing one flash-attention
-block update of the (m, l, acc) carry; on CPU it runs in interpret mode and
-is forward-only (the training path uses the XLA step, which JAX
+block update of the (m, l, acc) carry; lowering mode is backend-detected
+(kernels/backend.py: interpret on CPU, Mosaic on TPU) and the kernel is
+forward-only (the training path uses the XLA step, which JAX
 differentiates through the scan).
 
 Masking matches models/attention.py: same segment, segment != 0 (padding),
@@ -39,6 +40,8 @@ from typing import Optional, Tuple
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+
+from ..kernels.backend import resolve_interpret
 
 # the ONE packed-bucket visibility rule and masking sentinel — shared with
 # every attention impl (attention.py has no dist import, so this does not
@@ -149,11 +152,12 @@ def ring_step_pallas(
     acc: jnp.ndarray,  # (Hq, T, D)
     window: Optional[int] = None,
     block_q: int = 128,
-    interpret: bool = True,
+    interpret: Optional[bool] = None,
 ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
     """One ring step on the accelerator: flash-style block update of the
     online-softmax carry against a single KV stripe (kernel layout as
-    kernels/flash_attention.py: heads leading, metadata 2D for lane tiling)."""
+    kernels/flash_attention.py: heads leading, metadata 2D for lane tiling).
+    ``interpret=None`` auto-detects the backend (kernels/backend.py)."""
     hq, t, d = q.shape
     hkv, c, _ = k.shape
     g = hq // hkv
@@ -193,7 +197,7 @@ def ring_step_pallas(
             jax.ShapeDtypeStruct((hq, t), jnp.float32),
             jax.ShapeDtypeStruct((hq, t, d), jnp.float32),
         ],
-        interpret=interpret,
+        interpret=resolve_interpret(interpret),
     )(q, k, v, qs2, ks2, qp2, kp2, m, l, acc)
 
 
@@ -255,7 +259,7 @@ def ring_attention_rows(
     pos: jnp.ndarray,
     window: Optional[int] = None,
     use_pallas: bool = False,
-    interpret: bool = True,
+    interpret: Optional[bool] = None,
 ) -> jnp.ndarray:
     """All rows' queries attend the full row-concatenated stream via a stripe
     loop — the single-program twin of ``ring_attention`` (identical per-stripe

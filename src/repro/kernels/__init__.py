@@ -1,11 +1,22 @@
 """Pallas TPU kernels (validated in interpret mode on CPU; Mosaic on TPU).
 
-flash_attention.py — segment-masked flash attention fwd + two-sweep bwd
+flash_attention.py — segment-block-sparse flash attention fwd + two-sweep bwd
+sparsity.py        — per-block segment metadata + live/full tile maps
+ops.py             — jit'd + custom_vjp public wrappers (training hot path)
 ssd_scan.py        — Mamba2 SSD chunked scan fwd
-ops.py             — jit'd + custom_vjp public wrappers
+backend.py         — interpret-vs-Mosaic auto-detection
 ref.py             — pure-jnp oracles
 """
 
+from .backend import resolve_interpret, set_interpret_override
 from .ops import flash_attention, ssd_scan_op
+from .sparsity import live_fraction, packed_live_fraction
 
-__all__ = ["flash_attention", "ssd_scan_op"]
+__all__ = [
+    "flash_attention",
+    "ssd_scan_op",
+    "resolve_interpret",
+    "set_interpret_override",
+    "live_fraction",
+    "packed_live_fraction",
+]

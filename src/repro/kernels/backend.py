@@ -1,0 +1,48 @@
+"""Backend-aware Pallas lowering mode.
+
+Every Pallas kernel in this repo takes an ``interpret`` flag: ``True``
+executes the kernel body eagerly at the Python/XLA level (the only option on
+this CPU container, and how the kernels are validated), ``False`` lowers
+through Mosaic to a real TPU kernel. Historically each call site hardcoded
+``interpret=True``, which silently de-optimised real-TPU runs; now every
+kernel defaults to ``interpret=None`` and resolves it here: interpret unless
+``jax.default_backend()`` is a TPU.
+
+Tests (and brave GPU users) can pin the mode globally with
+``set_interpret_override`` without threading a flag through every layer.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+_override: Optional[bool] = None
+
+
+def set_interpret_override(value: Optional[bool]) -> None:
+    """Force Pallas interpret mode process-wide; ``None`` restores
+    backend auto-detection. Returns nothing; intended for tests."""
+    global _override
+    _override = value
+
+
+def default_interpret() -> bool:
+    """True unless running on a real TPU backend (where Mosaic lowering is
+    the whole point). Imported lazily so importing repro.kernels never
+    forces jax backend initialisation."""
+    import jax
+
+    return jax.default_backend() != "tpu"
+
+
+def resolve_interpret(interpret: Optional[bool] = None) -> bool:
+    """Resolve an ``interpret=None`` kernel default: explicit argument wins,
+    then the test override, then backend auto-detection."""
+    if interpret is not None:
+        return bool(interpret)
+    if _override is not None:
+        return _override
+    return default_interpret()
+
+
+__all__ = ["default_interpret", "resolve_interpret", "set_interpret_override"]

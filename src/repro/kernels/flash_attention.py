@@ -1,20 +1,35 @@
-"""Pallas TPU flash attention with segment-id masking (packed Skrull buckets).
+"""Pallas TPU flash attention with segment-block-sparse tile skipping.
 
-TPU-native adaptation of FlashAttention-2 (DESIGN.md §2): BlockSpec tiling
+TPU-native adaptation of FlashAttention-2 (DESIGN.md §2/§11) and the
+production training attention path (``CallConfig.attention_impl="flash"``
+dispatches here through ``kernels/ops.flash_attention``): BlockSpec tiling
 with MXU-aligned (128, 128) score blocks held in VMEM, online softmax carried
-in VMEM scratch across the sequential k-block grid dimension, block-level
-skipping of fully-masked tiles (packing contiguity makes buffer order causal
-inside a segment, so any tile with q_block entirely before k_block is dead —
-~2x FLOP saving on causal workloads).
+in VMEM scratch across the sequential k-block grid dimension.
+
+Tile skipping is *segment-aware*: per-block min/max segment ids and position
+ranges are precomputed from the packed metadata and fed through scalar
+prefetch (``pltpu.PrefetchScalarGridSpec``), so a (q_block, k_block) tile is
+skipped — in the forward AND both backward sweeps — whenever its segment
+ranges are disjoint, either block is pure padding, or every pair is
+anti-causal (kernels/sparsity.py documents the exact predicate). For
+short-heavy packed buckets most tiles are cross-segment, so this goes far
+beyond the ~2x causal-order skip. Tiles that are uniformly ONE live segment
+and fully causal take a mask-free fast path (no visibility-mask compute).
+
+The dk/dv backward sweep accumulates over the GQA group dimension *inside*
+the kernel (``gi`` is an inner sequential grid dimension), emitting
+(Hkv, S, D) directly — peak backward memory no longer scales with the group
+size g the way the old materialise-(Hkv, g, S, D)-then-XLA-sum scheme did.
 
 Layouts: q (Hq, T, D); k, v (Hkv, S, D); segment/position metadata (T, 1) /
 (S, 1) int32 (2D for TPU lane tiling). Forward also emits the logsumexp
 (Hq, T) consumed by the two backward kernels (dq-pass and dkv-pass — the
 standard two-sweep flash backward; no atomics on TPU).
 
-Validated in interpret mode against kernels/ref.py over shape/dtype sweeps
-(tests/test_kernels_flash.py) — this container has no TPU; on a real v5e the
-same pallas_call lowers through Mosaic unchanged.
+``interpret=None`` auto-detects the backend (kernels/backend.py): kernel
+bodies execute in Python on CPU (how they are validated against
+kernels/ref.py — tests/test_kernels_flash.py), and lower through Mosaic
+unchanged on a real TPU.
 """
 
 from __future__ import annotations
@@ -27,6 +42,9 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
+
+from .backend import resolve_interpret
+from .sparsity import block_seg_info, tile_full, tile_live
 
 NEG = -1e30
 DEFAULT_BLOCK_Q = 128
@@ -44,18 +62,51 @@ def _mask_block(qs, ks, qp, kp, window: Optional[int]):
     return m
 
 
+def _tile_flags(
+    qinfo_ref, kinfo_ref, qb, kb,
+    *, block_q: int, block_k: int, window: Optional[int],
+    same_buffer: bool, block_sparse: bool,
+):
+    """In-kernel instantiation of sparsity.tile_live / tile_full on the
+    prefetched per-block scalars — the SAME predicate functions the numpy
+    maps and telemetry use, evaluated on scalars. Returns (live, full);
+    ``full is None`` means "always use the masked path" (sparsity
+    disabled)."""
+    order_live = (qb + 1) * block_q > kb * block_k
+    if not block_sparse:
+        # legacy behaviour: causal buffer-order skip only (and no skip at
+        # all when q/k index different buffers)
+        return (order_live if same_buffer else qb >= 0), None
+    q = tuple(qinfo_ref[i, qb] for i in range(5))
+    k = tuple(kinfo_ref[i, kb] for i in range(5))
+    live = tile_live(q, k, window)
+    if same_buffer:
+        live &= order_live
+    return live, tile_full(q, k, window)
+
+
+def _block_infos(q_seg, kv_seg, q_pos, kv_pos, block_q: int, block_k: int):
+    """Scalar-prefetch operands: (5, n_qb) and (5, n_kb) int32."""
+    qinfo = block_seg_info(q_seg, q_pos, block_q, xp=jnp)
+    kinfo = block_seg_info(kv_seg, kv_pos, block_k, xp=jnp)
+    return qinfo, kinfo
+
+
 # ---------------------------------------------------------------------------
 # Forward
 # ---------------------------------------------------------------------------
 
 
 def _fwd_kernel(
+    qinfo_ref, kinfo_ref,  # scalar prefetch
     q_ref, k_ref, v_ref, qs_ref, ks_ref, qp_ref, kp_ref,  # inputs
     o_ref, lse_ref,  # outputs
     m_scr, l_scr, acc_scr,  # scratch
-    *, scale: float, window: Optional[int], block_q: int, block_k: int, n_kb: int,
+    *, scale: float, window: Optional[int], block_q: int, block_k: int,
+    n_kb: int, same_buffer: bool, block_sparse: bool,
 ):
     kb = pl.program_id(3)
+    qb = pl.program_id(2)
 
     @pl.when(kb == 0)
     def _init():
@@ -63,12 +114,13 @@ def _fwd_kernel(
         l_scr[...] = jnp.zeros_like(l_scr)
         acc_scr[...] = jnp.zeros_like(acc_scr)
 
-    qb = pl.program_id(2)
-    # block-skip: all q tokens strictly before all k tokens in buffer order
-    # => causally dead for packed layouts (same-seg needs kpos<=qpos).
-    live_block = (qb + 1) * block_q > kb * block_k
+    live, full = _tile_flags(
+        qinfo_ref, kinfo_ref, qb, kb,
+        block_q=block_q, block_k=block_k, window=window,
+        same_buffer=same_buffer, block_sparse=block_sparse,
+    )
 
-    @pl.when(live_block)
+    @pl.when(live)
     def _compute():
         q = q_ref[0].astype(jnp.float32)  # (BQ, D)
         k = k_ref[0].astype(jnp.float32)  # (BK, D)
@@ -76,20 +128,34 @@ def _fwd_kernel(
         s = jax.lax.dot_general(
             q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
         ) * scale  # (BQ, BK)
-        mask = _mask_block(qs_ref[...], ks_ref[...], qp_ref[...], kp_ref[...], window)
-        s = jnp.where(mask, s, NEG)
 
-        m_prev = m_scr[...][:, :1]  # (BQ, 1)
-        m_cur = jnp.max(s, axis=1, keepdims=True)
-        m_new = jnp.maximum(m_prev, m_cur)
-        p = jnp.exp(s - m_new) * mask  # (BQ, BK)
-        corr = jnp.exp(m_prev - m_new)  # (BQ, 1)
-        l_new = l_scr[...][:, :1] * corr + jnp.sum(p, axis=1, keepdims=True)
-        acc_scr[...] = acc_scr[...] * corr + jax.lax.dot_general(
-            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
-        )
-        m_scr[...] = jnp.broadcast_to(m_new, m_scr.shape)
-        l_scr[...] = jnp.broadcast_to(l_new, l_scr.shape)
+        def _update(s_m, p_mask):
+            m_prev = m_scr[...][:, :1]  # (BQ, 1)
+            m_new = jnp.maximum(m_prev, jnp.max(s_m, axis=1, keepdims=True))
+            p = jnp.exp(s_m - m_new)  # (BQ, BK)
+            if p_mask is not None:
+                p = p * p_mask
+            corr = jnp.exp(m_prev - m_new)  # (BQ, 1)
+            l_new = l_scr[...][:, :1] * corr + jnp.sum(p, axis=1, keepdims=True)
+            acc_scr[...] = acc_scr[...] * corr + jax.lax.dot_general(
+                p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+            )
+            m_scr[...] = jnp.broadcast_to(m_new, m_scr.shape)
+            l_scr[...] = jnp.broadcast_to(l_new, l_scr.shape)
+
+        def _masked():
+            mask = _mask_block(
+                qs_ref[...], ks_ref[...], qp_ref[...], kp_ref[...], window
+            )
+            _update(jnp.where(mask, s, NEG), mask)
+
+        if full is None:
+            _masked()
+        else:
+            # uniformly-one-live-segment, fully-causal tile: the mask is
+            # all-true — skip building it (identical arithmetic otherwise)
+            pl.when(full)(lambda: _update(s, None))
+            pl.when(jnp.logical_not(full))(_masked)
 
     @pl.when(kb == n_kb - 1)
     def _finalize():
@@ -112,7 +178,9 @@ def flash_attention_fwd(
     window: Optional[int] = None,
     block_q: int = DEFAULT_BLOCK_Q,
     block_k: int = DEFAULT_BLOCK_K,
-    interpret: bool = True,
+    interpret: Optional[bool] = None,
+    same_buffer: bool = True,
+    block_sparse: bool = True,
 ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     hq, t, d = q.shape
     hkv, s, _ = k.shape
@@ -127,8 +195,8 @@ def flash_attention_fwd(
     ks2 = kv_seg.reshape(s, 1).astype(jnp.int32)
     qp2 = q_pos.reshape(t, 1).astype(jnp.int32)
     kp2 = kv_pos.reshape(s, 1).astype(jnp.int32)
+    qinfo, kinfo = _block_infos(q_seg, kv_seg, q_pos, kv_pos, block_q, block_k)
 
-    grid = (hkv, g, n_qb, n_kb)
     kernel = functools.partial(
         _fwd_kernel,
         scale=scale,
@@ -136,34 +204,40 @@ def flash_attention_fwd(
         block_q=block_q,
         block_k=block_k,
         n_kb=n_kb,
+        same_buffer=same_buffer,
+        block_sparse=block_sparse,
     )
-    out, lse = pl.pallas_call(
-        kernel,
-        grid=grid,
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(hkv, g, n_qb, n_kb),
         in_specs=[
-            pl.BlockSpec((1, block_q, d), lambda h, gi, qb, kb: (h * g + gi, qb, 0)),
-            pl.BlockSpec((1, block_k, d), lambda h, gi, qb, kb: (h, kb, 0)),
-            pl.BlockSpec((1, block_k, d), lambda h, gi, qb, kb: (h, kb, 0)),
-            pl.BlockSpec((block_q, 1), lambda h, gi, qb, kb: (qb, 0)),
-            pl.BlockSpec((block_k, 1), lambda h, gi, qb, kb: (kb, 0)),
-            pl.BlockSpec((block_q, 1), lambda h, gi, qb, kb: (qb, 0)),
-            pl.BlockSpec((block_k, 1), lambda h, gi, qb, kb: (kb, 0)),
+            pl.BlockSpec((1, block_q, d), lambda h, gi, qb, kb, *_: (h * g + gi, qb, 0)),
+            pl.BlockSpec((1, block_k, d), lambda h, gi, qb, kb, *_: (h, kb, 0)),
+            pl.BlockSpec((1, block_k, d), lambda h, gi, qb, kb, *_: (h, kb, 0)),
+            pl.BlockSpec((block_q, 1), lambda h, gi, qb, kb, *_: (qb, 0)),
+            pl.BlockSpec((block_k, 1), lambda h, gi, qb, kb, *_: (kb, 0)),
+            pl.BlockSpec((block_q, 1), lambda h, gi, qb, kb, *_: (qb, 0)),
+            pl.BlockSpec((block_k, 1), lambda h, gi, qb, kb, *_: (kb, 0)),
         ],
         out_specs=[
-            pl.BlockSpec((1, block_q, d), lambda h, gi, qb, kb: (h * g + gi, qb, 0)),
-            pl.BlockSpec((1, block_q), lambda h, gi, qb, kb: (h * g + gi, qb)),
-        ],
-        out_shape=[
-            jax.ShapeDtypeStruct((hq, t, d), q.dtype),
-            jax.ShapeDtypeStruct((hq, t), jnp.float32),
+            pl.BlockSpec((1, block_q, d), lambda h, gi, qb, kb, *_: (h * g + gi, qb, 0)),
+            pl.BlockSpec((1, block_q), lambda h, gi, qb, kb, *_: (h * g + gi, qb)),
         ],
         scratch_shapes=[
             pltpu.VMEM((block_q, 128), jnp.float32),
             pltpu.VMEM((block_q, 128), jnp.float32),
             pltpu.VMEM((block_q, d), jnp.float32),
         ],
-        interpret=interpret,
-    )(q, k, v, qs2, ks2, qp2, kp2)
+    )
+    out, lse = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((hq, t, d), q.dtype),
+            jax.ShapeDtypeStruct((hq, t), jnp.float32),
+        ],
+        interpret=resolve_interpret(interpret),
+    )(qinfo, kinfo, q, k, v, qs2, ks2, qp2, kp2)
     return out, lse
 
 
@@ -173,21 +247,27 @@ def flash_attention_fwd(
 
 
 def _bwd_dq_kernel(
+    qinfo_ref, kinfo_ref,
     q_ref, k_ref, v_ref, qs_ref, ks_ref, qp_ref, kp_ref, do_ref, lse_ref, delta_ref,
     dq_ref,
     dq_scr,
-    *, scale: float, window: Optional[int], block_q: int, block_k: int, n_kb: int,
+    *, scale: float, window: Optional[int], block_q: int, block_k: int,
+    n_kb: int, same_buffer: bool, block_sparse: bool,
 ):
     kb = pl.program_id(3)
+    qb = pl.program_id(2)
 
     @pl.when(kb == 0)
     def _init():
         dq_scr[...] = jnp.zeros_like(dq_scr)
 
-    qb = pl.program_id(2)
-    live_block = (qb + 1) * block_q > kb * block_k
+    live, full = _tile_flags(
+        qinfo_ref, kinfo_ref, qb, kb,
+        block_q=block_q, block_k=block_k, window=window,
+        same_buffer=same_buffer, block_sparse=block_sparse,
+    )
 
-    @pl.when(live_block)
+    @pl.when(live)
     def _compute():
         q = q_ref[0].astype(jnp.float32)
         k = k_ref[0].astype(jnp.float32)
@@ -198,15 +278,27 @@ def _bwd_dq_kernel(
         s = jax.lax.dot_general(
             q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
         ) * scale
-        mask = _mask_block(qs_ref[...], ks_ref[...], qp_ref[...], kp_ref[...], window)
-        p = jnp.where(mask, jnp.exp(s - lse), 0.0)
-        dp = jax.lax.dot_general(
-            do, v, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
-        )
-        ds = p * (dp - delta) * scale
-        dq_scr[...] += jax.lax.dot_general(
-            ds, k, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
-        )
+
+        def _accum(p):
+            dp = jax.lax.dot_general(
+                do, v, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+            )
+            ds = p * (dp - delta) * scale
+            dq_scr[...] += jax.lax.dot_general(
+                ds, k, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+            )
+
+        def _masked():
+            mask = _mask_block(
+                qs_ref[...], ks_ref[...], qp_ref[...], kp_ref[...], window
+            )
+            _accum(jnp.where(mask, jnp.exp(s - lse), 0.0))
+
+        if full is None:
+            _masked()
+        else:
+            pl.when(full)(lambda: _accum(jnp.exp(s - lse)))
+            pl.when(jnp.logical_not(full))(_masked)
 
     @pl.when(kb == n_kb - 1)
     def _finalize():
@@ -214,27 +306,36 @@ def _bwd_dq_kernel(
 
 
 # ---------------------------------------------------------------------------
-# Backward: pass 2 (dk, dv), gridded over k blocks, loops q blocks
+# Backward: pass 2 (dk, dv), gridded over k blocks; the GQA group dim and the
+# q blocks are INNER sequential grid dims accumulating into one (BK, D)
+# scratch pair — no (Hkv, g, S, D) intermediate, no XLA group-sum
 # ---------------------------------------------------------------------------
 
 
 def _bwd_dkv_kernel(
+    qinfo_ref, kinfo_ref,
     q_ref, k_ref, v_ref, qs_ref, ks_ref, qp_ref, kp_ref, do_ref, lse_ref, delta_ref,
     dk_ref, dv_ref,
     dk_scr, dv_scr,
-    *, scale: float, window: Optional[int], block_q: int, block_k: int, n_qb: int,
+    *, scale: float, window: Optional[int], block_q: int, block_k: int,
+    n_qb: int, g: int, same_buffer: bool, block_sparse: bool,
 ):
+    gi = pl.program_id(2)
     qb = pl.program_id(3)
 
-    @pl.when(qb == 0)
+    @pl.when((gi == 0) & (qb == 0))
     def _init():
         dk_scr[...] = jnp.zeros_like(dk_scr)
         dv_scr[...] = jnp.zeros_like(dv_scr)
 
-    kb = pl.program_id(2)
-    live_block = (qb + 1) * block_q > kb * block_k
+    kb = pl.program_id(1)
+    live, full = _tile_flags(
+        qinfo_ref, kinfo_ref, qb, kb,
+        block_q=block_q, block_k=block_k, window=window,
+        same_buffer=same_buffer, block_sparse=block_sparse,
+    )
 
-    @pl.when(live_block)
+    @pl.when(live)
     def _compute():
         q = q_ref[0].astype(jnp.float32)
         k = k_ref[0].astype(jnp.float32)
@@ -245,23 +346,35 @@ def _bwd_dkv_kernel(
         s = jax.lax.dot_general(
             q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
         ) * scale
-        mask = _mask_block(qs_ref[...], ks_ref[...], qp_ref[...], kp_ref[...], window)
-        p = jnp.where(mask, jnp.exp(s - lse), 0.0)  # (BQ, BK)
-        dv_scr[...] += jax.lax.dot_general(
-            p, do, (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32
-        )
-        dp = jax.lax.dot_general(
-            do, v, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
-        )
-        ds = p * (dp - delta) * scale
-        dk_scr[...] += jax.lax.dot_general(
-            ds, q, (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32
-        )
 
-    @pl.when(qb == n_qb - 1)
+        def _accum(p):  # p (BQ, BK)
+            dv_scr[...] += jax.lax.dot_general(
+                p, do, (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32
+            )
+            dp = jax.lax.dot_general(
+                do, v, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+            )
+            ds = p * (dp - delta) * scale
+            dk_scr[...] += jax.lax.dot_general(
+                ds, q, (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32
+            )
+
+        def _masked():
+            mask = _mask_block(
+                qs_ref[...], ks_ref[...], qp_ref[...], kp_ref[...], window
+            )
+            _accum(jnp.where(mask, jnp.exp(s - lse), 0.0))
+
+        if full is None:
+            _masked()
+        else:
+            pl.when(full)(lambda: _accum(jnp.exp(s - lse)))
+            pl.when(jnp.logical_not(full))(_masked)
+
+    @pl.when((gi == g - 1) & (qb == n_qb - 1))
     def _finalize():
-        dk_ref[0, 0] = dk_scr[...].astype(dk_ref.dtype)
-        dv_ref[0, 0] = dv_scr[...].astype(dv_ref.dtype)
+        dk_ref[0] = dk_scr[...].astype(dk_ref.dtype)
+        dv_ref[0] = dv_scr[...].astype(dv_ref.dtype)
 
 
 def flash_attention_bwd(
@@ -269,7 +382,9 @@ def flash_attention_bwd(
     window: Optional[int] = None,
     block_q: int = DEFAULT_BLOCK_Q,
     block_k: int = DEFAULT_BLOCK_K,
-    interpret: bool = True,
+    interpret: Optional[bool] = None,
+    same_buffer: bool = True,
+    block_sparse: bool = True,
 ):
     hq, t, d = q.shape
     hkv, s, _ = k.shape
@@ -278,76 +393,87 @@ def flash_attention_bwd(
     block_k = min(block_k, s)
     n_qb, n_kb = t // block_q, s // block_k
     scale = 1.0 / math.sqrt(d)
+    interpret = resolve_interpret(interpret)
 
     delta = jnp.sum(out.astype(jnp.float32) * do.astype(jnp.float32), axis=-1)  # (Hq, T)
     qs2 = q_seg.reshape(t, 1).astype(jnp.int32)
     ks2 = kv_seg.reshape(s, 1).astype(jnp.int32)
     qp2 = q_pos.reshape(t, 1).astype(jnp.int32)
     kp2 = kv_pos.reshape(s, 1).astype(jnp.int32)
+    qinfo, kinfo = _block_infos(q_seg, kv_seg, q_pos, kv_pos, block_q, block_k)
 
     common_in = [
-        pl.BlockSpec((1, block_q, d), lambda h, gi, a, b: (h * g + gi, a, 0)),  # q
-        pl.BlockSpec((1, block_k, d), lambda h, gi, a, b: (h, b, 0)),  # k
-        pl.BlockSpec((1, block_k, d), lambda h, gi, a, b: (h, b, 0)),  # v
-        pl.BlockSpec((block_q, 1), lambda h, gi, a, b: (a, 0)),
-        pl.BlockSpec((block_k, 1), lambda h, gi, a, b: (b, 0)),
-        pl.BlockSpec((block_q, 1), lambda h, gi, a, b: (a, 0)),
-        pl.BlockSpec((block_k, 1), lambda h, gi, a, b: (b, 0)),
-        pl.BlockSpec((1, block_q, d), lambda h, gi, a, b: (h * g + gi, a, 0)),  # do
-        pl.BlockSpec((1, block_q), lambda h, gi, a, b: (h * g + gi, a)),  # lse
-        pl.BlockSpec((1, block_q), lambda h, gi, a, b: (h * g + gi, a)),  # delta
+        pl.BlockSpec((1, block_q, d), lambda h, gi, a, b, *_: (h * g + gi, a, 0)),  # q
+        pl.BlockSpec((1, block_k, d), lambda h, gi, a, b, *_: (h, b, 0)),  # k
+        pl.BlockSpec((1, block_k, d), lambda h, gi, a, b, *_: (h, b, 0)),  # v
+        pl.BlockSpec((block_q, 1), lambda h, gi, a, b, *_: (a, 0)),
+        pl.BlockSpec((block_k, 1), lambda h, gi, a, b, *_: (b, 0)),
+        pl.BlockSpec((block_q, 1), lambda h, gi, a, b, *_: (a, 0)),
+        pl.BlockSpec((block_k, 1), lambda h, gi, a, b, *_: (b, 0)),
+        pl.BlockSpec((1, block_q, d), lambda h, gi, a, b, *_: (h * g + gi, a, 0)),  # do
+        pl.BlockSpec((1, block_q), lambda h, gi, a, b, *_: (h * g + gi, a)),  # lse
+        pl.BlockSpec((1, block_q), lambda h, gi, a, b, *_: (h * g + gi, a)),  # delta
     ]
 
     dq = pl.pallas_call(
         functools.partial(
             _bwd_dq_kernel, scale=scale, window=window,
             block_q=block_q, block_k=block_k, n_kb=n_kb,
+            same_buffer=same_buffer, block_sparse=block_sparse,
         ),
-        grid=(hkv, g, n_qb, n_kb),
-        in_specs=common_in,
-        out_specs=pl.BlockSpec((1, block_q, d), lambda h, gi, qb, kb: (h * g + gi, qb, 0)),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,
+            grid=(hkv, g, n_qb, n_kb),
+            in_specs=common_in,
+            out_specs=pl.BlockSpec(
+                (1, block_q, d), lambda h, gi, qb, kb, *_: (h * g + gi, qb, 0)
+            ),
+            scratch_shapes=[pltpu.VMEM((block_q, d), jnp.float32)],
+        ),
         out_shape=jax.ShapeDtypeStruct((hq, t, d), jnp.float32),
-        scratch_shapes=[pltpu.VMEM((block_q, d), jnp.float32)],
         interpret=interpret,
-    )(q, k, v, qs2, ks2, qp2, kp2, do, lse, delta)
+    )(qinfo, kinfo, q, k, v, qs2, ks2, qp2, kp2, do, lse, delta)
 
-    # dkv pass: grid loops (kb outer static dim, qb innermost sequential)
+    # dkv pass: kb is the outer (output-owning) dim; (gi, qb) are INNER
+    # sequential dims so the whole GQA group accumulates into one scratch
     dkv_in = [
-        pl.BlockSpec((1, block_q, d), lambda h, gi, kb, qb: (h * g + gi, qb, 0)),  # q
-        pl.BlockSpec((1, block_k, d), lambda h, gi, kb, qb: (h, kb, 0)),  # k
-        pl.BlockSpec((1, block_k, d), lambda h, gi, kb, qb: (h, kb, 0)),  # v
-        pl.BlockSpec((block_q, 1), lambda h, gi, kb, qb: (qb, 0)),
-        pl.BlockSpec((block_k, 1), lambda h, gi, kb, qb: (kb, 0)),
-        pl.BlockSpec((block_q, 1), lambda h, gi, kb, qb: (qb, 0)),
-        pl.BlockSpec((block_k, 1), lambda h, gi, kb, qb: (kb, 0)),
-        pl.BlockSpec((1, block_q, d), lambda h, gi, kb, qb: (h * g + gi, qb, 0)),  # do
-        pl.BlockSpec((1, block_q), lambda h, gi, kb, qb: (h * g + gi, qb)),  # lse
-        pl.BlockSpec((1, block_q), lambda h, gi, kb, qb: (h * g + gi, qb)),  # delta
+        pl.BlockSpec((1, block_q, d), lambda h, kb, gi, qb, *_: (h * g + gi, qb, 0)),  # q
+        pl.BlockSpec((1, block_k, d), lambda h, kb, gi, qb, *_: (h, kb, 0)),  # k
+        pl.BlockSpec((1, block_k, d), lambda h, kb, gi, qb, *_: (h, kb, 0)),  # v
+        pl.BlockSpec((block_q, 1), lambda h, kb, gi, qb, *_: (qb, 0)),
+        pl.BlockSpec((block_k, 1), lambda h, kb, gi, qb, *_: (kb, 0)),
+        pl.BlockSpec((block_q, 1), lambda h, kb, gi, qb, *_: (qb, 0)),
+        pl.BlockSpec((block_k, 1), lambda h, kb, gi, qb, *_: (kb, 0)),
+        pl.BlockSpec((1, block_q, d), lambda h, kb, gi, qb, *_: (h * g + gi, qb, 0)),  # do
+        pl.BlockSpec((1, block_q), lambda h, kb, gi, qb, *_: (h * g + gi, qb)),  # lse
+        pl.BlockSpec((1, block_q), lambda h, kb, gi, qb, *_: (h * g + gi, qb)),  # delta
     ]
-    dk_g, dv_g = pl.pallas_call(
+    dk, dv = pl.pallas_call(
         functools.partial(
             _bwd_dkv_kernel, scale=scale, window=window,
-            block_q=block_q, block_k=block_k, n_qb=n_qb,
+            block_q=block_q, block_k=block_k, n_qb=n_qb, g=g,
+            same_buffer=same_buffer, block_sparse=block_sparse,
         ),
-        grid=(hkv, g, n_kb, n_qb),
-        in_specs=dkv_in,
-        out_specs=[
-            pl.BlockSpec((1, 1, block_k, d), lambda h, gi, kb, qb: (h, gi, kb, 0)),
-            pl.BlockSpec((1, 1, block_k, d), lambda h, gi, kb, qb: (h, gi, kb, 0)),
-        ],
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,
+            grid=(hkv, n_kb, g, n_qb),
+            in_specs=dkv_in,
+            out_specs=[
+                pl.BlockSpec((1, block_k, d), lambda h, kb, gi, qb, *_: (h, kb, 0)),
+                pl.BlockSpec((1, block_k, d), lambda h, kb, gi, qb, *_: (h, kb, 0)),
+            ],
+            scratch_shapes=[
+                pltpu.VMEM((block_k, d), jnp.float32),
+                pltpu.VMEM((block_k, d), jnp.float32),
+            ],
+        ),
         out_shape=[
-            jax.ShapeDtypeStruct((hkv, g, s, d), jnp.float32),
-            jax.ShapeDtypeStruct((hkv, g, s, d), jnp.float32),
-        ],
-        scratch_shapes=[
-            pltpu.VMEM((block_k, d), jnp.float32),
-            pltpu.VMEM((block_k, d), jnp.float32),
+            jax.ShapeDtypeStruct((hkv, s, d), jnp.float32),
+            jax.ShapeDtypeStruct((hkv, s, d), jnp.float32),
         ],
         interpret=interpret,
-    )(q, k, v, qs2, ks2, qp2, kp2, do, lse, delta)
+    )(qinfo, kinfo, q, k, v, qs2, ks2, qp2, kp2, do, lse, delta)
 
-    dk = dk_g.sum(axis=1)  # reduce GQA group contributions
-    dv = dv_g.sum(axis=1)
     return dq.astype(q.dtype), dk.astype(k.dtype), dv.astype(v.dtype)
 
 

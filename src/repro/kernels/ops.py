@@ -1,9 +1,14 @@
 """jit'd public wrappers for the Pallas kernels.
 
-``flash_attention`` is differentiable (custom_vjp binding the fwd kernel to
-the two backward-sweep kernels) and drop-in compatible with
-models/attention.py's (T, H, D) convention. ``INTERPRET`` flips Pallas
-interpret mode: True on this CPU container (validation), False on real TPUs.
+``flash_attention`` is the differentiable training attention op
+(custom_vjp binding the fwd kernel to the two backward-sweep kernels),
+drop-in compatible with models/attention.py's (T, H, D) convention and
+dispatched by models/transformer.py when ``CallConfig.attention_impl ==
+"flash"``. It composes with ``jax.vmap`` (row/DP batching in the trainer)
+and ``jax.grad`` end-to-end.
+
+Pallas lowering mode is backend-aware (kernels/backend.py): interpret on
+CPU/GPU, Mosaic on TPU — override with ``backend.set_interpret_override``.
 """
 
 from __future__ import annotations
@@ -14,34 +19,42 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
+from .backend import resolve_interpret
 from .flash_attention import flash_attention_bwd, flash_attention_fwd
 from .ssd_scan import ssd_scan
 
-INTERPRET = True  # CPU container: execute kernel bodies in Python
 
-
-@functools.partial(jax.custom_vjp, nondiff_argnums=(7, 8, 9))
-def _flash_hTD(q, k, v, q_seg, kv_seg, q_pos, kv_pos, window, block_q, block_k):
+@functools.partial(jax.custom_vjp, nondiff_argnums=(7, 8, 9, 10, 11))
+def _flash_hTD(
+    q, k, v, q_seg, kv_seg, q_pos, kv_pos, window, block_q, block_k,
+    same_buffer, block_sparse,
+):
     out, _ = flash_attention_fwd(
         q, k, v, q_seg, kv_seg, q_pos, kv_pos,
-        window=window, block_q=block_q, block_k=block_k, interpret=INTERPRET,
+        window=window, block_q=block_q, block_k=block_k,
+        same_buffer=same_buffer, block_sparse=block_sparse,
     )
     return out
 
 
-def _flash_fwd_rule(q, k, v, q_seg, kv_seg, q_pos, kv_pos, window, block_q, block_k):
+def _flash_fwd_rule(
+    q, k, v, q_seg, kv_seg, q_pos, kv_pos, window, block_q, block_k,
+    same_buffer, block_sparse,
+):
     out, lse = flash_attention_fwd(
         q, k, v, q_seg, kv_seg, q_pos, kv_pos,
-        window=window, block_q=block_q, block_k=block_k, interpret=INTERPRET,
+        window=window, block_q=block_q, block_k=block_k,
+        same_buffer=same_buffer, block_sparse=block_sparse,
     )
     return out, (q, k, v, q_seg, kv_seg, q_pos, kv_pos, out, lse)
 
 
-def _flash_bwd_rule(window, block_q, block_k, res, do):
+def _flash_bwd_rule(window, block_q, block_k, same_buffer, block_sparse, res, do):
     q, k, v, q_seg, kv_seg, q_pos, kv_pos, out, lse = res
     dq, dk, dv = flash_attention_bwd(
         q, k, v, q_seg, kv_seg, q_pos, kv_pos, out, lse, do,
-        window=window, block_q=block_q, block_k=block_k, interpret=INTERPRET,
+        window=window, block_q=block_q, block_k=block_k,
+        same_buffer=same_buffer, block_sparse=block_sparse,
     )
     return dq, dk, dv, None, None, None, None
 
@@ -60,8 +73,16 @@ def flash_attention(
     window: Optional[int] = None,
     block_q: int = 128,
     block_k: int = 128,
+    same_buffer: bool = True,
+    block_sparse: bool = True,
 ) -> jnp.ndarray:
-    """Differentiable segment-masked flash attention (Pallas)."""
+    """Differentiable segment-block-sparse flash attention (Pallas).
+
+    ``same_buffer=True`` (the per-row local/packed site) additionally skips
+    tiles by causal buffer order; pass ``False`` when q and k index
+    different streams (the DACP gathered-KV dist site, where each rank's q
+    shard lives at an offset inside the concatenated stream).
+    ``block_sparse=False`` disables segment-aware skipping (test oracle)."""
     t = q.shape[0]
     s = k.shape[0]
     bq = min(block_q, t)
@@ -81,15 +102,17 @@ def flash_attention(
         jnp.transpose(q, (1, 0, 2)),
         jnp.transpose(k, (1, 0, 2)),
         jnp.transpose(v, (1, 0, 2)),
-        q_seg, kv_seg, q_pos, kv_pos, window, bq, bk,
+        q_seg, kv_seg, q_pos, kv_pos, window, bq, bk, same_buffer, block_sparse,
     )
     out = jnp.transpose(out, (1, 0, 2))
     return out[:t] if pad_q else out
 
 
-def ssd_scan_op(x, dt, a_neg, b, c, seg, chunk: int = 128):
+def ssd_scan_op(x, dt, a_neg, b, c, seg, chunk: int = 128,
+                interpret: Optional[bool] = None):
     """Pallas SSD chunked scan (forward-only serving path)."""
-    return ssd_scan(x, dt, a_neg, b, c, seg, chunk=chunk, interpret=INTERPRET)
+    return ssd_scan(x, dt, a_neg, b, c, seg, chunk=chunk,
+                    interpret=resolve_interpret(interpret))
 
 
-__all__ = ["flash_attention", "ssd_scan_op", "INTERPRET"]
+__all__ = ["flash_attention", "ssd_scan_op"]

@@ -1,0 +1,218 @@
+"""Segment-block-sparsity maps for the Pallas flash kernel.
+
+Packing (data/packing.py) lays sequences out contiguously, so each
+``(q_block, k_block)`` score tile of the flash kernel touches a small
+*range* of segment ids. A tile whose q- and k-ranges are disjoint (or that
+is all padding, or entirely anti-causal by positions) contributes exactly
+zero to the masked softmax — the kernel skips it in the forward and both
+backward sweeps. This module computes the per-block metadata the kernel
+prefetches (``block_seg_info``) and the resulting live/full tile maps,
+in a form shared by three consumers:
+
+  * ``flash_attention.py`` — passes ``xp=jnp`` and feeds the info arrays to
+    ``pltpu.PrefetchScalarGridSpec`` scalar prefetch; the in-kernel
+    predicate mirrors ``live_block_map`` / ``full_block_map`` exactly.
+  * the trainer / benchmarks — numpy-side telemetry: the measured live-tile
+    fraction of a packed bucket (``ScheduleReport.flash_live_frac``), the
+    scheduler cost model's future input.
+  * tests — the property oracle that skipping never changes outputs.
+
+Info-row layout (``(5, n_blocks)`` int32):
+
+    0 smin_nz  — min segment id > 0 in the block (SEG_INF if all padding)
+    1 smax     — max segment id (0 => block is pure padding)
+    2 pmin     — min restart position
+    3 pmax     — max restart position
+    4 smin_all — min segment id including padding 0 (smin_all == smax > 0
+                 <=> the block is uniformly one live segment: the
+                 mask-free full-tile fast path)
+
+Default is numpy (importable without jax); pass ``xp=jnp`` to trace.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import numpy as np
+
+# sentinel for "no live segment in this block"; > any real segment id and
+# small enough that int32 comparisons never overflow
+SEG_INF = np.int32(2**30)
+
+
+def _pad_to_multiple(a: np.ndarray, block: int) -> np.ndarray:
+    """Zero-pad a 1D metadata array to a block multiple (numpy-side only —
+    the kernel wrapper pads tensors before computing info)."""
+    r = (-len(a)) % block
+    return np.concatenate([a, np.zeros(r, a.dtype)]) if r else a
+
+
+def block_seg_info(seg, pos, block: int, xp=np):
+    """(T,) segment/position metadata -> (5, T // block) int32 info rows."""
+    t = seg.shape[0]
+    n = t // block
+    s = seg.reshape(n, block).astype(xp.int32)
+    p = pos.reshape(n, block).astype(xp.int32)
+    smax = s.max(axis=1)
+    smin_all = s.min(axis=1)
+    smin_nz = xp.where(s > 0, s, SEG_INF).min(axis=1)
+    return xp.stack([smin_nz, smax, p.min(axis=1), p.max(axis=1), smin_all]).astype(
+        xp.int32
+    )
+
+
+def tile_live(q, k, window: Optional[int] = None):
+    """THE live predicate, shared verbatim by the numpy/jnp maps below and
+    the in-kernel scalar check (flash_attention._tile_flags). ``q``/``k``
+    are the 5 info rows (scalars in-kernel, broadcast arrays here).
+
+    A tile is DEAD when any of these hold (each is a sound superset check
+    of "the (same-segment & live & causal [& window]) mask is all-false on
+    the tile"):
+
+      * either block is pure padding (smax == 0);
+      * the segment-id ranges are disjoint (packing contiguity makes block
+        ranges intervals, so interval-overlap is exact);
+      * every q position precedes every k position (q_pmax < k_pmin) — all
+        pairs anti-causal regardless of segment;
+      * sliding window only: every pair is at least ``window`` in the past
+        (q_pmin - k_pmax >= window, the minimum pairwise distance).
+    """
+    q_smin, q_smax, q_pmin, q_pmax, _ = q
+    k_smin, k_smax, k_pmin, k_pmax, _ = k
+    live = (
+        (q_smax > 0)
+        & (k_smax > 0)
+        & (q_smin <= k_smax)
+        & (k_smin <= q_smax)
+        & (q_pmax >= k_pmin)
+    )
+    if window is not None:
+        live = live & ((q_pmin - k_pmax) < window)
+    return live
+
+
+def tile_full(q, k, window: Optional[int] = None):
+    """All-TRUE-mask predicate (shared like ``tile_live``): uniformly one
+    live segment on both sides, fully causal (q_pmin >= k_pmax), and inside
+    the sliding window if any. The kernel skips mask construction there."""
+    _, q_smax, q_pmin, q_pmax, q_suni = q
+    _, k_smax, k_pmin, k_pmax, k_suni = k
+    full = (
+        (q_suni == q_smax)
+        & (k_suni == k_smax)
+        & (q_smax == k_smax)
+        & (q_smax > 0)
+        & (q_pmin >= k_pmax)
+    )
+    if window is not None:
+        full = full & ((q_pmax - k_pmin) < window)
+    return full
+
+
+def _broadcast_rows(qinfo, kinfo):
+    q = tuple(qinfo[i][:, None] for i in range(5))
+    k = tuple(kinfo[i][None, :] for i in range(5))
+    return q, k
+
+
+def live_block_map(
+    qinfo, kinfo, block_q: int, block_k: int, same_buffer: bool = True,
+    window: Optional[int] = None, xp=np,
+):
+    """(n_qb, n_kb) bool map of contributing tiles — ``tile_live`` plus, for
+    ``same_buffer=True``, the causal buffer-order skip: the q block ends at
+    or before the k block starts. Buffer order is causal order within a
+    segment ONLY when q and k index the SAME packed buffer — it is not
+    valid for the DACP gathered-KV site, where each rank's q shard sits at
+    an offset inside the concatenated distributed stream."""
+    q, k = _broadcast_rows(qinfo, kinfo)
+    live = tile_live(q, k, window)
+    if same_buffer:
+        qb = xp.arange(qinfo.shape[1])[:, None]
+        kb = xp.arange(kinfo.shape[1])[None, :]
+        live = live & ((qb + 1) * block_q > kb * block_k)
+    return live
+
+
+def full_block_map(qinfo, kinfo, window: Optional[int] = None, xp=np):
+    """(n_qb, n_kb) bool map of all-true-mask tiles (``tile_full``)."""
+    q, k = _broadcast_rows(qinfo, kinfo)
+    return tile_full(q, k, window)
+
+
+def live_fraction(
+    seg_q: np.ndarray,
+    seg_kv: np.ndarray,
+    pos_q: np.ndarray,
+    pos_kv: np.ndarray,
+    block_q: int = 128,
+    block_k: int = 128,
+    same_buffer: bool = True,
+    window: Optional[int] = None,
+) -> Tuple[int, int]:
+    """(live_tiles, total_tiles) for one (q stream, kv stream) pair.
+
+    numpy-only; pads to block multiples (padding blocks are dead but still
+    counted in the total — the same grid a dense kernel would launch)."""
+    seg_q = _pad_to_multiple(np.asarray(seg_q, np.int32), block_q)
+    pos_q = _pad_to_multiple(np.asarray(pos_q, np.int32), block_q)
+    seg_kv = _pad_to_multiple(np.asarray(seg_kv, np.int32), block_k)
+    pos_kv = _pad_to_multiple(np.asarray(pos_kv, np.int32), block_k)
+    qinfo = block_seg_info(seg_q, pos_q, block_q)
+    kinfo = block_seg_info(seg_kv, pos_kv, block_k)
+    live = live_block_map(
+        qinfo, kinfo, block_q, block_k, same_buffer=same_buffer, window=window
+    )
+    return int(live.sum()), int(live.size)
+
+
+def packed_live_fraction(
+    loc_segs: np.ndarray,  # (n_cp, c_loc) int32
+    loc_pos: np.ndarray,
+    dist_segs: np.ndarray,  # (n_cp, c_dist)
+    dist_pos: np.ndarray,
+    block_q: int = 128,
+    block_k: int = 128,
+    window: Optional[int] = None,
+    include_dist: bool = True,
+) -> Tuple[int, int]:
+    """(live, total) flash tiles for one ``PackedMicrobatch``, counting both
+    attention sites the way models/transformer.py runs them: per-row local
+    attention (same_buffer) and each row's dist-shard queries against the
+    full concatenated distributed stream (gathered KV, NOT same_buffer).
+    ``include_dist=False`` drops the gathered site — the dist region runs
+    the XLA ring exchange (no flash tiles) when dist_attn="ring"."""
+    live = total = 0
+    if loc_segs.shape[-1]:
+        for r in range(loc_segs.shape[0]):
+            l, t = live_fraction(
+                loc_segs[r], loc_segs[r], loc_pos[r], loc_pos[r],
+                block_q, block_k, same_buffer=True, window=window,
+            )
+            live += l
+            total += t
+    if include_dist and dist_segs.shape[-1]:
+        seg_full = dist_segs.reshape(-1)
+        pos_full = dist_pos.reshape(-1)
+        for r in range(dist_segs.shape[0]):
+            l, t = live_fraction(
+                dist_segs[r], seg_full, dist_pos[r], pos_full,
+                block_q, block_k, same_buffer=False, window=window,
+            )
+            live += l
+            total += t
+    return live, total
+
+
+__all__ = [
+    "SEG_INF",
+    "block_seg_info",
+    "tile_live",
+    "tile_full",
+    "live_block_map",
+    "full_block_map",
+    "live_fraction",
+    "packed_live_fraction",
+]

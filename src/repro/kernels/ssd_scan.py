@@ -20,12 +20,14 @@ recurrence), swept in tests/test_kernels_ssd.py.
 from __future__ import annotations
 
 import functools
-from typing import Tuple
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
+
+from .backend import resolve_interpret
 
 DEFAULT_CHUNK = 128
 
@@ -101,7 +103,7 @@ def ssd_scan(
     c: jnp.ndarray,  # (T, N)
     seg: jnp.ndarray,  # (T,)
     chunk: int = DEFAULT_CHUNK,
-    interpret: bool = True,
+    interpret: Optional[bool] = None,
 ) -> jnp.ndarray:
     """Pallas SSD scan -> (T, H, P) float32 (no D-skip; caller adds it)."""
     t_len, n_heads, head_p = x.shape
@@ -138,7 +140,7 @@ def ssd_scan(
         out_specs=pl.BlockSpec((1, chunk, head_p), lambda h, cb: (h, cb, 0)),
         out_shape=jax.ShapeDtypeStruct((n_heads, t_pad, head_p), jnp.float32),
         scratch_shapes=[pltpu.VMEM((n_state, head_p), jnp.float32)],
-        interpret=interpret,
+        interpret=resolve_interpret(interpret),
     )(xh, dth, a2, b, c, is_start)
     return jnp.transpose(y, (1, 0, 2))[:t_len]
 

@@ -36,6 +36,14 @@ def main():
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--policy", default="skrull", choices=list_policies(),
                     help="registered scheduling policy (repro.sched)")
+    # no choices= here: the canonical list is ATTENTION_IMPL_CHOICES in
+    # models/transformer.py, which imports jax — validated right after the
+    # jax-side imports below so the pre-parse section stays numpy-only
+    ap.add_argument("--attention-impl", default="chunked",
+                    metavar="{dense,chunked,flash}",
+                    help="training attention path: dense/chunked XLA reference "
+                         "or the Pallas segment-block-sparse flash kernel "
+                         "(interpret mode on CPU, Mosaic on TPU)")
     ap.add_argument("--prefetch-depth", type=int, default=0,
                     help="schedule-ahead queue depth (repro.pipeline); "
                          "0 = serial reference path, bit-identical losses")
@@ -54,8 +62,14 @@ def main():
     from ..core.perf_model import TPU_V5E
     from ..data import SkrullDataLoader, SyntheticSFTDataset
     from ..launch.mesh import make_mesh
-    from ..models.transformer import CallConfig
+    from ..models.transformer import ATTENTION_IMPL_CHOICES, CallConfig
     from ..train.loop import Trainer, TrainerConfig
+
+    if args.attention_impl not in ATTENTION_IMPL_CHOICES:
+        ap.error(
+            f"--attention-impl: invalid choice {args.attention_impl!r} "
+            f"(choose from {', '.join(ATTENTION_IMPL_CHOICES)})"
+        )
 
     cfg = get_arch(args.arch)
     if args.reduced:
@@ -71,6 +85,7 @@ def main():
     print(f"arch={cfg.name} params={cfg.param_count()/1e9:.2f}B "
           f"devices={n_dev} dp={topo.dp} cp={topo.cp} pods={topo.pods} "
           f"policy={policy} prefetch={args.prefetch_depth} "
+          f"attn={args.attention_impl} "
           f"mesh={'spmd' if mesh is not None else 'single-program'}")
 
     dataset = SyntheticSFTDataset(
@@ -85,7 +100,7 @@ def main():
     from ..dist.executor import make_shard_fn
 
     call = CallConfig(
-        attention_impl="chunked", remat="selective",
+        attention_impl=args.attention_impl, remat="selective",
         # under a mesh the activation/gathered-KV constraints are load-bearing:
         # without them XLA all-reduces the online-softmax carry per kv chunk
         # (transformer.py split=None note — 384x collective bytes)

@@ -34,6 +34,7 @@ import jax
 import jax.numpy as jnp
 
 from ..configs.base import ArchConfig
+from ..kernels.ops import flash_attention as flash_attention_op
 from .attention import decode_attention, segment_attention_chunked, segment_attention_dense
 from .layers import (
     Params,
@@ -52,11 +53,20 @@ from .moe import moe, moe_init
 from .ssm import ssm_block, ssm_decode_state, ssm_decode_step, ssm_init
 
 
+ATTENTION_IMPL_CHOICES = ("dense", "chunked", "flash")
+
+
 @dataclasses.dataclass(frozen=True)
 class CallConfig:
-    attention_impl: str = "chunked"  # dense | chunked
+    # dense | chunked (XLA online-softmax scan) | flash (Pallas
+    # segment-block-sparse kernel, kernels/ops.flash_attention)
+    attention_impl: str = "chunked"
     remat: str = "selective"  # none | selective | full
     kv_chunk: int = 1024
+    # flash tile sizes — MXU-aligned 128 is the production shape; the packing
+    # ladder rounds bucket capacities to multiples of it (data/packing.py)
+    flash_block_q: int = 128
+    flash_block_k: int = 128
     ssd_chunk: int = 128
     logits_chunk: int = 0  # 0 = dense sharded logits; >0 = scan over chunks
     capacity_factor: float = 1.25
@@ -68,6 +78,13 @@ class CallConfig:
     dist_attn: str = "gather"
     # sharding hook: fn(x, kind) -> x; kind in {"activation", "gathered_kv"}
     shard_fn: Callable[[jnp.ndarray, str], jnp.ndarray] = lambda x, kind: x
+
+    def __post_init__(self):
+        if self.attention_impl not in ATTENTION_IMPL_CHOICES:
+            raise ValueError(
+                f"attention_impl must be one of {ATTENTION_IMPL_CHOICES}, "
+                f"got {self.attention_impl!r}"
+            )
 
 
 # ---------------------------------------------------------------------------
@@ -174,11 +191,27 @@ def _attention_layer(
     q = rope(q, pos, cfg.rope_theta)
     k = rope(k, pos, cfg.rope_theta)
 
-    attn = (
-        segment_attention_dense
-        if call.attention_impl == "dense"
-        else partial(segment_attention_chunked, kv_chunk=call.kv_chunk)
-    )
+    if call.attention_impl == "dense":
+        attn = attn_dist = segment_attention_dense
+    elif call.attention_impl == "flash":
+        # Pallas segment-block-sparse kernel (kernels/ops): same_buffer
+        # enables the causal buffer-order tile skip, valid only when q and k
+        # index the SAME packed stream — i.e. everywhere except the gathered
+        # dist site, where each row's q shard sits at an offset inside the
+        # row-concatenated stream
+        def _flash(same_buffer):
+            def f(qq, kk, vv, qs, ks, qp, kp, window=None):
+                return flash_attention_op(
+                    qq, kk, vv, qs, ks, qp, kp, window=window,
+                    block_q=call.flash_block_q, block_k=call.flash_block_k,
+                    same_buffer=same_buffer,
+                )
+            return f
+
+        attn = _flash(True)
+        attn_dist = _flash(False)
+    else:
+        attn = attn_dist = partial(segment_attention_chunked, kv_chunk=call.kv_chunk)
 
     if split is None:
         # CP all-gather of each row's K/V over the sequence axis BEFORE the
@@ -230,7 +263,7 @@ def _attention_layer(
                 seg_full = segs[:, c_loc:].reshape(r * c_dist)
                 pos_full = pos[:, c_loc:].reshape(r * c_dist)
                 out_dist = jax.vmap(
-                    lambda qq, ss, pp: attn(
+                    lambda qq, ss, pp: attn_dist(
                         qq, k_full, v_full, ss, seg_full, pp, pos_full, cfg.window
                     )
                 )(q[:, c_loc:], segs[:, c_loc:], pos[:, c_loc:])
@@ -421,6 +454,7 @@ def lm_loss(
 
 
 __all__ = [
+    "ATTENTION_IMPL_CHOICES",
     "CallConfig",
     "block_pattern",
     "init_model",

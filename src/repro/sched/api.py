@@ -99,6 +99,12 @@ class ScheduleReport:
     modeled_iteration_s: Optional[float] = None
     per_rank_s: Optional[np.ndarray] = None  # (ws,) modeled
     telemetry_version: int = 0  # feedback generation the schedule used
+    # measured fraction of live flash tiles over this iteration's packed
+    # buckets (kernels/sparsity.packed_live_fraction) — stamped by the
+    # trainer when attention_impl="flash"; dense equivalent is 1.0. A future
+    # cost-model refinement can weight Eq. 8 attention FLOPs by this instead
+    # of the quadratic-in-length proxy.
+    flash_live_frac: Optional[float] = None
 
     @property
     def per_rank_tokens(self) -> np.ndarray:
@@ -111,10 +117,15 @@ class ScheduleReport:
             if self.modeled_iteration_s is not None
             else ""
         )
+        flash = (
+            f" flash_live={self.flash_live_frac:.2f}"
+            if self.flash_live_frac is not None
+            else ""
+        )
         return (
             f"{self.policy}: mbs={self.n_microsteps} "
             f"imbalance={self.imbalance:.2f} dist_tok={self.dist_token_frac:.2f}"
-            f"{model}"
+            f"{model}{flash}"
         )
 
 

@@ -35,6 +35,7 @@ from ..data.loader import SkrullDataLoader, LoaderState
 from ..dist.executor import DistExecutor
 from ..dist.plan import lower_schedule
 from ..ft.health import HealthMonitor
+from ..kernels.sparsity import packed_live_fraction
 from ..models.transformer import CallConfig, init_model
 from ..optim.grad import tree_zeros_like
 from ..optim.schedule import linear_warmup_cosine
@@ -229,6 +230,28 @@ class Trainer:
             self.prefetch.set_speed_factors(
                 factors, version=self.health.telemetry_version
             )
+        # segment-block-sparsity telemetry: what fraction of flash tiles this
+        # iteration's packing actually keeps live (host-side numpy over the
+        # packed metadata — no device sync). Stamped onto the report so the
+        # scheduler's cost model can consume it downstream.
+        flash_live = None
+        if self.call.attention_impl == "flash":
+            live = total = 0
+            for row in it.microbatches:
+                for mb in row:
+                    l_n, t_n = packed_live_fraction(
+                        mb.loc_segs, mb.loc_pos, mb.dist_segs, mb.dist_pos,
+                        self.call.flash_block_q, self.call.flash_block_k,
+                        window=self.cfg.window,
+                        # dist_attn="ring" runs the XLA ring exchange for the
+                        # dist region — only the local site launches flash
+                        include_dist=self.call.dist_attn != "ring",
+                    )
+                    live += l_n
+                    total += t_n
+            flash_live = live / max(total, 1)
+            if it.report is not None:
+                it.report.flash_live_frac = flash_live
         self.step += 1
         out = {
             "step": self.step,
@@ -242,6 +265,8 @@ class Trainer:
             "produce_ms": it.produce_time_s * 1e3,
             "time_s": dt,
         }
+        if flash_live is not None:
+            out["flash_live_frac"] = flash_live
         if it.report is not None:
             out["policy"] = it.report.policy
             out["imbalance"] = it.report.imbalance

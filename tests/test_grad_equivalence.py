@@ -5,6 +5,8 @@ We compute f32 gradients under three radically different schedules (single
 bucket; 2 DP x 2 CP; 4 DP x 2 CP with cost-aware DACP) and require bitwise-
 class agreement (<=1e-5 relative)."""
 
+import dataclasses
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -63,6 +65,27 @@ def test_grad_equivalence_across_partitions(setup):
             )
         )
         assert rel < 1e-5, rel
+
+
+def test_flash_kernel_matches_dense_grads(setup):
+    """The Pallas flash training path (attention_impl="flash") computes the
+    same f32 gradients as the models/attention.py dense reference, through
+    the full packed_loss — both the per-row local site and the gathered
+    dist site (c_budget forces CP-sharded sequences)."""
+    cfg, call, params, ds = setup
+    g_d, d_d = _grads(cfg, call, params, ds, ws=2, n_cp=2, c_budget=512)
+    call_f = dataclasses.replace(call, attention_impl="flash")
+    g_f, d_f = _grads(cfg, call_f, params, ds, ws=2, n_cp=2, c_budget=512)
+    assert d_d == d_f
+    rel = max(
+        jax.tree.leaves(
+            jax.tree.map(
+                lambda a, b: float(jnp.abs(a - b).max() / (jnp.abs(a).max() + 1e-9)),
+                g_d, g_f,
+            )
+        )
+    )
+    assert rel < 1e-4, rel
 
 
 def test_grad_equivalence_ssm(setup, tiny_ssm):

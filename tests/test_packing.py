@@ -6,6 +6,7 @@ from hypothesis import given, settings, strategies as st
 
 from repro.core.dacp import schedule_dacp
 from repro.data.packing import (
+    FLASH_BLOCK,
     bucket_ladder,
     choose_bucket,
     ladder_fits,
@@ -71,6 +72,74 @@ def test_labels_respect_loss_mask():
     assert (labels[:4] == -1).all()  # targets 1..4 are prompt tokens
     assert (labels[4:9] == toks[5:]).all()
     assert labels[9] == -1  # last token has no target
+
+
+@pytest.mark.parametrize(
+    # 1536 and 2432 sit in the bands where a fixed k<=steps full-split loop
+    # would leave max c_loc < C_sched (rounded-down unit) — regression for
+    # the ladder coverage crash
+    "c_budget", [256, 512, 1024, 1200, 1536, 2432, 8192, 26_000],
+)
+def test_ladder_is_flash_block_aligned(c_budget):
+    """Every ladder capacity is a multiple of the flash tile, so the Pallas
+    kernel's ``t % block_q == 0`` assertion can never fire on a ladder
+    bucket — regression for the flash training path."""
+    for spec in bucket_ladder(c_budget, n_cp=2):
+        assert spec.c_loc % FLASH_BLOCK == 0, spec
+        assert spec.c_dist % FLASH_BLOCK == 0, spec
+    # coverage guarantee survives alignment: C_sched slack vs aligned ladder
+    ladder = bucket_ladder(c_budget, n_cp=2)
+    c_sched = scheduler_bucket_size(c_budget)
+    assert c_sched >= 1
+    for loc in range(0, c_sched + 1, max(c_sched // 17, 1)):
+        spec = choose_bucket(ladder, loc, c_sched - loc)
+        assert spec.c_loc >= loc and spec.c_dist >= c_sched - loc
+
+
+@settings(max_examples=60, deadline=None)
+@given(c_budget=st.integers(256, 30_000))
+def test_ladder_coverage_property_all_budgets(c_budget):
+    """For ANY budget, the (loc, C_sched - loc) extremes are always covered —
+    in particular loc = C_sched, dist = 0 (the mostly-local worst case that
+    crashed the fixed-step aligned ladder)."""
+    ladder = bucket_ladder(c_budget, n_cp=2)
+    c_sched = scheduler_bucket_size(c_budget)
+    for loc in (0, c_sched // 2, c_sched):
+        spec = choose_bucket(ladder, loc, c_sched - loc)  # must not raise
+        assert spec.c_loc >= loc and spec.c_dist >= c_sched - loc
+        assert spec.c_loc + spec.c_dist <= c_budget
+
+
+def test_tiny_budget_falls_back_unaligned():
+    """Budgets below 2 flash tiles keep the legacy unaligned ladder (the
+    kernel wrapper pads); C_sched stays positive."""
+    ladder = bucket_ladder(100, n_cp=1)
+    assert scheduler_bucket_size(100) == 100 - 100 // 8
+    assert any(s.c_loc % FLASH_BLOCK for s in ladder)
+
+
+def test_ladder_buckets_run_flash_fwd_unpadded():
+    """A packed ladder bucket feeds flash_attention_fwd directly — block
+    multiples by construction, no assertion, no runtime padding."""
+    import jax.numpy as jnp
+    from repro.kernels.flash_attention import flash_attention_fwd
+
+    lengths = [100, 60, 200, 500]
+    c = 1024
+    plan = schedule_dacp(lengths, scheduler_bucket_size(c), n_cp=2)
+    ladder = bucket_ladder(c, 2)
+    loc, dist = microbatch_needs(plan)
+    spec = choose_bucket(ladder, loc, dist)
+    mb = pack_microbatch(_make_samples(lengths), plan, spec)
+    rng = np.random.default_rng(0)
+    for row in range(2):
+        segs = jnp.asarray(mb.loc_segs[row])
+        pos = jnp.asarray(mb.loc_pos[row])
+        t = int(segs.shape[0])
+        assert t % FLASH_BLOCK == 0
+        q = jnp.asarray(rng.normal(size=(2, t, 16)), jnp.float32)
+        o, _ = flash_attention_fwd(q, q, q, segs, segs, pos, pos)  # must not raise
+        assert o.shape == (2, t, 16)
 
 
 @settings(max_examples=50, deadline=None)
