@@ -33,7 +33,17 @@ def main():
                     choices=ATTENTION_IMPL_CHOICES,
                     help="XLA reference paths or the Pallas "
                          "segment-block-sparse flash kernel")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="write a Perfetto-loadable Chrome trace (repro.obs); "
+                         "off by default, does not perturb losses")
+    ap.add_argument("--metrics-jsonl", default=None, metavar="PATH",
+                    help="write per-step structured metrics JSONL (repro.obs)")
     args = ap.parse_args()
+
+    from repro import obs
+
+    if args.trace_out or args.metrics_jsonl:
+        obs.configure(trace_path=args.trace_out, metrics_path=args.metrics_jsonl)
 
     # ~100M params: qwen-0.5b family at half width/depth
     cfg = ArchConfig(
@@ -69,7 +79,13 @@ def main():
     resumed = trainer.maybe_resume()
     if resumed:
         print(f"resumed from step {trainer.step}")
-    trainer.run()
+    try:
+        trainer.run()
+    finally:
+        trainer.close()
+        trace_path = obs.shutdown()
+        if trace_path:
+            print(f"trace written to {trace_path} (open in ui.perfetto.dev)")
     print("done; checkpoints in", args.ckpt)
 
 

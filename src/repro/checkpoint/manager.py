@@ -25,6 +25,8 @@ from typing import Any, Callable, Dict, List, Optional, Tuple
 import jax
 import numpy as np
 
+from .. import obs
+
 
 def _flatten(tree: Any) -> Tuple[List[np.ndarray], Any]:
     leaves, treedef = jax.tree.flatten(tree)
@@ -44,19 +46,28 @@ class CheckpointManager:
 
     # -- save ---------------------------------------------------------------
     def save(self, step: int, state_tree: Any, meta: Optional[Dict] = None) -> None:
-        leaves, _ = _flatten(state_tree)
-        meta = dict(meta or {})
-        meta["step"] = int(step)
-        self.wait()
-        if self.async_save:
-            self._thread = threading.Thread(
-                target=self._write, args=(step, leaves, meta), daemon=True
-            )
-            self._thread.start()
-        else:
-            self._write(step, leaves, meta)
+        # checkpoint.save covers only the training-thread cost (the batched
+        # D2H gather + join of any previous writer); checkpoint.write is the
+        # serialization on the skrull-ckpt track
+        with obs.span("checkpoint.save", step=step):
+            leaves, _ = _flatten(state_tree)
+            meta = dict(meta or {})
+            meta["step"] = int(step)
+            self.wait()
+            if self.async_save:
+                self._thread = threading.Thread(
+                    target=self._write, args=(step, leaves, meta),
+                    name="skrull-ckpt", daemon=True,
+                )
+                self._thread.start()
+            else:
+                self._write(step, leaves, meta)
 
     def _write(self, step: int, leaves: List[np.ndarray], meta: Dict) -> None:
+        with obs.span("checkpoint.write", step=step):
+            self._write_inner(step, leaves, meta)
+
+    def _write_inner(self, step: int, leaves: List[np.ndarray], meta: Dict) -> None:
         final = os.path.join(self.directory, f"step_{step:010d}")
         tmp = tempfile.mkdtemp(dir=self.directory, prefix=".tmp_")
         try:
@@ -111,6 +122,10 @@ class CheckpointManager:
             step = self.latest_step()
         if step is None:
             raise FileNotFoundError(f"no checkpoint in {self.directory}")
+        with obs.span("checkpoint.restore", step=step):
+            return self._load(template_tree, step, shardings)
+
+    def _load(self, template_tree: Any, step: int, shardings: Any) -> Tuple[Any, Dict]:
         d = os.path.join(self.directory, f"step_{step:010d}")
         with open(os.path.join(d, "meta.json")) as f:
             meta = json.load(f)

@@ -29,6 +29,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from .. import obs
 from .sharding import buffer_sharding, mesh_axis_sizes, opt_shardings, shard_params
 
 
@@ -206,11 +207,12 @@ class DistExecutor:
         re-placed, a double copy the transfer pipeline (repro.pipeline)
         would otherwise hide but single-program callers still paid.
         """
-        out = {}
-        for k, v in buffers.items():
-            arr = np.asarray(v)
-            out[k] = jax.device_put(arr, self._sharding_for(arr.shape))
-        return out
+        with obs.span("dist.put_buffers"):
+            out = {}
+            for k, v in buffers.items():
+                arr = np.asarray(v)
+                out[k] = jax.device_put(arr, self._sharding_for(arr.shape))
+            return out
 
 
 __all__ = [

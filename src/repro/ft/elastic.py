@@ -22,6 +22,7 @@ from __future__ import annotations
 
 from typing import Any, Optional, Tuple
 
+from .. import obs
 from ..checkpoint.manager import CheckpointManager
 from ..dist.executor import DistExecutor
 from ..launch.mesh import make_mesh
@@ -55,18 +56,20 @@ def rescale(
         if new_dp is None or new_cp is None:
             raise ValueError("pass topology=Topology(...) or new_dp= and new_cp=")
         topology = Topology(dp=new_dp, cp=new_cp, pods=pods)
-    # validate inputs before the side-effecting flush (halts the producer,
-    # drops queued work, rewinds the loader cursor)
-    if prefetcher is not None:
-        prefetcher.flush()
-    mesh = make_mesh(topology.dp, topology.cp, topology.pods)
-    state, meta = ckpt.restore(template_state, step=step)
-    # re-shard: params + AdamW mirrors onto the new mesh's ZeRO-3 layout,
-    # step counter replicated (dist.executor owns the placement rules)
-    new_state = DistExecutor(mesh).place_state(state)
-    if health is not None:
-        health.resize(topology.ws)
-    return mesh, new_state, meta, topology
+    with obs.span("ft.rescale", dp=topology.dp, cp=topology.cp, pods=topology.pods):
+        # validate inputs before the side-effecting flush (halts the producer,
+        # drops queued work, rewinds the loader cursor)
+        if prefetcher is not None:
+            prefetcher.flush()
+        mesh = make_mesh(topology.dp, topology.cp, topology.pods)
+        state, meta = ckpt.restore(template_state, step=step)
+        # re-shard: params + AdamW mirrors onto the new mesh's ZeRO-3 layout,
+        # step counter replicated (dist.executor owns the placement rules)
+        new_state = DistExecutor(mesh).place_state(state)
+        if health is not None:
+            health.resize(topology.ws)
+        obs.counter("ft.rescales").inc()
+        return mesh, new_state, meta, topology
 
 
 __all__ = ["rescale"]

@@ -20,6 +20,8 @@ from typing import Dict, List, Optional, Sequence
 
 import numpy as np
 
+from .. import obs
+
 
 @dataclasses.dataclass
 class HealthMonitor:
@@ -87,6 +89,9 @@ class HealthMonitor:
         if mean <= 0:
             return
         rel = np.maximum(times / mean, 1e-9)
+        # spread of this round's relative beats (max/min): 1.0 = perfectly
+        # balanced fleet; the histogram accumulates for the end-of-run row
+        obs.histogram("health.beat_spread").observe(float(rel.max() / rel.min()))
         for r in range(self.ws):
             self.beat(r, step_time_s=float(rel[r]), now=now)
 
@@ -112,6 +117,17 @@ class HealthMonitor:
         if deadband > 0.0 and np.all(np.abs(s - 1.0) <= deadband):
             return None
         return s
+
+    def as_metrics(self) -> Dict[str, float]:
+        """Flat snapshot for the obs metrics JSONL: the monitor's view of
+        fleet health at this step (EMA'd, unlike the raw per-step beats)."""
+        s = self._speed / max(self._speed.mean(), 1e-9)
+        return {
+            "health_imbalance_ema": self.imbalance,
+            "health_speed_min": float(s.min()) if self.ws else 1.0,
+            "health_speed_max": float(s.max()) if self.ws else 1.0,
+            "health_telemetry_version": self._version,
+        }
 
     def remove_rank(self, rank: int):
         self._last_beat.pop(rank, None)

@@ -1,0 +1,56 @@
+"""Stall-attribution report over an exported trace + metrics JSONL.
+
+    PYTHONPATH=src python -m repro.launch.trace_report trace.json \
+        --metrics metrics.jsonl [--check] [--tol 0.05]
+
+Reads the Chrome ``trace_event`` file written by ``obs.shutdown()`` (the same
+file Perfetto opens) and the per-step metrics JSONL, and prints where each
+step's time went: data-starved (blocked on the schedule-ahead queue),
+transfer-bound (blocked on H2D staging), or compute-bound.
+
+``--check`` is the CI mode: exit non-zero unless span nesting is well-formed,
+every metrics step is covered by exactly one ``train_step`` span, and the
+span-derived overlap efficiency agrees with ``PrefetchStats`` within
+``--tol`` — the trace and the counters are independent accountings of the
+same run, so disagreement means one of them is lying.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    ap.add_argument("trace", help="Chrome trace_event JSON (obs export)")
+    ap.add_argument("--metrics", default=None, help="metrics JSONL (obs sink)")
+    ap.add_argument("--check", action="store_true",
+                    help="CI mode: validate nesting/coverage/overlap agreement")
+    ap.add_argument("--tol", type=float, default=0.05,
+                    help="allowed |span_eff - stats_eff| in --check")
+    ap.add_argument("--stall-frac", type=float, default=0.2,
+                    help="stall fraction of a step that flips its label")
+    args = ap.parse_args(argv)
+
+    from ..obs.export import load_chrome_trace
+    from ..obs.metrics import read_jsonl
+    from ..obs.report import check, format_report
+
+    spans = load_chrome_trace(args.trace)
+    rows = read_jsonl(args.metrics) if args.metrics else []
+    print(format_report(spans, rows, stall_frac=args.stall_frac))
+
+    if args.check:
+        errors = check(spans, rows, tol=args.tol)
+        if errors:
+            print(f"\ntrace-validate: FAIL ({len(errors)} problem(s))")
+            for e in errors:
+                print(f"  - {e}")
+            return 1
+        print("\ntrace-validate: OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -49,6 +49,14 @@ def main():
                          "0 = serial reference path, bit-identical losses")
     ap.add_argument("--cost-aware", action="store_true",
                     help="legacy alias for --policy skrull+refine")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="write a Chrome trace_event JSON (open in Perfetto) "
+                         "covering loader/transfer/compute/checkpoint tracks; "
+                         "off by default — enabling does not perturb losses")
+    ap.add_argument("--metrics-jsonl", default=None, metavar="PATH",
+                    help="write one structured JSON line per step (schedule "
+                         "report, health beats, pipeline stats, flash live "
+                         "fraction, per-bucket step times) via repro.obs")
     ap.add_argument("--reduced", action="store_true", help="use the smoke-size config")
     ap.add_argument("--distributed", action="store_true", help="multi-host: jax.distributed.initialize()")
     args = ap.parse_args()
@@ -117,8 +125,22 @@ def main():
         ),
         mesh=mesh,
     )
+    from .. import obs
+
+    if args.trace_out or args.metrics_jsonl:
+        obs.configure(trace_path=args.trace_out, metrics_path=args.metrics_jsonl)
+
     trainer.maybe_resume()
-    trainer.run()
+    try:
+        trainer.run()
+    finally:
+        trainer.close()
+        trace_path = obs.shutdown()
+        if trace_path:
+            print(f"trace written to {trace_path} — open in https://ui.perfetto.dev"
+                  " or analyse with: python -m repro.launch.trace_report "
+                  f"{trace_path}"
+                  + (f" --metrics {args.metrics_jsonl}" if args.metrics_jsonl else ""))
 
 
 if __name__ == "__main__":

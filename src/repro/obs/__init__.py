@@ -1,0 +1,84 @@
+"""repro.obs — unified tracing + metrics for the whole system.
+
+One import gives hot-path code everything it needs, with a no-op fast path
+when observability is off (the default):
+
+    from .. import obs
+
+    with obs.span("prefetch.produce", iter=i):
+        ...
+    obs.counter("prefetch.stall").inc()
+    obs.emit({"kind": "step", ...})          # JSONL row, only if a sink is on
+
+Launchers opt in with ``obs.configure(trace_path=..., metrics_path=...)`` and
+finish with ``obs.shutdown()``, which drains the tracer to a Chrome
+``trace_event`` JSON (open in Perfetto) and closes the metrics sink.
+``launch/trace_report.py`` turns the pair into a stall-attribution summary.
+
+Design contract: enabling observability must never perturb training — spans
+read monotonic clocks and append to per-thread buffers; metrics rows are
+emitted only at the trainer's existing log/checkpoint sync boundaries.
+Losses are bit-identical with tracing on or off (tested).
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+from . import metrics, trace
+from .metrics import counter, emit, gauge, histogram, registry
+from .trace import Span, Tracer, enabled, instant, record, span
+
+_trace_path: Optional[str] = None
+
+
+def configure(
+    trace_path: Optional[str] = None,
+    metrics_path: Optional[str] = None,
+) -> None:
+    """Turn on tracing and/or the metrics JSONL sink for this process."""
+    global _trace_path
+    if trace_path:
+        _trace_path = trace_path
+        trace.enable(Tracer())
+    if metrics_path:
+        metrics.set_sink(metrics.JsonlSink(metrics_path))
+
+
+def shutdown() -> Optional[str]:
+    """Flush + disable: write the trace file (if tracing was on), close the
+    sink. Returns the trace path written, if any. Idempotent."""
+    global _trace_path
+    written = None
+    tracer = trace.active()
+    if tracer is not None and _trace_path is not None:
+        from .export import export_chrome_trace
+
+        spans = tracer.drain()
+        export_chrome_trace(spans, _trace_path, origin_ns=tracer.origin_ns)
+        written = _trace_path
+    trace.disable()
+    _trace_path = None
+    old_sink = metrics.set_sink(None)
+    if old_sink is not None:
+        old_sink.close()
+    return written
+
+
+__all__ = [
+    "Span",
+    "Tracer",
+    "configure",
+    "shutdown",
+    "span",
+    "instant",
+    "record",
+    "enabled",
+    "counter",
+    "gauge",
+    "histogram",
+    "registry",
+    "emit",
+    "metrics",
+    "trace",
+]

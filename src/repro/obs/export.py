@@ -1,0 +1,142 @@
+"""Chrome ``trace_event`` JSON export — open the file in Perfetto
+(https://ui.perfetto.dev) or chrome://tracing.
+
+Every span becomes a complete ("X") event on its thread's track; thread
+metadata events name the tracks after the system's logical components
+(loader / transfer / compute / checkpoint) rather than raw thread idents, so
+the Perfetto timeline reads as the pipeline diagram from docs/DESIGN.md §10.
+Timestamps are rebased onto the tracer's origin (trace starts at t=0) and
+expressed in microseconds, per the trace_event spec.
+
+``load_chrome_trace`` round-trips the file back into ``trace.Span`` records —
+the same structures ``obs.report`` analyses — so ``launch/trace_report.py``
+works identically on a live tracer or an exported file.
+"""
+
+from __future__ import annotations
+
+import json
+from typing import Dict, List, Optional, Sequence
+
+from .trace import Span
+
+# thread name -> Perfetto track name; unknown threads keep their own name.
+# The "compute" track is the trainer thread: it dispatches device work, so
+# its spans bound the device timeline from the host side.
+TRACK_NAMES = {
+    "MainThread": "compute",
+    "skrull-prefetch": "loader",
+    "skrull-h2d": "transfer",
+    "skrull-ckpt": "checkpoint",
+}
+
+# stable ordering of the tracks in the Perfetto UI (sort_index metadata)
+_TRACK_ORDER = ["compute", "loader", "transfer", "checkpoint"]
+
+
+def track_name(thread: str) -> str:
+    return TRACK_NAMES.get(thread, thread)
+
+
+def to_trace_events(
+    spans: Sequence[Span],
+    origin_ns: Optional[int] = None,
+    pid: int = 0,
+    process_name: str = "rank0",
+) -> List[dict]:
+    """Spans -> trace_event dicts (metadata events first)."""
+    if origin_ns is None:
+        origin_ns = min((s.t0_ns for s in spans), default=0)
+    events: List[dict] = [
+        {
+            "ph": "M",
+            "name": "process_name",
+            "pid": pid,
+            "tid": 0,
+            "args": {"name": process_name},
+        }
+    ]
+    threads: Dict[int, str] = {}
+    for s in spans:
+        if s.tid not in threads:
+            threads[s.tid] = track_name(s.thread)
+    for tid, tname in threads.items():
+        events.append(
+            {"ph": "M", "name": "thread_name", "pid": pid, "tid": tid,
+             "args": {"name": tname}}
+        )
+        order = _TRACK_ORDER.index(tname) if tname in _TRACK_ORDER else len(_TRACK_ORDER)
+        events.append(
+            {"ph": "M", "name": "thread_sort_index", "pid": pid, "tid": tid,
+             "args": {"sort_index": order}}
+        )
+    for s in spans:
+        ev = {
+            "ph": "X",
+            "name": s.name,
+            "cat": s.name.split(".", 1)[0],
+            "pid": pid,
+            "tid": s.tid,
+            "ts": (s.t0_ns - origin_ns) / 1e3,  # µs
+            "dur": (s.t1_ns - s.t0_ns) / 1e3,
+        }
+        if s.attrs:
+            ev["args"] = dict(s.attrs)
+        events.append(ev)
+    return events
+
+
+def export_chrome_trace(
+    spans: Sequence[Span],
+    path: str,
+    origin_ns: Optional[int] = None,
+    process_name: str = "rank0",
+) -> int:
+    """Write the trace JSON; returns the number of span events written."""
+    events = to_trace_events(spans, origin_ns=origin_ns, process_name=process_name)
+    with open(path, "w") as f:
+        json.dump({"traceEvents": events, "displayTimeUnit": "ms"}, f)
+    return sum(1 for e in events if e.get("ph") == "X")
+
+
+def load_chrome_trace(path: str) -> List[Span]:
+    """Trace JSON -> Span records (inverse of export, up to ns rounding).
+
+    Accepts both the object form ({"traceEvents": [...]}) and the bare-array
+    form of the trace_event format.
+    """
+    with open(path) as f:
+        doc = json.load(f)
+    events = doc["traceEvents"] if isinstance(doc, dict) else doc
+    thread_names: Dict[int, str] = {}
+    for e in events:
+        if e.get("ph") == "M" and e.get("name") == "thread_name":
+            thread_names[int(e["tid"])] = e["args"]["name"]
+    spans: List[Span] = []
+    for e in events:
+        if e.get("ph") != "X":
+            continue
+        tid = int(e["tid"])
+        t0 = int(round(float(e["ts"]) * 1e3))
+        t1 = t0 + int(round(float(e.get("dur", 0.0)) * 1e3))
+        spans.append(
+            Span(
+                name=e["name"],
+                t0_ns=t0,
+                t1_ns=t1,
+                tid=tid,
+                thread=thread_names.get(tid, str(tid)),
+                attrs=e.get("args") or None,
+            )
+        )
+    spans.sort(key=lambda s: (s.t0_ns, s.t1_ns))
+    return spans
+
+
+__all__ = [
+    "TRACK_NAMES",
+    "track_name",
+    "to_trace_events",
+    "export_chrome_trace",
+    "load_chrome_trace",
+]

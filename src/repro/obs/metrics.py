@@ -1,0 +1,269 @@
+"""Counters / gauges / histograms + a JSONL sink for per-step metrics.
+
+The trace (trace.py) answers "where did the time go"; this module answers
+"what did the system do" — one structured JSON line per training step that
+folds together the telemetry the system already produces but previously
+scattered across four carriers: ``sched.api.ScheduleReport`` fields,
+``ft.health.HealthMonitor`` beat times, ``pipeline.metrics``
+Prefetch/Transfer stats, the flash kernel's live-tile fraction, and
+per-bucket measured step times (the raw material for online cost-model
+calibration, ROADMAP).
+
+Instruments live in a process-wide default registry so hot-path components
+(the Prefetcher's stall watchdog, the health monitor) can count events
+without any plumbing; counting is always on (an int add under a tiny lock),
+while the JSONL *sink* is attached only when the launcher opts in — no sink,
+no I/O, and ``emit()`` is a single ``is None`` check.
+"""
+
+from __future__ import annotations
+
+import json
+import threading
+from typing import Any, Dict, IO, Optional, Union
+
+
+class Counter:
+    """Monotonic event count."""
+
+    __slots__ = ("name", "_value", "_lock")
+
+    def __init__(self, name: str):
+        self.name = name
+        self._value = 0
+        self._lock = threading.Lock()
+
+    def inc(self, n: int = 1) -> None:
+        with self._lock:
+            self._value += n
+
+    @property
+    def value(self) -> int:
+        return self._value
+
+
+class Gauge:
+    """Last-written value."""
+
+    __slots__ = ("name", "_value")
+
+    def __init__(self, name: str):
+        self.name = name
+        self._value: float = 0.0
+
+    def set(self, v: float) -> None:
+        self._value = float(v)
+
+    @property
+    def value(self) -> float:
+        return self._value
+
+
+class Histogram:
+    """Streaming count/sum/min/max — enough for rates and spread without
+    keeping samples (the trace holds the full timeline when more is needed)."""
+
+    __slots__ = ("name", "count", "sum", "min", "max", "_lock")
+
+    def __init__(self, name: str):
+        self.name = name
+        self.count = 0
+        self.sum = 0.0
+        self.min = float("inf")
+        self.max = float("-inf")
+        self._lock = threading.Lock()
+
+    def observe(self, v: float) -> None:
+        v = float(v)
+        with self._lock:
+            self.count += 1
+            self.sum += v
+            if v < self.min:
+                self.min = v
+            if v > self.max:
+                self.max = v
+
+    @property
+    def mean(self) -> float:
+        return self.sum / self.count if self.count else 0.0
+
+    def as_dict(self) -> Dict[str, float]:
+        if self.count == 0:
+            return {"count": 0, "sum": 0.0, "mean": 0.0}
+        return {
+            "count": self.count,
+            "sum": self.sum,
+            "mean": self.mean,
+            "min": self.min,
+            "max": self.max,
+        }
+
+
+class MetricsRegistry:
+    """Get-or-create instrument store; names are stable across the run."""
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._counters: Dict[str, Counter] = {}
+        self._gauges: Dict[str, Gauge] = {}
+        self._histograms: Dict[str, Histogram] = {}
+
+    def counter(self, name: str) -> Counter:
+        with self._lock:
+            c = self._counters.get(name)
+            if c is None:
+                c = self._counters[name] = Counter(name)
+            return c
+
+    def gauge(self, name: str) -> Gauge:
+        with self._lock:
+            g = self._gauges.get(name)
+            if g is None:
+                g = self._gauges[name] = Gauge(name)
+            return g
+
+    def histogram(self, name: str) -> Histogram:
+        with self._lock:
+            h = self._histograms.get(name)
+            if h is None:
+                h = self._histograms[name] = Histogram(name)
+            return h
+
+    def snapshot(self) -> Dict[str, Any]:
+        """Flat instrument dump — one row for the end-of-run summary."""
+        out: Dict[str, Any] = {}
+        with self._lock:
+            for n, c in self._counters.items():
+                out[n] = c.value
+            for n, g in self._gauges.items():
+                out[n] = g.value
+            for n, h in self._histograms.items():
+                for k, v in h.as_dict().items():
+                    out[f"{n}.{k}"] = v
+        return out
+
+    def reset(self) -> None:
+        with self._lock:
+            self._counters.clear()
+            self._gauges.clear()
+            self._histograms.clear()
+
+
+def jsonify(obj: Any) -> Any:
+    """Best-effort conversion of metric rows to JSON-serialisable values
+    (numpy scalars/arrays, tuples-as-keys, nested dicts/lists)."""
+    import numpy as np
+
+    if isinstance(obj, dict):
+        return {str(k): jsonify(v) for k, v in obj.items()}
+    if isinstance(obj, (list, tuple)):
+        return [jsonify(v) for v in obj]
+    if isinstance(obj, np.ndarray):
+        return obj.tolist()
+    if isinstance(obj, (np.integer,)):
+        return int(obj)
+    if isinstance(obj, (np.floating,)):
+        return float(obj)
+    if isinstance(obj, (str, int, float, bool)) or obj is None:
+        return obj
+    # device scalars / anything else that quacks like a number
+    try:
+        return float(obj)
+    except (TypeError, ValueError):
+        return str(obj)
+
+
+class JsonlSink:
+    """Append-only JSON-lines writer; one lock so concurrent emitters
+    (trainer thread, watchdog) never interleave bytes."""
+
+    def __init__(self, path_or_file: Union[str, IO[str]]):
+        if hasattr(path_or_file, "write"):
+            self._f: IO[str] = path_or_file
+            self.path = getattr(path_or_file, "name", "<stream>")
+            self._owns = False
+        else:
+            self.path = path_or_file
+            self._f = open(path_or_file, "w")
+            self._owns = True
+        self._lock = threading.Lock()
+        self.rows_written = 0
+
+    def write(self, record: Dict[str, Any]) -> None:
+        line = json.dumps(jsonify(record), separators=(",", ":"))
+        with self._lock:
+            self._f.write(line + "\n")
+            self._f.flush()  # crash-robust: partial runs still report
+            self.rows_written += 1
+
+    def close(self) -> None:
+        with self._lock:
+            if self._owns and not self._f.closed:
+                self._f.close()
+
+
+def read_jsonl(path: str) -> list:
+    rows = []
+    with open(path) as f:
+        for line in f:
+            line = line.strip()
+            if line:
+                rows.append(json.loads(line))
+    return rows
+
+
+# -- process-wide default registry + optional sink ---------------------------
+
+_default = MetricsRegistry()
+_sink: Optional[JsonlSink] = None
+
+
+def registry() -> MetricsRegistry:
+    return _default
+
+
+def counter(name: str) -> Counter:
+    return _default.counter(name)
+
+
+def gauge(name: str) -> Gauge:
+    return _default.gauge(name)
+
+
+def histogram(name: str) -> Histogram:
+    return _default.histogram(name)
+
+
+def set_sink(sink: Optional[JsonlSink]) -> Optional[JsonlSink]:
+    global _sink
+    old, _sink = _sink, sink
+    return old
+
+
+def sink() -> Optional[JsonlSink]:
+    return _sink
+
+
+def emit(record: Dict[str, Any]) -> None:
+    """Write one structured row if a sink is attached; no-op otherwise."""
+    s = _sink
+    if s is not None:
+        s.write(record)
+
+
+__all__ = [
+    "Counter",
+    "Gauge",
+    "Histogram",
+    "MetricsRegistry",
+    "JsonlSink",
+    "read_jsonl",
+    "jsonify",
+    "registry",
+    "counter",
+    "gauge",
+    "histogram",
+    "set_sink",
+    "sink",
+    "emit",
+]

@@ -1,0 +1,329 @@
+"""Stall attribution + trace validation over (spans, metrics rows).
+
+Answers the question the fragmented telemetry couldn't: *where did this
+step's time go?* For every ``train_step`` span the trainer-thread children
+partition the interval into
+
+  * ``data_wait_s``     — ``prefetch.wait``: blocked on the schedule-ahead
+                          queue (the producer's GDS+DACP+packing was late);
+  * ``transfer_wait_s`` — ``transfer.wait`` (blocked on the H2D staging
+                          worker) plus inline ``transfer.stage`` time when
+                          staging runs on the trainer thread (serial mode);
+  * ``compute_s``       — the remainder: dispatching + waiting on device
+                          compute.
+
+A step is *data-starved* / *transfer-bound* when that stall dominates and
+exceeds ``stall_frac`` of the step; otherwise *compute-bound* — the state a
+healthy pipeline should sit in.
+
+The same spans independently re-derive the pipeline's overlap efficiency
+(1 - wait/produce over consumed iterations); ``check()`` cross-checks it
+against the ``PrefetchStats`` accounting carried in the metrics JSONL, so
+the trace and the counters must agree before CI trusts either.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from .trace import Span
+
+# -- the span taxonomy (stable names: a compatibility surface) ---------------
+TRAIN_STEP = "train_step"
+STEP_SCHEDULE = "train_step.schedule"
+STEP_ACCUMULATE = "train_step.accumulate"
+STEP_FINALIZE = "train_step.finalize"
+PREFETCH_PRODUCE = "prefetch.produce"
+PREFETCH_WAIT = "prefetch.wait"
+TRANSFER_STAGE = "transfer.stage"
+TRANSFER_WAIT = "transfer.wait"
+PUT_BUFFERS = "dist.put_buffers"
+CKPT_SAVE = "checkpoint.save"
+CKPT_WRITE = "checkpoint.write"
+CKPT_RESTORE = "checkpoint.restore"
+FT_RESCALE = "ft.rescale"
+SERVE_PREFILL = "serve.prefill"
+SERVE_DECODE = "serve.decode"
+
+
+@dataclasses.dataclass
+class StepAttribution:
+    step: Optional[int]
+    t0_ns: int
+    dur_s: float
+    data_wait_s: float
+    transfer_wait_s: float
+    compute_s: float
+    label: str  # data-starved | transfer-bound | compute-bound
+
+    def as_dict(self) -> Dict:
+        return dataclasses.asdict(self)
+
+
+def _contained(child: Span, parent: Span) -> bool:
+    return (
+        child.tid == parent.tid
+        and child.t0_ns >= parent.t0_ns
+        and child.t1_ns <= parent.t1_ns
+        and child is not parent
+    )
+
+
+def attribute_steps(
+    spans: Sequence[Span], stall_frac: float = 0.2
+) -> List[StepAttribution]:
+    """Per-``train_step`` wall-time decomposition + bottleneck label."""
+    steps = sorted(
+        (s for s in spans if s.name == TRAIN_STEP), key=lambda s: s.t0_ns
+    )
+    out: List[StepAttribution] = []
+    for st in steps:
+        children = [s for s in spans if _contained(s, st)]
+        data_wait = sum(s.dur_s for s in children if s.name == PREFETCH_WAIT)
+        transfer = sum(
+            s.dur_s
+            for s in children
+            if s.name in (TRANSFER_WAIT, TRANSFER_STAGE)
+        )
+        dur = st.dur_s
+        compute = max(dur - data_wait - transfer, 0.0)
+        label = "compute-bound"
+        if dur > 0:
+            stalls = [("data-starved", data_wait), ("transfer-bound", transfer)]
+            worst, worst_s = max(stalls, key=lambda kv: kv[1])
+            if worst_s / dur >= stall_frac:
+                label = worst
+        step_no = None
+        if st.attrs and "step" in st.attrs:
+            step_no = int(st.attrs["step"])
+        out.append(
+            StepAttribution(
+                step=step_no,
+                t0_ns=st.t0_ns,
+                dur_s=dur,
+                data_wait_s=data_wait,
+                transfer_wait_s=transfer,
+                compute_s=compute,
+                label=label,
+            )
+        )
+    return out
+
+
+def span_overlap_efficiency(spans: Sequence[Span]) -> Optional[float]:
+    """Re-derive ``PrefetchStats.overlap_efficiency`` from the trace alone.
+
+    The queue is FIFO, so the first ``len(waits)`` produce spans are exactly
+    the consumed iterations; efficiency is the produce time NOT mirrored in
+    consumer waits. ``None`` when the trace has no consumed produce work
+    (e.g. a serve-only trace).
+    """
+    waits = [s for s in spans if s.name == PREFETCH_WAIT]
+    produces = sorted(
+        (s for s in spans if s.name == PREFETCH_PRODUCE), key=lambda s: s.t0_ns
+    )
+    consumed = min(len(waits), len(produces))
+    if consumed == 0:
+        return None
+    produce_s = sum(s.dur_s for s in produces[:consumed])
+    if produce_s <= 0.0:
+        return None
+    wait_s = sum(s.dur_s for s in waits[:consumed])
+    return max(1.0 - wait_s / produce_s, 0.0)
+
+
+def nesting_violations(spans: Sequence[Span]) -> List[str]:
+    """Spans on one thread must form a proper stack: any two either nest or
+    are disjoint. Returns human-readable violations (empty = well-formed)."""
+    errors: List[str] = []
+    by_tid: Dict[int, List[Span]] = {}
+    for s in spans:
+        if s.t1_ns < s.t0_ns:
+            errors.append(f"{s.name}: negative duration ({s.t1_ns - s.t0_ns}ns)")
+            continue
+        by_tid.setdefault(s.tid, []).append(s)
+    for tid, ss in by_tid.items():
+        ss.sort(key=lambda s: (s.t0_ns, -s.t1_ns))
+        stack: List[Span] = []
+        for s in ss:
+            while stack and stack[-1].t1_ns <= s.t0_ns:
+                stack.pop()
+            if stack and s.t1_ns > stack[-1].t1_ns:
+                errors.append(
+                    f"partial overlap on {s.thread}: {s.name} "
+                    f"[{s.t0_ns},{s.t1_ns}] crosses {stack[-1].name} "
+                    f"[{stack[-1].t0_ns},{stack[-1].t1_ns}]"
+                )
+                continue
+            stack.append(s)
+    return errors
+
+
+def rank_imbalance(rows: Sequence[dict]) -> Optional[Tuple[float, float]]:
+    """(mean, max) per-step rank imbalance from the metrics rows'
+    ``rank_time_s`` shares (max/mean across ranks)."""
+    vals: List[float] = []
+    for r in rows:
+        times = r.get("rank_time_s")
+        if not times:
+            continue
+        mean = sum(times) / len(times)
+        if mean > 0:
+            vals.append(max(times) / mean)
+    if not vals:
+        return None
+    return sum(vals) / len(vals), max(vals)
+
+
+def _step_rows(rows: Sequence[dict]) -> List[dict]:
+    return [r for r in rows if r.get("kind") == "step"]
+
+
+def _pipeline_row(rows: Sequence[dict]) -> Optional[dict]:
+    last = None
+    for r in rows:
+        if r.get("kind") == "pipeline":
+            last = r
+    return last
+
+
+def check(
+    spans: Sequence[Span],
+    rows: Sequence[dict],
+    tol: float = 0.05,
+) -> List[str]:
+    """CI validation: returns a list of failures (empty = pass).
+
+    1. every span nests properly on its thread;
+    2. every metrics step is covered by exactly one ``train_step`` span;
+    3. span-derived overlap efficiency agrees with the ``PrefetchStats``
+       accounting in the metrics' pipeline-summary row within ``tol``.
+    """
+    errors = list(nesting_violations(spans))
+
+    steps_in_metrics = [int(r["step"]) for r in _step_rows(rows) if "step" in r]
+    span_steps: Dict[int, int] = {}
+    unlabeled = 0
+    for s in spans:
+        if s.name != TRAIN_STEP:
+            continue
+        if s.attrs and "step" in s.attrs:
+            k = int(s.attrs["step"])
+            span_steps[k] = span_steps.get(k, 0) + 1
+        else:
+            unlabeled += 1
+    if unlabeled:
+        errors.append(f"{unlabeled} train_step span(s) missing the step attr")
+    for step in steps_in_metrics:
+        n = span_steps.get(step, 0)
+        if n != 1:
+            errors.append(
+                f"step {step}: expected exactly 1 train_step span, found {n}"
+            )
+    extra = sorted(set(span_steps) - set(steps_in_metrics))
+    if steps_in_metrics and extra:
+        errors.append(f"train_step spans with no metrics row: {extra}")
+
+    pipe = _pipeline_row(rows)
+    if pipe is None:
+        if rows:
+            errors.append("metrics JSONL has no pipeline-summary row")
+        return errors
+    stats_eff = float(pipe.get("prefetch_overlap_efficiency", 0.0))
+    span_eff = span_overlap_efficiency(spans)
+    if float(pipe.get("prefetch_produce_s", 0.0)) <= 0.0 and span_eff is None:
+        return errors  # degenerate empty run: both sides agree there is nothing
+    if span_eff is None:
+        errors.append(
+            "trace has no prefetch produce/wait spans but PrefetchStats "
+            f"recorded produce_s={pipe.get('prefetch_produce_s')}"
+        )
+    elif abs(span_eff - stats_eff) > tol:
+        errors.append(
+            f"span-derived overlap efficiency {span_eff:.3f} disagrees with "
+            f"PrefetchStats {stats_eff:.3f} (tol {tol})"
+        )
+    return errors
+
+
+def format_report(
+    spans: Sequence[Span],
+    rows: Sequence[dict],
+    stall_frac: float = 0.2,
+) -> str:
+    """Human-readable stall-attribution summary for the CLI."""
+    lines: List[str] = []
+    attrib = attribute_steps(spans, stall_frac=stall_frac)
+    lines.append(f"steps traced: {len(attrib)}")
+    if attrib:
+        lines.append(
+            f"{'step':>5} {'total_ms':>9} {'data_ms':>8} {'xfer_ms':>8} "
+            f"{'compute_ms':>10}  label"
+        )
+        for a in attrib:
+            lines.append(
+                f"{a.step if a.step is not None else '?':>5} "
+                f"{a.dur_s * 1e3:9.1f} {a.data_wait_s * 1e3:8.1f} "
+                f"{a.transfer_wait_s * 1e3:8.1f} {a.compute_s * 1e3:10.1f}  "
+                f"{a.label}"
+            )
+        counts: Dict[str, int] = {}
+        for a in attrib:
+            counts[a.label] = counts.get(a.label, 0) + 1
+        lines.append(
+            "verdict: "
+            + ", ".join(f"{n} {label}" for label, n in sorted(counts.items()))
+        )
+    span_eff = span_overlap_efficiency(spans)
+    if span_eff is not None:
+        lines.append(f"overlap efficiency (from spans): {span_eff:.3f}")
+    pipe = _pipeline_row(rows)
+    if pipe is not None:
+        lines.append(
+            "overlap efficiency (PrefetchStats): "
+            f"{float(pipe.get('prefetch_overlap_efficiency', 0.0)):.3f} "
+            f"(produce {float(pipe.get('prefetch_produce_s', 0.0)) * 1e3:.1f}ms, "
+            f"wait {float(pipe.get('prefetch_wait_s', 0.0)) * 1e3:.1f}ms, "
+            f"{int(pipe.get('prefetch_consumed', 0))} consumed)"
+        )
+    imb = rank_imbalance(_step_rows(rows))
+    if imb is not None:
+        lines.append(
+            f"per-rank time imbalance (max/mean): mean {imb[0]:.3f}, "
+            f"worst step {imb[1]:.3f}"
+        )
+    ckpt = [s for s in spans if s.name in (CKPT_SAVE, CKPT_WRITE)]
+    if ckpt:
+        lines.append(
+            f"checkpoint: {sum(1 for s in ckpt if s.name == CKPT_SAVE)} saves, "
+            f"{sum(s.dur_s for s in ckpt if s.name == CKPT_SAVE) * 1e3:.1f}ms "
+            "on the training thread"
+        )
+    return "\n".join(lines)
+
+
+__all__ = [
+    "StepAttribution",
+    "attribute_steps",
+    "span_overlap_efficiency",
+    "nesting_violations",
+    "rank_imbalance",
+    "check",
+    "format_report",
+    "TRAIN_STEP",
+    "STEP_SCHEDULE",
+    "STEP_ACCUMULATE",
+    "STEP_FINALIZE",
+    "PREFETCH_PRODUCE",
+    "PREFETCH_WAIT",
+    "TRANSFER_STAGE",
+    "TRANSFER_WAIT",
+    "PUT_BUFFERS",
+    "CKPT_SAVE",
+    "CKPT_WRITE",
+    "CKPT_RESTORE",
+    "FT_RESCALE",
+    "SERVE_PREFILL",
+    "SERVE_DECODE",
+]

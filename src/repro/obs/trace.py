@@ -1,0 +1,218 @@
+"""Thread-safe span tracer — near-zero cost when disabled (docs/DESIGN.md §12).
+
+The training system's interesting time is spent on four concurrent timelines
+(the trainer thread, the prefetch producer, the H2D staging worker, the async
+checkpoint writer); a span is one named interval on whichever thread opened
+it:
+
+    with obs.span("prefetch.produce", iter=i):
+        it = loader.next_iteration()
+
+Two properties make this safe to leave in the hot path permanently:
+
+* **Disabled mode is a module-level no-op fast path.** ``span()`` reads one
+  module global; when no tracer is enabled it returns a shared singleton
+  context manager — no span object, no clock read, no buffer touch. Callers
+  never guard call sites with ``if obs.enabled()``.
+
+* **Recording never contends across threads.** Each thread appends finished
+  spans to its own buffer (registered once under a lock on first use;
+  appends are plain ``list.append``). ``drain()`` snapshots each buffer by
+  length and deletes exactly what it copied, so a producer appending
+  mid-drain loses nothing and never blocks — the Prefetcher's producer
+  thread never waits on the trainer's trace flush.
+
+Clocks are ``time.perf_counter_ns()`` (monotonic): span math is immune to
+wall-clock steps, and the exporter rebases everything onto the tracer's
+origin so traces start at t=0.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+from typing import Dict, List, Optional, Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class Span:
+    """One finished interval. ``tid``/``thread`` name the timeline (track)."""
+
+    name: str
+    t0_ns: int
+    t1_ns: int
+    tid: int
+    thread: str
+    attrs: Optional[dict] = None
+
+    @property
+    def dur_ns(self) -> int:
+        return self.t1_ns - self.t0_ns
+
+    @property
+    def dur_s(self) -> float:
+        return (self.t1_ns - self.t0_ns) / 1e9
+
+
+class _NullSpan:
+    """Shared disabled-mode context manager: one instance for the process."""
+
+    __slots__ = ()
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, exc_type, exc, tb):
+        return False
+
+
+_NULL_SPAN = _NullSpan()
+
+
+class _SpanCtx:
+    __slots__ = ("_tracer", "_name", "_attrs", "_t0")
+
+    def __init__(self, tracer: "Tracer", name: str, attrs: Optional[dict]):
+        self._tracer = tracer
+        self._name = name
+        self._attrs = attrs
+
+    def __enter__(self):
+        self._t0 = time.perf_counter_ns()
+        return self
+
+    def __exit__(self, exc_type, exc, tb):
+        self._tracer._record(self._name, self._t0, time.perf_counter_ns(), self._attrs)
+        return False
+
+
+class Tracer:
+    """Collects spans from any thread; drained by the exporter/reporter."""
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        # append-only registry of (tid, thread name, buffer). Keyed as a list
+        # rather than by tid: the OS reuses thread idents, and a restarted
+        # producer must never clobber its predecessor's undrained spans. Each
+        # buffer is appended to only by its owning thread and len-sliced by
+        # drain, so recording never takes the lock after registration.
+        self._buffers: List[Tuple[int, str, List[tuple]]] = []
+        self._local = threading.local()
+        self.origin_ns = time.perf_counter_ns()
+
+    def span(self, name: str, attrs: Optional[dict] = None) -> _SpanCtx:
+        return _SpanCtx(self, name, attrs)
+
+    def record(
+        self, name: str, t0_ns: int, t1_ns: int, attrs: Optional[dict] = None
+    ) -> None:
+        """Record a pre-timed span (caller-supplied ``perf_counter_ns`` pair).
+
+        For call sites that already measure an interval for their own
+        accounting (e.g. ``PrefetchStats``): recording from the same numbers
+        makes trace-derived and stats-derived quantities agree exactly,
+        instead of within the noise of two separate clock reads.
+        """
+        self._record(name, t0_ns, t1_ns, attrs)
+
+    def instant(self, name: str, attrs: Optional[dict] = None) -> None:
+        t = time.perf_counter_ns()
+        self._record(name, t, t, attrs)
+
+    def _buf(self) -> List[tuple]:
+        buf = getattr(self._local, "buf", None)
+        if buf is None:
+            buf = []
+            th = threading.current_thread()
+            with self._lock:
+                self._buffers.append((th.ident, th.name, buf))
+            self._local.buf = buf
+        return buf
+
+    def _record(self, name: str, t0: int, t1: int, attrs: Optional[dict]) -> None:
+        self._buf().append((name, t0, t1, attrs))
+
+    def drain(self) -> List[Span]:
+        """All finished spans so far, oldest first, without blocking writers.
+
+        Snapshot-by-length then delete-by-count: a writer appending between
+        the two operations keeps its span for the next drain.
+        """
+        with self._lock:
+            buffers = list(self._buffers)
+        out: List[Span] = []
+        for tid, tname, buf in buffers:
+            n = len(buf)
+            if n == 0:
+                continue
+            items = buf[:n]
+            del buf[:n]
+            out.extend(
+                Span(name, t0, t1, tid, tname, attrs)
+                for name, t0, t1, attrs in items
+            )
+        out.sort(key=lambda s: (s.t0_ns, s.t1_ns))
+        return out
+
+
+# -- module-level enable/disable + no-op fast path ---------------------------
+
+_active: Optional[Tracer] = None
+
+
+def enable(tracer: Optional[Tracer] = None) -> Tracer:
+    global _active
+    _active = tracer if tracer is not None else Tracer()
+    return _active
+
+
+def disable() -> None:
+    global _active
+    _active = None
+
+
+def active() -> Optional[Tracer]:
+    return _active
+
+
+def enabled() -> bool:
+    return _active is not None
+
+
+def span(name: str, **attrs):
+    """Open a span on the active tracer, or the shared no-op when disabled.
+
+    Disabled calls without keyword attrs allocate nothing (the singleton is
+    returned); attrs are the only per-call allocation either way.
+    """
+    t = _active
+    if t is None:
+        return _NULL_SPAN
+    return t.span(name, attrs or None)
+
+
+def instant(name: str, **attrs) -> None:
+    t = _active
+    if t is not None:
+        t.instant(name, attrs or None)
+
+
+def record(name: str, t0_ns: int, t1_ns: int, **attrs) -> None:
+    """Record a pre-timed span on the active tracer (no-op when disabled)."""
+    t = _active
+    if t is not None:
+        t.record(name, t0_ns, t1_ns, attrs or None)
+
+
+__all__ = [
+    "Span",
+    "Tracer",
+    "enable",
+    "disable",
+    "active",
+    "enabled",
+    "span",
+    "instant",
+    "record",
+]

@@ -43,11 +43,27 @@ class PrefetchStats:
         """Fraction of sched+pack time hidden behind device compute.
 
         0.0 for the serial path by construction; approaches 1.0 when the
-        queue never runs dry.
+        queue never runs dry. Guarded for empty runs: with zero produced
+        iterations (or a depth=0 run that never drew) ``produce_s`` is 0 and
+        the efficiency is defined as 0.0, never a division error.
         """
         if self.produce_s <= 0.0:
             return 0.0
         return self.hidden_s / self.produce_s
+
+    @property
+    def mean_produce_s(self) -> float:
+        """Mean host schedule+pack cost per consumed batch (0.0 when none)."""
+        if self.consumed <= 0:
+            return 0.0
+        return self.produce_s / self.consumed
+
+    @property
+    def mean_wait_s(self) -> float:
+        """Mean consumer-visible queue wait per consumed batch (0.0 when none)."""
+        if self.consumed <= 0:
+            return 0.0
+        return self.wait_s / self.consumed
 
     def as_dict(self) -> Dict[str, float]:
         return {
@@ -57,6 +73,8 @@ class PrefetchStats:
             "produce_s": self.produce_s,
             "hidden_s": self.hidden_s,
             "overlap_efficiency": self.overlap_efficiency,
+            "mean_produce_s": self.mean_produce_s,
+            "mean_wait_s": self.mean_wait_s,
             "flushes": self.flushes,
         }
 
@@ -75,10 +93,20 @@ class TransferStats:
         ladder or the compiled-step cache is being thrashed."""
         return len(self.shape_keys)
 
+    @property
+    def overlap_frac(self) -> float:
+        """Fraction of staged micro-steps issued while compute was in
+        flight. 0.0 for an empty run or the depth=0 serial mode (nothing
+        staged, or inline staging only) — guarded, never a division error."""
+        if self.staged <= 0:
+            return 0.0
+        return self.overlapped / self.staged
+
     def as_dict(self) -> Dict[str, float]:
         return {
             "staged": self.staged,
             "overlapped": self.overlapped,
+            "overlap_frac": self.overlap_frac,
             "n_shapes": self.n_shapes,
         }
 

@@ -37,24 +37,42 @@ to pre-pipeline behaviour and to any ``depth>0`` run with healthy telemetry.
 
 from __future__ import annotations
 
+import logging
 import queue
 import threading
 import time
 from typing import Optional
 
+from .. import obs
 from ..data.loader import IterationBatch, LoaderState, SkrullDataLoader
 from .metrics import PrefetchStats
 
 # distinguishes "no pending update" from "update to None" (clear factors)
 _UNSET = object()
 
+log = logging.getLogger("repro.pipeline")
+
 
 class Prefetcher:
-    def __init__(self, loader: SkrullDataLoader, depth: int = 0):
+    def __init__(
+        self,
+        loader: SkrullDataLoader,
+        depth: int = 0,
+        stall_warn_s: float = 30.0,
+        stall_log_every_s: float = 60.0,
+    ):
         if depth < 0:
             raise ValueError(f"prefetch depth must be >= 0, got {depth}")
         self.loader = loader
         self.depth = int(depth)
+        # stall watchdog: a consumer wait longer than ``stall_warn_s`` bumps
+        # the ``prefetch.stall`` obs counter (once per stalled get) and logs
+        # one line naming the slow stage, rate-limited to one line per
+        # ``stall_log_every_s`` so a persistently starved loop can't flood
+        self.stall_warn_s = float(stall_warn_s)
+        self.stall_log_every_s = float(stall_log_every_s)
+        self._last_stall_log = float("-inf")
+        self._last_produce_s = 0.0  # producer's most recent draw duration
         self.stats = PrefetchStats()
         self._lock = threading.Lock()
         self._pending_factors = _UNSET  # (factors, version) | _UNSET
@@ -91,8 +109,19 @@ class Prefetcher:
                 continue
             state_before = self.loader.state()
             try:
+                n_iter = self.stats.produced
                 self._apply_pending_factors()
                 it = self.loader.next_iteration()
+                # the prefetch.produce span is recorded from the loader's own
+                # produce_time_s measurement — the exact number PrefetchStats
+                # accumulates — so trace-derived overlap efficiency equals the
+                # stats-derived one by construction (report.check cross-check)
+                t1 = time.perf_counter_ns()
+                obs.record(
+                    "prefetch.produce",
+                    t1 - int(it.produce_time_s * 1e9), t1, iter=n_iter,
+                )
+                self._last_produce_s = it.produce_time_s
             except BaseException as e:  # surface on the consumer side
                 # a failed draw may have advanced the cursor before raising;
                 # rewind so the batch is retried after recovery, never
@@ -148,8 +177,19 @@ class Prefetcher:
         """Next iteration's batch. Blocks only when the queue is dry (that
         blocked time is the pipeline's *visible* cost — see metrics.py)."""
         if self.depth == 0:
+            # serial path: wait == produce by construction, and the spans say
+            # so too — prefetch.wait encloses prefetch.produce on this thread,
+            # so span-derived overlap efficiency is exactly 0 (report.py)
+            t0 = time.perf_counter_ns()
+            n_iter = self.stats.produced
             self._apply_pending_factors()
             it = self.loader.next_iteration()
+            t1 = time.perf_counter_ns()
+            obs.record(
+                "prefetch.produce",
+                t1 - int(it.produce_time_s * 1e9), t1, iter=n_iter,
+            )
+            obs.record("prefetch.wait", t0, time.perf_counter_ns())
             # serial path: the full produce cost is consumer-visible
             self.stats.produced += 1
             self.stats.consumed += 1
@@ -157,7 +197,8 @@ class Prefetcher:
             self.stats.produce_s += it.produce_time_s
             return it
         self._ensure_started()
-        t0 = time.perf_counter()
+        t0 = time.perf_counter_ns()
+        stalled = False
         while True:
             try:
                 it = self._q.get(timeout=0.1)
@@ -170,11 +211,34 @@ class Prefetcher:
                     # happen) — restart rather than spinning forever
                     self._thread = None
                     self._ensure_started()
+                waited = (time.perf_counter_ns() - t0) / 1e9
+                if waited >= self.stall_warn_s and not stalled:
+                    stalled = True
+                    self._note_stall(waited)
+        # span and stats share one timestamp pair (see _produce's note)
+        t1 = time.perf_counter_ns()
+        obs.record("prefetch.wait", t0, t1)
         self._slots.release()  # consumed: the producer may draw one further
-        self.stats.wait_s += time.perf_counter() - t0
+        self.stats.wait_s += (t1 - t0) / 1e9
         self.stats.consumed += 1
         self.stats.produce_s += it.produce_time_s
         return it
+
+    def _note_stall(self, waited_s: float) -> None:
+        """Watchdog: the queue has been dry past the threshold. Count it
+        always (obs counters are always on); log at most one line per
+        ``stall_log_every_s`` naming the stage that is late."""
+        obs.counter("prefetch.stall").inc()
+        obs.gauge("prefetch.stall_wait_s").set(waited_s)
+        now = time.monotonic()
+        if now - self._last_stall_log >= self.stall_log_every_s:
+            self._last_stall_log = now
+            log.warning(
+                "prefetch queue dry for %.2fs (threshold %.2fs, depth %d): "
+                "slow stage is prefetch.produce (loader.next_iteration on the "
+                "skrull-prefetch thread; last draw took %.2fs)",
+                waited_s, self.stall_warn_s, self.depth, self._last_produce_s,
+            )
 
     def set_speed_factors(self, factors, version: int) -> None:
         """Stage straggler feedback for iterations not yet scheduled.

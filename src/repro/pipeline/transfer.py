@@ -24,6 +24,7 @@ from typing import Any, Callable, Dict, Iterable, Iterator, List, Optional, Sequ
 
 import jax.numpy as jnp
 
+from .. import obs
 from ..dist.executor import stack_row
 from .metrics import TransferStats
 
@@ -64,9 +65,13 @@ class TransferPipeline:
         self._pool: Optional[ThreadPoolExecutor] = None
 
     def _stage(self, row: Sequence[Any]) -> Dict[str, Any]:
-        self.stats.shape_keys.add(shape_key(row))
-        self.stats.staged += 1
-        return self.put(stack_row(row))
+        # the span lands on whichever thread stages: the skrull-h2d worker
+        # under overlap (hidden time), the trainer thread inline (visible
+        # time — trace_report attributes it as transfer-bound)
+        with obs.span("transfer.stage"):
+            self.stats.shape_keys.add(shape_key(row))
+            self.stats.staged += 1
+            return self.put(stack_row(row))
 
     def rows(self, microbatch_rows: Iterable[Sequence[Any]]) -> Iterator[Dict[str, Any]]:
         """Yield device-ready buffer dicts, staging one row ahead."""
@@ -81,7 +86,10 @@ class TransferPipeline:
             )
         fut: Future = self._pool.submit(self._stage, rows[0])
         for m in range(len(rows)):
-            current = fut.result()
+            # consumer-visible staging stall: >0 only when the worker's
+            # stack_row+device_put outlasted the previous micro-step's compute
+            with obs.span("transfer.wait"):
+                current = fut.result()
             if m + 1 < len(rows):
                 # staged while the caller dispatches micro-step m's compute
                 fut = self._pool.submit(self._stage, rows[m + 1])

@@ -29,6 +29,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from .. import obs
 from ..checkpoint.manager import CheckpointManager
 from ..configs.base import ArchConfig
 from ..data.loader import SkrullDataLoader, LoaderState
@@ -40,6 +41,8 @@ from ..models.transformer import CallConfig, init_model
 from ..optim.grad import tree_zeros_like
 from ..optim.schedule import linear_warmup_cosine
 from ..pipeline import Prefetcher, TransferPipeline
+from ..pipeline.metrics import pipeline_summary
+from ..pipeline.transfer import shape_key
 from ..sched import Topology
 from .state import TrainState, init_train_state
 from .step import make_accumulate, make_apply_update, make_micro_grad
@@ -66,6 +69,10 @@ class TrainerConfig:
     # and cleared — bin-packing must not chase timing noise, and schedules
     # stay identical across prefetch depths while no real straggler exists
     speed_deadband: float = 0.05
+    # prefetch stall watchdog (repro.pipeline): a consumer queue wait past
+    # this many seconds bumps the obs prefetch.stall counter and logs one
+    # rate-limited line naming the slow stage
+    prefetch_stall_warn_s: float = 30.0
 
 
 class Trainer:
@@ -108,7 +115,11 @@ class Trainer:
         donate = (0, 1, 2) if jax.default_backend() != "cpu" else ()
         self._accum = jax.jit(make_accumulate(), donate_argnums=donate)
         self.health = HealthMonitor(ws=loader.ws)
-        self.prefetch = Prefetcher(loader, depth=tcfg.prefetch_depth)
+        self.prefetch = Prefetcher(
+            loader,
+            depth=tcfg.prefetch_depth,
+            stall_warn_s=tcfg.prefetch_stall_warn_s,
+        )
         # stage the next micro-step's stacking+H2D only when a real
         # accelerator computes independently of the host — on the CPU
         # backend "device compute" runs on the same cores as staging, so the
@@ -175,26 +186,41 @@ class Trainer:
 
     # -- iteration ------------------------------------------------------------
     def train_step(self) -> Dict[str, float]:
+        # the span taxonomy here is a compatibility surface (DESIGN.md §12):
+        # one train_step per step, phases schedule/accumulate/finalize —
+        # launch/trace_report.py's --check mode asserts this structure
+        with obs.span("train_step", step=self.step + 1):
+            return self._train_step()
+
+    def _train_step(self) -> Dict[str, float]:
         t0 = time.perf_counter()
-        it = self.prefetch.get()
-        self.last_iteration = it
-        if it.loader_state_end is not None:
-            self._resume_state = it.loader_state_end
-        # lowering reuses the policy's ScheduleReport for per-device loads
-        plan = (
-            lower_schedule(it.schedule, self.mesh, report=it.report)
-            if self.dist
-            else None
-        )
+        with obs.span("train_step.schedule"):
+            it = self.prefetch.get()
+            self.last_iteration = it
+            if it.loader_state_end is not None:
+                self._resume_state = it.loader_state_end
+            # lowering reuses the policy's ScheduleReport for per-device loads
+            plan = (
+                lower_schedule(it.schedule, self.mesh, report=it.report)
+                if self.dist
+                else None
+            )
         denom = jnp.float32(it.denominator)
         acc = tree_zeros_like(self.state.params)
         loss_sum = jnp.zeros((), jnp.float32)
         valid = jnp.zeros((), jnp.int32)
         # transfer.rows stages micro-step m+1's stack_row + device_put while
         # micro-step m's compute is in flight (double buffer, ladder shapes)
-        for buffers in self.transfer.rows(it.microbatches):
-            grads, m = self._micro_grad(self.state.params, buffers, denom)
-            acc, loss_sum, valid = self._accum(acc, loss_sum, valid, grads, m)
+        with obs.span("train_step.accumulate", microsteps=it.n_microsteps):
+            for buffers in self.transfer.rows(it.microbatches):
+                grads, m = self._micro_grad(self.state.params, buffers, denom)
+                acc, loss_sum, valid = self._accum(acc, loss_sum, valid, grads, m)
+        with obs.span("train_step.finalize"):
+            out = self._finalize_step(it, acc, loss_sum, valid, t0)
+        return out
+
+    def _finalize_step(self, it, acc, loss_sum, valid, t0) -> Dict[str, float]:
+        times = None
         self.state, am = self._apply(self.state, acc)
         # host-loop time: on CPU this equals step latency (dispatch is
         # effectively synchronous); on accelerators the sync-free loop makes
@@ -265,6 +291,15 @@ class Trainer:
             "produce_ms": it.produce_time_s * 1e3,
             "time_s": dt,
         }
+        # per-bucket measured step time: the (n_ranks, c_loc, c_dist) ladder
+        # keys this iteration ran, paired with time_s — the raw material for
+        # online cost-model calibration from live telemetry (ROADMAP)
+        out["buckets"] = [list(shape_key(row)) for row in it.microbatches]
+        if times is not None:
+            # the HealthMonitor's per-rank beat times for this round (share
+            # of measured wall time attributed by the schedule's load)
+            out["rank_time_s"] = [float(x) for x in times]
+            out.update(self.health.as_metrics())
         if flash_live is not None:
             out["flash_live_frac"] = flash_live
         if it.report is not None:
@@ -290,6 +325,12 @@ class Trainer:
                     m[k] = float(m[k])
             if "valid_tokens" in m:
                 m["valid_tokens"] = int(m["valid_tokens"])
+        # structured per-step rows to the obs JSONL sink (no-op when off).
+        # Emission rides the existing finalize boundaries, so observability
+        # adds no host<->device syncs of its own to the step critical path.
+        if obs.metrics.sink() is not None:
+            for m in metrics:
+                obs.emit({"kind": "step", **m})
 
     def run(self, steps: Optional[int] = None) -> List[Dict[str, float]]:
         self.maybe_resume()
@@ -314,6 +355,14 @@ class Trainer:
             if ckpt_now:
                 self.save()
         self._finalize_metrics(pending)
+        # one summary row closes the run: the PrefetchStats/TransferStats
+        # accounting (trace_report cross-checks span-derived overlap
+        # efficiency against it) plus every obs instrument's final value
+        obs.emit({
+            "kind": "pipeline",
+            **pipeline_summary(self.prefetch.stats, self.transfer.stats),
+            "counters": obs.registry().snapshot(),
+        })
         if self.ckpt:
             self.save()
             self.ckpt.wait()

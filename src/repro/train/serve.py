@@ -22,6 +22,7 @@ from typing import Any, Dict, List, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from .. import obs
 from ..configs.base import ArchConfig
 from ..models.attention import decode_attention
 from ..models.layers import dense, embed, rmsnorm, rope
@@ -79,7 +80,19 @@ def prefill(
     tokens: jnp.ndarray,  # (B, S)
     max_len: int,
 ) -> Tuple[jnp.ndarray, List[Any], jnp.ndarray]:
-    """Returns (last logits (B, V), caches, lengths (B,))."""
+    """Returns (last logits (B, V), caches, lengths (B,)).
+
+    The ``serve.prefill`` span covers build+dispatch when called eagerly;
+    under an outer ``jax.jit`` it covers the trace (host cost), which is
+    still the signal that matters for the serving scheduler's admission path.
+    """
+    with obs.span(
+        "serve.prefill", batch=int(tokens.shape[0]), seq=int(tokens.shape[1])
+    ):
+        return _prefill(params, cfg, call, tokens, max_len)
+
+
+def _prefill(params, cfg, call, tokens, max_len):
     from ..models.transformer import _mlp_or_moe_layer  # reuse
 
     pattern = block_pattern(cfg)
@@ -158,7 +171,16 @@ def decode_step(
     lengths: jnp.ndarray,  # (B,) int32 tokens generated so far
     caches: List[Any],
 ) -> Tuple[jnp.ndarray, List[Any]]:
-    """One decode step for every slot. Returns (logits (B, V), new caches)."""
+    """One decode step for every slot. Returns (logits (B, V), new caches).
+
+    ``serve.decode`` span: see the ``prefill`` note — eager call = dispatch
+    cost, jitted call = one trace-time span per compilation.
+    """
+    with obs.span("serve.decode", batch=int(token.shape[0])):
+        return _decode_step(params, cfg, call, token, lengths, caches)
+
+
+def _decode_step(params, cfg, call, token, lengths, caches):
     pattern = block_pattern(cfg)
     b = token.shape[0]
     x = embed(params["embed"], token, dtype=jnp.bfloat16)  # (B, d)

@@ -1,0 +1,445 @@
+"""repro.obs — span tracer, metrics registry, Perfetto export, stall
+attribution, and the no-perturbation contract (tracing on == tracing off,
+bit for bit)."""
+
+import json
+import sys
+import threading
+
+import numpy as np
+import pytest
+
+from repro import obs
+from repro.obs import export, report
+from repro.obs.metrics import JsonlSink, MetricsRegistry, read_jsonl
+from repro.obs.trace import Span, Tracer
+
+
+@pytest.fixture(autouse=True)
+def _obs_clean():
+    """Every test starts and ends with observability fully off."""
+    obs.shutdown()
+    obs.registry().reset()
+    yield
+    obs.shutdown()
+    obs.registry().reset()
+
+
+def _span(name, t0, t1, tid=1, thread="MainThread", attrs=None):
+    return Span(name, t0, t1, tid, thread, attrs)
+
+
+# ---------------------------------------------------------------------------
+# tracer core
+# ---------------------------------------------------------------------------
+
+
+def test_disabled_span_is_shared_singleton_no_alloc():
+    assert not obs.enabled()
+    s1 = obs.span("a")
+    s2 = obs.span("b")
+    assert s1 is s2  # one process-wide no-op object, no per-call span
+    with obs.span("c"):
+        pass
+    # the no-op path allocates nothing: attr-less calls return the singleton
+    base = sys.getallocatedblocks()
+    for _ in range(10_000):
+        with obs.span("hot.path"):
+            pass
+    assert sys.getallocatedblocks() - base < 50
+
+
+def test_enabled_spans_record_and_nest():
+    t = obs.trace.enable()
+    with obs.span("outer", step=1):
+        with obs.span("inner"):
+            pass
+    spans = t.drain()
+    assert [s.name for s in spans] == ["outer", "inner"]
+    outer, inner = spans
+    assert inner.t0_ns >= outer.t0_ns and inner.t1_ns <= outer.t1_ns
+    assert outer.attrs == {"step": 1}
+    assert report.nesting_violations(spans) == []
+    # drain is destructive: nothing left
+    assert t.drain() == []
+
+
+def test_spans_from_multiple_threads_keep_their_track():
+    t = obs.trace.enable()
+
+    def worker():
+        with obs.span("w.work"):
+            pass
+
+    th = threading.Thread(target=worker, name="skrull-prefetch")
+    th.start()
+    th.join()
+    with obs.span("m.work"):
+        pass
+    spans = t.drain()
+    by_thread = {s.name: s.thread for s in spans}
+    assert by_thread["w.work"] == "skrull-prefetch"
+    assert by_thread["m.work"] == "MainThread"
+    assert export.track_name("skrull-prefetch") == "loader"
+    assert export.track_name("MainThread") == "compute"
+
+
+def test_drain_concurrent_with_producer_loses_nothing():
+    t = obs.trace.enable()
+    N = 2000
+    done = threading.Event()
+
+    def producer():
+        for i in range(N):
+            with obs.span("p"):
+                pass
+        done.set()
+
+    th = threading.Thread(target=producer, name="skrull-prefetch")
+    th.start()
+    collected = []
+    while not done.is_set():
+        collected.extend(t.drain())
+    th.join()
+    collected.extend(t.drain())
+    assert len([s for s in collected if s.name == "p"]) == N
+
+
+def test_instant_has_zero_duration():
+    t = obs.trace.enable()
+    obs.instant("mark", k=1)
+    (s,) = t.drain()
+    assert s.dur_ns == 0 and s.attrs == {"k": 1}
+
+
+# ---------------------------------------------------------------------------
+# metrics registry + sink
+# ---------------------------------------------------------------------------
+
+
+def test_registry_instruments():
+    r = MetricsRegistry()
+    r.counter("c").inc()
+    r.counter("c").inc(2)
+    r.gauge("g").set(1.5)
+    r.histogram("h").observe(1.0)
+    r.histogram("h").observe(3.0)
+    snap = r.snapshot()
+    assert snap["c"] == 3
+    assert snap["g"] == 1.5
+    assert snap["h.count"] == 2 and snap["h.mean"] == 2.0
+    assert snap["h.min"] == 1.0 and snap["h.max"] == 3.0
+
+
+def test_empty_histogram_snapshot_is_safe():
+    r = MetricsRegistry()
+    r.histogram("h")
+    assert r.snapshot()["h.count"] == 0
+    assert r.histogram("h").mean == 0.0
+
+
+def test_jsonl_sink_roundtrip(tmp_path):
+    p = str(tmp_path / "m.jsonl")
+    sink = JsonlSink(p)
+    sink.write({"kind": "step", "step": 1, "arr": np.arange(3),
+                "f32": np.float32(0.5)})
+    sink.write({"kind": "pipeline", "eff": 0.9})
+    sink.close()
+    rows = read_jsonl(p)
+    assert rows[0] == {"kind": "step", "step": 1, "arr": [0, 1, 2], "f32": 0.5}
+    assert rows[1]["kind"] == "pipeline"
+
+
+def test_emit_without_sink_is_noop():
+    obs.emit({"kind": "step"})  # must not raise
+
+
+# ---------------------------------------------------------------------------
+# chrome trace export round trip
+# ---------------------------------------------------------------------------
+
+
+def test_chrome_trace_roundtrip(tmp_path):
+    t = obs.trace.enable()
+    with obs.span("train_step", step=1):
+        with obs.span("train_step.accumulate"):
+            pass
+    def producer():
+        with obs.span("prefetch.produce", iter=0):
+            pass
+
+    th = threading.Thread(target=producer, name="skrull-prefetch")
+    th.start()
+    th.join()
+    spans = t.drain()
+    path = str(tmp_path / "trace.json")
+    n = export.export_chrome_trace(spans, path, origin_ns=t.origin_ns)
+    assert n == 3
+    doc = json.load(open(path))
+    assert "traceEvents" in doc
+    meta = [e for e in doc["traceEvents"] if e["ph"] == "M"]
+    names = {e["args"]["name"] for e in meta if e["name"] == "thread_name"}
+    assert {"compute", "loader"} <= names
+    loaded = export.load_chrome_trace(path)
+    assert sorted(s.name for s in loaded) == sorted(s.name for s in spans)
+    # tracks survive the round trip under their Perfetto names
+    assert {s.thread for s in loaded} == {"compute", "loader"}
+    # timestamps rebased to origin, nesting preserved to µs rounding
+    assert min(s.t0_ns for s in loaded) >= 0
+    assert report.nesting_violations(loaded) == []
+
+
+# ---------------------------------------------------------------------------
+# stall attribution + validation
+# ---------------------------------------------------------------------------
+
+MS = 1_000_000  # ns
+
+
+def test_attribute_steps_labels():
+    spans = [
+        # step 1: 100ms, 60ms blocked on the queue -> data-starved
+        _span("train_step", 0, 100 * MS, attrs={"step": 1}),
+        _span("prefetch.wait", 5 * MS, 65 * MS),
+        # step 2: 100ms, 40ms waiting on staging -> transfer-bound
+        _span("train_step", 200 * MS, 300 * MS, attrs={"step": 2}),
+        _span("transfer.wait", 210 * MS, 250 * MS),
+        # step 3: 100ms, negligible stalls -> compute-bound
+        _span("train_step", 400 * MS, 500 * MS, attrs={"step": 3}),
+        _span("prefetch.wait", 400 * MS, 401 * MS),
+    ]
+    out = report.attribute_steps(spans)
+    assert [a.label for a in out] == [
+        "data-starved", "transfer-bound", "compute-bound"
+    ]
+    a = out[0]
+    assert a.step == 1
+    assert a.data_wait_s == pytest.approx(0.060)
+    assert a.compute_s == pytest.approx(0.040)
+
+
+def test_inline_stage_counts_as_transfer_visible():
+    spans = [
+        _span("train_step", 0, 100 * MS, attrs={"step": 1}),
+        _span("transfer.stage", 10 * MS, 60 * MS),  # serial-mode inline stage
+    ]
+    (a,) = report.attribute_steps(spans)
+    assert a.label == "transfer-bound"
+    # a worker-thread stage does NOT count against the step
+    spans[1] = _span("transfer.stage", 10 * MS, 60 * MS, tid=9, thread="skrull-h2d")
+    (a,) = report.attribute_steps(spans)
+    assert a.label == "compute-bound"
+
+
+def test_span_overlap_efficiency():
+    # produce 2 batches of 10ms each; consumer waited 2ms total -> 0.8
+    spans = [
+        _span("prefetch.produce", 0, 10 * MS, tid=2, thread="skrull-prefetch"),
+        _span("prefetch.produce", 10 * MS, 20 * MS, tid=2, thread="skrull-prefetch"),
+        _span("prefetch.wait", 0, 1 * MS),
+        _span("prefetch.wait", 30 * MS, 31 * MS),
+    ]
+    assert report.span_overlap_efficiency(spans) == pytest.approx(0.9)
+    assert report.span_overlap_efficiency([]) is None
+    # serial mode: wait wraps produce, identical durations -> 0.0
+    serial = [
+        _span("prefetch.wait", 0, 10 * MS),
+        _span("prefetch.produce", 0, 10 * MS),
+    ]
+    assert report.span_overlap_efficiency(serial) == pytest.approx(0.0)
+
+
+def test_nesting_violations_flag_partial_overlap():
+    ok = [_span("a", 0, 100), _span("b", 10, 50), _span("c", 50, 90)]
+    assert report.nesting_violations(ok) == []
+    bad = [_span("a", 0, 100), _span("b", 50, 150)]
+    assert any("partial overlap" in e for e in report.nesting_violations(bad))
+    neg = [_span("a", 100, 50)]
+    assert any("negative" in e for e in report.nesting_violations(neg))
+
+
+def test_check_step_coverage_and_overlap_agreement():
+    spans = [
+        _span("train_step", 0, 100 * MS, attrs={"step": 1}),
+        _span("prefetch.wait", 0, 1 * MS),
+        _span("prefetch.produce", 0, 50 * MS, tid=2, thread="skrull-prefetch"),
+    ]
+    rows = [
+        {"kind": "step", "step": 1},
+        {"kind": "pipeline", "prefetch_overlap_efficiency": 0.98,
+         "prefetch_produce_s": 0.05, "prefetch_wait_s": 0.001},
+    ]
+    assert report.check(spans, rows) == []
+    # a second train_step span for the same step is a coverage failure
+    dup = spans + [_span("train_step", 200 * MS, 300 * MS, attrs={"step": 1})]
+    assert any("expected exactly 1" in e for e in report.check(dup, rows))
+    # missing span for a metrics step
+    rows2 = rows + [{"kind": "step", "step": 2}]
+    assert any("step 2" in e for e in report.check(spans, rows2))
+    # disagreeing efficiency accounting
+    rows_bad = [rows[0], dict(rows[1], prefetch_overlap_efficiency=0.5)]
+    assert any("disagrees" in e for e in report.check(spans, rows_bad))
+
+
+def test_format_report_mentions_verdicts():
+    spans = [
+        _span("train_step", 0, 100 * MS, attrs={"step": 1}),
+        _span("prefetch.wait", 5 * MS, 65 * MS),
+    ]
+    rows = [{"kind": "step", "step": 1, "rank_time_s": [0.1, 0.3]}]
+    txt = report.format_report(spans, rows)
+    assert "data-starved" in txt
+    assert "imbalance" in txt
+
+
+# ---------------------------------------------------------------------------
+# spans under a REAL producer thread (the Prefetcher)
+# ---------------------------------------------------------------------------
+
+
+def _loader(seed=3, batch=6):
+    from repro.data import SkrullDataLoader, SyntheticSFTDataset, wikipedia_like
+
+    ds = SyntheticSFTDataset(
+        wikipedia_like(), vocab_size=128, seed=7, size=64, max_len=200
+    )
+    return SkrullDataLoader(
+        ds, global_batch=batch, ws=2, n_cp=2, c_budget=512, seed=seed
+    )
+
+
+def test_prefetcher_spans_nest_and_order():
+    from repro.pipeline import Prefetcher
+
+    t = obs.trace.enable()
+    pf = Prefetcher(_loader(), depth=2)
+    for _ in range(4):
+        pf.get()
+    pf.close()
+    spans = t.drain()
+    produces = [s for s in spans if s.name == "prefetch.produce"]
+    waits = [s for s in spans if s.name == "prefetch.wait"]
+    assert len(waits) == 4
+    assert len(produces) >= 4  # producer may have run ahead
+    assert all(s.thread == "skrull-prefetch" for s in produces)
+    assert all(s.thread == "MainThread" for s in waits)
+    # producer iterations are sequential: ordered by iter attr AND disjoint
+    produces.sort(key=lambda s: s.t0_ns)
+    assert [s.attrs["iter"] for s in produces] == list(range(len(produces)))
+    for a, b in zip(produces, produces[1:]):
+        assert a.t1_ns <= b.t0_ns
+    assert report.nesting_violations(spans) == []
+    eff = report.span_overlap_efficiency(spans)
+    assert eff is not None and 0.0 <= eff <= 1.0
+
+
+def test_prefetcher_serial_spans_give_zero_overlap():
+    from repro.pipeline import Prefetcher
+
+    t = obs.trace.enable()
+    pf = Prefetcher(_loader(), depth=0)
+    for _ in range(3):
+        pf.get()
+    spans = t.drain()
+    assert len([s for s in spans if s.name == "prefetch.wait"]) == 3
+    assert report.nesting_violations(spans) == []
+    assert report.span_overlap_efficiency(spans) == pytest.approx(0.0, abs=0.05)
+    assert pf.stats.overlap_efficiency == 0.0
+
+
+# ---------------------------------------------------------------------------
+# trainer end-to-end: no perturbation + trace_report --check
+# ---------------------------------------------------------------------------
+
+
+def _trainer(cfg, steps=2, depth=2, ckpt=None):
+    from repro.core.perf_model import H100
+    from repro.data import SkrullDataLoader, SyntheticSFTDataset, wikipedia_like
+    from repro.models.transformer import CallConfig
+    from repro.train.loop import Trainer, TrainerConfig
+
+    ds = SyntheticSFTDataset(
+        wikipedia_like(), vocab_size=cfg.vocab, seed=5, size=256, max_len=300
+    )
+    loader = SkrullDataLoader(
+        ds, global_batch=8, ws=2, n_cp=2, c_budget=1024,
+        profile=cfg.to_profile(), hw=H100, seed=1,
+    )
+    tc = TrainerConfig(
+        total_steps=steps, log_every=100, lr=1e-3, prefetch_depth=depth,
+        ckpt_dir=ckpt, ckpt_every=max(steps, 1),
+    )
+    call = CallConfig(attention_impl="dense", remat="none", logits_chunk=512)
+    return Trainer(cfg, call, loader, tc)
+
+
+def test_tracing_does_not_perturb_losses(tiny_dense, tmp_path):
+    """The acceptance contract: enabling --trace-out/--metrics-jsonl must
+    leave the training stream bit-identical."""
+    t_off = _trainer(tiny_dense, steps=2, depth=2)
+    hist_off = t_off.run()
+    t_off.close()
+
+    obs.configure(
+        trace_path=str(tmp_path / "trace.json"),
+        metrics_path=str(tmp_path / "metrics.jsonl"),
+    )
+    t_on = _trainer(tiny_dense, steps=2, depth=2)
+    hist_on = t_on.run()
+    t_on.close()
+    obs.shutdown()
+
+    assert [m["loss"] for m in hist_on] == [m["loss"] for m in hist_off]
+    assert [m["valid_tokens"] for m in hist_on] == [
+        m["valid_tokens"] for m in hist_off
+    ]
+
+
+def test_trainer_trace_passes_trace_report_check(tiny_dense, tmp_path):
+    """Full path: train with obs on -> export -> trace_report --check OK."""
+    from repro.launch.trace_report import main as trace_report_main
+
+    trace_p = str(tmp_path / "trace.json")
+    metrics_p = str(tmp_path / "metrics.jsonl")
+    obs.configure(trace_path=trace_p, metrics_path=metrics_p)
+    t = _trainer(tiny_dense, steps=3, depth=2, ckpt=str(tmp_path / "ck"))
+    t.run()
+    t.close()
+    obs.shutdown()
+
+    rows = read_jsonl(metrics_p)
+    step_rows = [r for r in rows if r.get("kind") == "step"]
+    assert [r["step"] for r in step_rows] == [1, 2, 3]
+    # the unified row carries all four formerly-fragmented carriers
+    assert "imbalance" in step_rows[0]          # ScheduleReport
+    assert "rank_time_s" in step_rows[0]        # HealthMonitor beats
+    assert "buckets" in step_rows[0]            # cost-model calibration keys
+    assert any(r.get("kind") == "pipeline" for r in rows)  # PrefetchStats
+
+    spans = export.load_chrome_trace(trace_p)
+    names = {s.name for s in spans}
+    assert {"train_step", "train_step.schedule", "train_step.accumulate",
+            "train_step.finalize", "prefetch.produce", "prefetch.wait",
+            "transfer.stage", "checkpoint.save"} <= names
+    assert report.check(spans, rows, tol=0.05) == []
+
+    rc = trace_report_main([trace_p, "--metrics", metrics_p, "--check"])
+    assert rc == 0
+
+
+def test_serve_spans(tiny_dense):
+    import jax.numpy as jnp
+
+    from repro.models.transformer import CallConfig, init_model
+    from repro.train.serve import decode_step, prefill
+    import jax
+
+    t = obs.trace.enable()
+    params = init_model(jax.random.PRNGKey(0), tiny_dense)
+    call = CallConfig(attention_impl="dense", remat="none")
+    toks = jnp.ones((2, 16), jnp.int32)
+    logits, caches, lens = prefill(params, tiny_dense, call, toks, max_len=32)
+    decode_step(params, tiny_dense, call, jnp.ones((2,), jnp.int32), lens, caches)
+    spans = t.drain()
+    names = [s.name for s in spans]
+    assert "serve.prefill" in names and "serve.decode" in names

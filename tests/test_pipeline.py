@@ -306,3 +306,99 @@ def test_prefetch_stats_dict_roundtrip():
     d = s.as_dict()
     assert d["hidden_s"] == pytest.approx(1.5)
     assert d["overlap_efficiency"] == pytest.approx(0.75)
+
+
+# ---------------------------------------------------------------------------
+# metrics hardening: zero/empty-run guards (repro.obs PR)
+# ---------------------------------------------------------------------------
+
+
+def test_prefetch_stats_empty_run_is_safe():
+    """0 produced iterations: every derived quantity is 0.0, never a
+    division error."""
+    s = PrefetchStats()
+    assert s.overlap_efficiency == 0.0
+    assert s.hidden_s == 0.0
+    assert s.mean_produce_s == 0.0
+    assert s.mean_wait_s == 0.0
+    d = s.as_dict()
+    assert d["overlap_efficiency"] == 0.0 and d["mean_wait_s"] == 0.0
+
+
+def test_prefetch_stats_wait_exceeding_produce_clamps():
+    # serial path + measurement jitter can make wait > produce; hidden
+    # clamps at 0 and efficiency never goes negative
+    s = PrefetchStats(produced=1, consumed=1, wait_s=2.0, produce_s=1.0)
+    assert s.hidden_s == 0.0
+    assert s.overlap_efficiency == 0.0
+    assert s.mean_wait_s == pytest.approx(2.0)
+
+
+def test_transfer_stats_empty_and_serial_guards():
+    from repro.pipeline import TransferStats
+
+    s = TransferStats()
+    assert s.overlap_frac == 0.0  # depth=0 / empty: no division error
+    assert s.n_shapes == 0
+    s.staged = 4
+    assert s.overlap_frac == 0.0  # serial mode: staged but never overlapped
+    s.overlapped = 3
+    assert s.overlap_frac == pytest.approx(0.75)
+    assert s.as_dict()["overlap_frac"] == pytest.approx(0.75)
+
+
+def test_depth0_serial_efficiency_is_exactly_zero():
+    pf = Prefetcher(_loader(), depth=0)
+    _consume(pf, 3)
+    assert pf.stats.overlap_efficiency == 0.0
+    assert pf.stats.mean_produce_s > 0.0
+    assert pf.stats.mean_wait_s == pytest.approx(pf.stats.mean_produce_s)
+
+
+# ---------------------------------------------------------------------------
+# stall watchdog
+# ---------------------------------------------------------------------------
+
+
+def test_stall_watchdog_counts_and_rate_limits(caplog):
+    """An artificially slow loader trips the watchdog: obs counter bumped
+    per stalled get, but the log line is rate-limited to one."""
+    import logging
+    import time as _time
+
+    from repro import obs
+
+    obs.registry().reset()
+    loader = _loader()
+    orig = loader.next_iteration
+
+    def slow_next_iteration():
+        _time.sleep(0.25)
+        return orig()
+
+    loader.next_iteration = slow_next_iteration
+    pf = Prefetcher(loader, depth=1, stall_warn_s=0.05, stall_log_every_s=60.0)
+    with caplog.at_level(logging.WARNING, logger="repro.pipeline"):
+        pf.get()
+        pf.get()
+    pf.close()
+    assert obs.registry().counter("prefetch.stall").value >= 2
+    stall_logs = [r for r in caplog.records if "prefetch queue dry" in r.message]
+    assert len(stall_logs) == 1  # rate-limited: one line despite two stalls
+    assert "prefetch.produce" in stall_logs[0].message  # names the slow stage
+    obs.registry().reset()
+
+
+def test_fast_loader_never_trips_watchdog(caplog):
+    import logging
+
+    from repro import obs
+
+    obs.registry().reset()
+    pf = Prefetcher(_loader(), depth=2, stall_warn_s=5.0)
+    with caplog.at_level(logging.WARNING, logger="repro.pipeline"):
+        _consume(pf, 4)
+    pf.close()
+    assert obs.registry().counter("prefetch.stall").value == 0
+    assert not [r for r in caplog.records if "prefetch queue dry" in r.message]
+    obs.registry().reset()
