@@ -12,6 +12,7 @@ Prints ``name,us_per_call,derived`` CSV rows (stub contract). Sections:
   sched   — online scheduling overhead
   kernels — kernel microbench + Pallas correctness/structure
   flash   — segment-block-sparse tile skipping (writes BENCH_flash.json)
+  serve   — continuous-batching TTFT/throughput (writes BENCH_serve.json)
   roofline— summary over the dry-run artifact (if present)
 """
 
@@ -34,6 +35,7 @@ def main() -> None:
         bench_pipeline,
         bench_policies,
         bench_scheduler,
+        bench_serve,
         bench_v5e_projection,
     )
 
@@ -49,6 +51,7 @@ def main() -> None:
     bench_scheduler.run()
     bench_kernels.run()
     bench_flash.run()  # writes BENCH_flash.json
+    bench_serve.run()  # writes BENCH_serve.json
     bench_v5e_projection.run(iters=6)
     if os.path.exists("artifacts/dryrun.jsonl"):
         from . import roofline

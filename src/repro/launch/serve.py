@@ -1,0 +1,117 @@
+"""Serving launcher: one bursty synthetic-traffic episode through the
+continuous-batching engine.
+
+    PYTHONPATH=src python -m repro.launch.serve --config qwen2.5-0.5b \
+        --reduced --policy serve-skrull --mix outlier \
+        --trace-out /tmp/serve.trace.json
+
+Mirrors launch/train.py conventions: numpy-only pre-parse imports (policy
+choices come from the sched registry), ``--reduced`` for CPU smoke sizes,
+``--trace-out`` / ``--metrics-jsonl`` via repro.obs. By default the episode
+ends with a bit-exactness audit: every completion is replayed alone through
+the static ``prefill`` + ``decode_step`` path and compared token-for-token
+(``--no-verify`` skips it for timing runs).
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+
+
+def main(argv=None):
+    from ..sched import list_policies
+    from ..serve.traffic import MIXES
+
+    serve_policies = sorted(p for p in list_policies() if p.startswith("serve-"))
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--config", default="qwen2.5-0.5b",
+                    help="registered arch name (configs.registry)")
+    ap.add_argument("--policy", default="serve-skrull", choices=serve_policies,
+                    help="registered serving policy (repro.serve.scheduler)")
+    ap.add_argument("--max-slots", type=int, default=4,
+                    help="sequence-buffer capacity (concurrent requests)")
+    ap.add_argument("--prefill-chunk", type=int, default=32,
+                    help="fixed prefill chunk length C — the only prefill "
+                         "shape ever jitted")
+    ap.add_argument("--token-budget", type=int, default=0,
+                    help="per-step token budget (0 = prefill-chunk + max-slots)")
+    ap.add_argument("--mix", default="outlier", choices=MIXES)
+    ap.add_argument("--n-requests", type=int, default=12)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="write a Chrome trace_event JSON of serve.* spans")
+    ap.add_argument("--metrics-jsonl", default=None, metavar="PATH",
+                    help="write one serve_step row per engine step + a final "
+                         "serve summary row via repro.obs")
+    ap.add_argument("--reduced", action="store_true",
+                    help="use the smoke-size config (CPU)")
+    ap.add_argument("--no-verify", action="store_true",
+                    help="skip the static-path bit-exactness audit")
+    args = ap.parse_args(argv)
+
+    import jax  # noqa: F401  (fail fast before building anything)
+    import numpy as np
+
+    from .. import obs
+    from ..configs.registry import get_arch
+    from ..models.transformer import CallConfig, init_model
+    from ..serve.engine import ServeEngine, check_equivalence
+    from ..serve.traffic import make_traffic
+
+    cfg = get_arch(args.config)
+    if args.reduced:
+        cfg = cfg.reduced()
+
+    reqs = make_traffic(
+        args.mix, args.n_requests, vocab=cfg.vocab, seed=args.seed,
+        short_len=max(args.prefill_chunk // 4, 4),
+        long_len=args.prefill_chunk * 3,
+        outlier_len=args.prefill_chunk * 8,
+    )
+    max_len = max(r.prompt_len + r.max_new_tokens for r in reqs)
+    print(f"config={cfg.name} policy={args.policy} mix={args.mix} "
+          f"requests={len(reqs)} slots={args.max_slots} "
+          f"chunk={args.prefill_chunk} max_len={max_len}")
+
+    params = init_model(jax.random.PRNGKey(args.seed), cfg)
+    call = CallConfig(attention_impl="dense", remat="none", kv_chunk=64)
+
+    if args.trace_out or args.metrics_jsonl:
+        obs.configure(trace_path=args.trace_out, metrics_path=args.metrics_jsonl)
+    try:
+        engine = ServeEngine(
+            params, cfg, call,
+            policy=args.policy,
+            max_slots=args.max_slots,
+            max_len=max_len,
+            prefill_chunk_size=args.prefill_chunk,
+            token_budget=args.token_budget or None,
+        )
+        completions = engine.run(reqs)
+    finally:
+        trace_path = obs.shutdown()
+
+    ttft = np.asarray([c.ttft_steps for c in completions], np.float64)
+    gen = sum(c.n_generated for c in completions)
+    print(f"completed {len(completions)}/{len(reqs)} in {engine.step_i} steps: "
+          f"{gen} tokens, ttft p50={np.percentile(ttft, 50):.0f} "
+          f"p99={np.percentile(ttft, 99):.0f} steps, "
+          f"evictions={sum(c.evictions for c in completions)}")
+    if trace_path:
+        print(f"trace written to {trace_path} — open in https://ui.perfetto.dev"
+              " or analyse with: python -m repro.launch.trace_report "
+              f"{trace_path}")
+
+    if not args.no_verify:
+        bad = check_equivalence(params, cfg, call, reqs, completions, max_len)
+        if bad:
+            print(f"EQUIVALENCE FAILED for rids {bad}: engine output differs "
+                  "from the static prefill+decode path")
+            return 1
+        print(f"equivalence: all {len(reqs)} requests bit-exact vs static path")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

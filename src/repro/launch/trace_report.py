@@ -8,11 +8,18 @@ file Perfetto opens) and the per-step metrics JSONL, and prints where each
 step's time went: data-starved (blocked on the schedule-ahead queue),
 transfer-bound (blocked on H2D staging), or compute-bound.
 
+Serve traces (``launch/serve.py --trace-out``) are recognized by their
+``serve.step`` spans and get the serving decomposition instead: each engine
+step is prefill-bound, decode-bound, or admission-idle by where its child
+``serve.prefill_chunk`` / ``serve.decode`` / ``serve.admit`` time went.
+
 ``--check`` is the CI mode: exit non-zero unless span nesting is well-formed,
-every metrics step is covered by exactly one ``train_step`` span, and the
-span-derived overlap efficiency agrees with ``PrefetchStats`` within
-``--tol`` — the trace and the counters are independent accountings of the
-same run, so disagreement means one of them is lying.
+every metrics step is covered by exactly one ``train_step`` span (serve
+episodes: one ``serve.step`` span per ``serve_step`` row, plus the final
+serve summary row), and the span-derived overlap efficiency agrees with
+``PrefetchStats`` within ``--tol`` — the trace and the counters are
+independent accountings of the same run, so disagreement means one of them
+is lying.
 """
 
 from __future__ import annotations

@@ -45,6 +45,10 @@ CKPT_RESTORE = "checkpoint.restore"
 FT_RESCALE = "ft.rescale"
 SERVE_PREFILL = "serve.prefill"
 SERVE_DECODE = "serve.decode"
+SERVE_STEP = "serve.step"
+SERVE_ADMIT = "serve.admit"
+SERVE_PREFILL_CHUNK = "serve.prefill_chunk"
+SERVE_EVICT = "serve.evict"
 
 
 @dataclasses.dataclass
@@ -105,6 +109,73 @@ def attribute_steps(
                 data_wait_s=data_wait,
                 transfer_wait_s=transfer,
                 compute_s=compute,
+                label=label,
+            )
+        )
+    return out
+
+
+@dataclasses.dataclass
+class ServeStepAttribution:
+    step: Optional[int]
+    t0_ns: int
+    dur_s: float
+    prefill_s: float
+    decode_s: float
+    admit_s: float
+    evict_s: float
+    other_s: float
+    label: str  # prefill-bound | decode-bound | admission-idle
+
+    def as_dict(self) -> Dict:
+        return dataclasses.asdict(self)
+
+
+def attribute_serve_steps(
+    spans: Sequence[Span], work_frac: float = 0.2
+) -> List[ServeStepAttribution]:
+    """Per-``serve.step`` wall-time decomposition + bottleneck label.
+
+    A step whose model work (prefill chunks + decode dispatch) is under
+    ``work_frac`` of its duration is *admission-idle* — the engine spent the
+    step on queue bookkeeping (or genuinely had nothing staged/decoding);
+    otherwise it is prefill- or decode-bound by whichever dominates.
+    """
+    steps = sorted(
+        (s for s in spans if s.name == SERVE_STEP), key=lambda s: s.t0_ns
+    )
+    out: List[ServeStepAttribution] = []
+    for st in steps:
+        children = [s for s in spans if _contained(s, st)]
+        prefill = sum(
+            s.dur_s
+            for s in children
+            if s.name in (SERVE_PREFILL_CHUNK, SERVE_PREFILL)
+        )
+        decode = sum(s.dur_s for s in children if s.name == SERVE_DECODE)
+        admit = sum(s.dur_s for s in children if s.name == SERVE_ADMIT)
+        evict = sum(s.dur_s for s in children if s.name == SERVE_EVICT)
+        dur = st.dur_s
+        other = max(dur - prefill - decode - admit - evict, 0.0)
+        if dur <= 0 or (prefill + decode) / max(dur, 1e-12) < work_frac:
+            label = "admission-idle"
+        elif prefill >= decode:
+            label = "prefill-bound"
+        else:
+            label = "decode-bound"
+        step_no = None
+        if st.attrs and "step" in st.attrs:
+            step_no = int(st.attrs["step"])
+        out.append(
+            ServeStepAttribution(
+                step=step_no,
+                t0_ns=st.t0_ns,
+                dur_s=dur,
+                prefill_s=prefill,
+                decode_s=decode,
+                admit_s=admit,
+                evict_s=evict,
+                other_s=other,
                 label=label,
             )
         )
@@ -188,6 +259,47 @@ def _pipeline_row(rows: Sequence[dict]) -> Optional[dict]:
     return last
 
 
+def _serve_step_rows(rows: Sequence[dict]) -> List[dict]:
+    return [r for r in rows if r.get("kind") == "serve_step"]
+
+
+def _serve_row(rows: Sequence[dict]) -> Optional[dict]:
+    last = None
+    for r in rows:
+        if r.get("kind") == "serve":
+            last = r
+    return last
+
+
+def _step_span_coverage(
+    spans: Sequence[Span], span_name: str, steps_in_metrics: List[int]
+) -> List[str]:
+    """Each metrics step must be covered by exactly one ``span_name`` span."""
+    errors: List[str] = []
+    span_steps: Dict[int, int] = {}
+    unlabeled = 0
+    for s in spans:
+        if s.name != span_name:
+            continue
+        if s.attrs and "step" in s.attrs:
+            k = int(s.attrs["step"])
+            span_steps[k] = span_steps.get(k, 0) + 1
+        else:
+            unlabeled += 1
+    if unlabeled:
+        errors.append(f"{unlabeled} {span_name} span(s) missing the step attr")
+    for step in steps_in_metrics:
+        n = span_steps.get(step, 0)
+        if n != 1:
+            errors.append(
+                f"step {step}: expected exactly 1 {span_name} span, found {n}"
+            )
+    extra = sorted(set(span_steps) - set(steps_in_metrics))
+    if steps_in_metrics and extra:
+        errors.append(f"{span_name} spans with no metrics row: {extra}")
+    return errors
+
+
 def check(
     spans: Sequence[Span],
     rows: Sequence[dict],
@@ -196,38 +308,27 @@ def check(
     """CI validation: returns a list of failures (empty = pass).
 
     1. every span nests properly on its thread;
-    2. every metrics step is covered by exactly one ``train_step`` span;
+    2. every metrics step is covered by exactly one ``train_step`` span
+       (and every ``serve_step`` row by exactly one ``serve.step`` span);
     3. span-derived overlap efficiency agrees with the ``PrefetchStats``
-       accounting in the metrics' pipeline-summary row within ``tol``.
+       accounting in the metrics' pipeline-summary row within ``tol``
+       (training runs only — a serve episode instead requires its
+       ``kind="serve"`` summary row).
     """
     errors = list(nesting_violations(spans))
 
     steps_in_metrics = [int(r["step"]) for r in _step_rows(rows) if "step" in r]
-    span_steps: Dict[int, int] = {}
-    unlabeled = 0
-    for s in spans:
-        if s.name != TRAIN_STEP:
-            continue
-        if s.attrs and "step" in s.attrs:
-            k = int(s.attrs["step"])
-            span_steps[k] = span_steps.get(k, 0) + 1
-        else:
-            unlabeled += 1
-    if unlabeled:
-        errors.append(f"{unlabeled} train_step span(s) missing the step attr")
-    for step in steps_in_metrics:
-        n = span_steps.get(step, 0)
-        if n != 1:
-            errors.append(
-                f"step {step}: expected exactly 1 train_step span, found {n}"
-            )
-    extra = sorted(set(span_steps) - set(steps_in_metrics))
-    if steps_in_metrics and extra:
-        errors.append(f"train_step spans with no metrics row: {extra}")
+    errors += _step_span_coverage(spans, TRAIN_STEP, steps_in_metrics)
+    serve_steps_in_metrics = [
+        int(r["step"]) for r in _serve_step_rows(rows) if "step" in r
+    ]
+    errors += _step_span_coverage(spans, SERVE_STEP, serve_steps_in_metrics)
+    if serve_steps_in_metrics and _serve_row(rows) is None:
+        errors.append("metrics JSONL has serve_step rows but no serve summary row")
 
     pipe = _pipeline_row(rows)
     if pipe is None:
-        if rows:
+        if steps_in_metrics:
             errors.append("metrics JSONL has no pipeline-summary row")
         return errors
     stats_eff = float(pipe.get("prefetch_overlap_efficiency", 0.0))
@@ -300,12 +401,47 @@ def format_report(
             f"{sum(s.dur_s for s in ckpt if s.name == CKPT_SAVE) * 1e3:.1f}ms "
             "on the training thread"
         )
+    serve = attribute_serve_steps(spans)
+    if serve:
+        lines.append(f"serve steps traced: {len(serve)}")
+        lines.append(
+            f"{'step':>5} {'total_ms':>9} {'prefill_ms':>10} {'decode_ms':>9} "
+            f"{'other_ms':>8}  label"
+        )
+        for a in serve:
+            lines.append(
+                f"{a.step if a.step is not None else '?':>5} "
+                f"{a.dur_s * 1e3:9.1f} {a.prefill_s * 1e3:10.1f} "
+                f"{a.decode_s * 1e3:9.1f} "
+                f"{(a.admit_s + a.evict_s + a.other_s) * 1e3:8.1f}  {a.label}"
+            )
+        counts = {}
+        for a in serve:
+            counts[a.label] = counts.get(a.label, 0) + 1
+        lines.append(
+            "serve verdict: "
+            + ", ".join(f"{n} {label}" for label, n in sorted(counts.items()))
+        )
+    sv = _serve_row(rows)
+    if sv is not None:
+        lines.append(
+            f"serve summary ({sv.get('policy', '?')}): "
+            f"{int(sv.get('completions', 0))} completions in "
+            f"{int(sv.get('steps', 0))} steps, "
+            f"{float(sv.get('tokens_per_s', 0.0)):.1f} tok/s, "
+            f"ttft p50/p99 = {float(sv.get('ttft_steps_p50', 0.0)):.0f}/"
+            f"{float(sv.get('ttft_steps_p99', 0.0)):.0f} steps, "
+            f"occupancy {float(sv.get('mean_occupancy', 0.0)):.2f}, "
+            f"{int(sv.get('evictions', 0))} evictions"
+        )
     return "\n".join(lines)
 
 
 __all__ = [
     "StepAttribution",
+    "ServeStepAttribution",
     "attribute_steps",
+    "attribute_serve_steps",
     "span_overlap_efficiency",
     "nesting_violations",
     "rank_imbalance",
@@ -326,4 +462,8 @@ __all__ = [
     "FT_RESCALE",
     "SERVE_PREFILL",
     "SERVE_DECODE",
+    "SERVE_STEP",
+    "SERVE_ADMIT",
+    "SERVE_PREFILL_CHUNK",
+    "SERVE_EVICT",
 ]

@@ -23,6 +23,7 @@ from .api import (
 from .registry import get_policy, list_policies, register_policy
 from .topology import Topology
 from . import policies as _policies  # noqa: F401  (registers shipped policies)
+from ..serve import scheduler as _serve_policies  # noqa: F401  (serve-fcfs/skrull)
 from ..core.errors import ScheduleInvariantError
 
 __all__ = [

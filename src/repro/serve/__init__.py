@@ -1,0 +1,61 @@
+"""repro.serve — continuous-batching serving engine.
+
+Slot-based sequence buffer over the ring-buffer KV/SSM caches, chunked
+prefill interleaved with batched decode, and request scheduling as
+``SchedulerPolicy`` instances (``serve-fcfs``, ``serve-skrull``) in the one
+sched registry. See docs/DESIGN.md §13.
+
+Import layering: ``request`` / ``scheduler`` / ``traffic`` are numpy-only
+and imported eagerly (registering the serve policies); the jax-heavy
+``engine`` / ``sequence_buffer`` are loaded lazily so schedulers, benchmarks
+and CLIs can enumerate policies without paying jax import cost.
+"""
+
+from __future__ import annotations
+
+from .request import Completion, Request
+from .scheduler import (
+    RequestView,
+    ServeFCFSPolicy,
+    ServePolicy,
+    ServeSkrullPolicy,
+    ServeState,
+    StepPlan,
+    get_serve_policy,
+)
+from .traffic import MIXES, make_traffic
+
+_LAZY = {
+    "ServeEngine": ("engine", "ServeEngine"),
+    "ServeStepReport": ("engine", "ServeStepReport"),
+    "SequenceBuffer": ("sequence_buffer", "SequenceBuffer"),
+}
+
+
+def __getattr__(name):
+    try:
+        mod_name, attr = _LAZY[name]
+    except KeyError:
+        raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+    import importlib
+
+    mod = importlib.import_module(f".{mod_name}", __name__)
+    return getattr(mod, attr)
+
+
+__all__ = [
+    "Completion",
+    "Request",
+    "RequestView",
+    "ServeEngine",
+    "ServeStepReport",
+    "ServeFCFSPolicy",
+    "ServePolicy",
+    "ServeSkrullPolicy",
+    "ServeState",
+    "SequenceBuffer",
+    "StepPlan",
+    "MIXES",
+    "make_traffic",
+    "get_serve_policy",
+]

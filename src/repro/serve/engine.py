@@ -1,0 +1,515 @@
+"""Continuous-batching engine: admit → chunked prefill → decode, every step.
+
+One ``ServeEngine.step()`` is the serving analogue of a training iteration:
+
+1. arrivals whose ``arrival_step`` has come move into the waiting queue;
+2. the policy plans the step (``StepPlan``: evict / admit / prefill grants);
+3. evictions reclaim slots (preempted requests restart prefill from zero —
+   exact, because chunked prefill is deterministic);
+4. admissions reserve slots;
+5. prefill grants are sliced into **fixed-shape** ``(1, C)`` chunks and
+   staged with ``prefill_chunk`` — the only prefill shape ever jitted;
+   a grant that finishes a prompt emits the request's first token;
+6. the whole slot buffer runs one batched ``decode_step`` on the second
+   fixed shape ``(max_slots,)``, with free / mid-prefill slots masked out
+   via ``active`` so their caches pass through untouched.
+
+Two jitted shapes total, regardless of the prompt-length mix — the jit
+cache stays bounded no matter what traffic looks like.
+
+Every step emits a ``ServeStepReport`` (the ``ScheduleReport`` analogue), a
+``kind="serve_step"`` metrics row, and obs spans ``serve.step`` /
+``serve.admit`` / ``serve.prefill_chunk`` / ``serve.decode`` /
+``serve.evict`` on the PR-5 tracer, so ``launch/trace_report.py`` can
+attribute engine time to prefill-bound vs decode-bound vs idle steps.
+
+Greedy decoding only (argmax) — that is what makes per-request outputs
+bit-comparable to the static ``prefill`` + ``decode_step`` reference.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from .. import obs
+from ..configs.base import ArchConfig
+from ..sched.api import SchedulingContext
+from ..train.serve import decode_step, prefill_chunk
+from .request import Completion, Request
+from .scheduler import RequestView, ServeState, StepPlan, get_serve_policy
+from .sequence_buffer import SequenceBuffer
+
+
+@dataclasses.dataclass
+class ServeStepReport:
+    """Per-step scheduling telemetry (what ScheduleReport is to training)."""
+
+    step: int
+    policy: str
+    n_waiting: int
+    n_prefilling: int
+    n_decoding: int
+    admitted: List[int]
+    evicted: List[int]
+    finished: List[int]
+    prefill_tokens: int
+    decode_tokens: int
+    token_budget: int
+    # plan-time remainder (budget - slots decoding when the plan was made);
+    # decode_tokens may exceed the difference because a slot whose prefill
+    # completes this step joins the same step's decode batch
+    prefill_budget: int
+    occupancy: float
+
+    @property
+    def budget_utilization(self) -> float:
+        return (self.prefill_tokens + self.decode_tokens) / max(
+            self.token_budget, 1
+        )
+
+    @property
+    def phase(self) -> str:
+        """Dominant work this step: prefill / decode / idle."""
+        if self.prefill_tokens == 0 and self.decode_tokens == 0:
+            return "idle"
+        if self.prefill_tokens >= self.decode_tokens:
+            return "prefill"
+        return "decode"
+
+
+@dataclasses.dataclass
+class _Track:
+    """Engine-private lifecycle record for one request."""
+
+    req: Request
+    arrival_step: int = -1
+    arrival_s: float = 0.0
+    admitted_step: int = -1
+    admitted_s: float = 0.0
+    first_token_step: int = -1
+    first_token_s: float = 0.0
+    evictions: int = 0
+    slot: int = -1
+    prefill_done: int = 0
+    decoding: bool = False
+    generated: List[int] = dataclasses.field(default_factory=list)
+
+    def view(self, now_step: int) -> RequestView:
+        return RequestView(
+            rid=self.req.rid,
+            prompt_len=self.req.prompt_len,
+            prefill_done=self.prefill_done,
+            waited_steps=now_step - self.arrival_step,
+            evictions=self.evictions,
+        )
+
+
+class ServeEngine:
+    """Policy-driven continuous batching over a ``SequenceBuffer``."""
+
+    def __init__(
+        self,
+        params,
+        cfg: ArchConfig,
+        call,
+        policy="serve-fcfs",
+        max_slots: int = 4,
+        max_len: int = 512,
+        prefill_chunk_size: int = 64,
+        token_budget: Optional[int] = None,
+        ctx: Optional[SchedulingContext] = None,
+        eos_id: Optional[int] = None,
+    ):
+        import jax
+
+        if prefill_chunk_size < 1:
+            raise ValueError("prefill_chunk_size must be >= 1")
+        self.cfg = cfg
+        self.policy = get_serve_policy(policy)
+        # cache dtype follows the compute dtype: bf16 serving by default,
+        # f32 when the caller needs association-order-stable numerics
+        self.buffer = SequenceBuffer(params, cfg, max_slots, max_len,
+                                     dtype=call.dtype)
+        self.chunk = prefill_chunk_size
+        # default: one full chunk of prefill headroom on top of the decode
+        # batch, so decode never starves prefill to zero by itself
+        self.token_budget = (
+            token_budget if token_budget is not None else prefill_chunk_size + max_slots
+        )
+        self.ctx = ctx
+        self.eos_id = eos_id
+        self.params = params
+        # the ONLY two jitted shapes: (1, C) prefill chunks, (B,) decode
+        self._chunk_fn = jax.jit(
+            lambda p, t, start, n, caches: prefill_chunk(
+                p, cfg, call, t, start, n, caches
+            )
+        )
+        self._decode_fn = jax.jit(
+            lambda p, tok, lens, caches, act: decode_step(
+                p, cfg, call, tok, lens, caches, act
+            )
+        )
+        self.step_i = 0
+        self._t0 = time.perf_counter()
+        self._pending: List[_Track] = []  # future arrivals, by arrival_step
+        self._waiting: List[_Track] = []  # visible, not admitted
+        self._live: Dict[int, _Track] = {}  # admitted, keyed by rid
+        self.completions: List[Completion] = []
+        self.reports: List[ServeStepReport] = []
+
+    # -- submission ----------------------------------------------------------
+
+    def submit(self, req: Request) -> None:
+        if req.prompt_len + req.max_new_tokens > self.buffer.max_len:
+            raise ValueError(
+                f"request {req.rid}: prompt_len + max_new_tokens = "
+                f"{req.prompt_len + req.max_new_tokens} exceeds engine "
+                f"max_len {self.buffer.max_len}"
+            )
+        if any(t.req.rid == req.rid for t in self._all_tracks()):
+            raise ValueError(f"duplicate rid {req.rid}")
+        self._pending.append(_Track(req=req))
+        self._pending.sort(key=lambda t: (t.req.arrival_step, t.req.rid))
+
+    def _all_tracks(self):
+        return self._pending + self._waiting + list(self._live.values())
+
+    @property
+    def n_outstanding(self) -> int:
+        return len(self._pending) + len(self._waiting) + len(self._live)
+
+    # -- step ----------------------------------------------------------------
+
+    def step(self) -> ServeStepReport:
+        with obs.span("serve.step", step=self.step_i):
+            return self._step()
+
+    def _step(self) -> ServeStepReport:
+        now = self.step_i
+        # 1. arrivals become visible
+        while self._pending and self._pending[0].req.arrival_step <= now:
+            t = self._pending.pop(0)
+            t.arrival_step = now
+            t.arrival_s = time.perf_counter() - self._t0
+            self._waiting.append(t)
+
+        # 2. plan
+        prefilling = [t for t in self._live.values() if not t.decoding]
+        n_decoding = sum(1 for t in self._live.values() if t.decoding)
+        state = ServeState(
+            step=now,
+            waiting=[t.view(now) for t in self._waiting],
+            prefilling=[t.view(now) for t in prefilling],
+            n_decoding=n_decoding,
+            free_slots=self.buffer.n_free,
+            token_budget=self.token_budget,
+            prefill_chunk=self.chunk,
+            ctx=self.ctx,
+        )
+        plan = self.policy.plan_step(state)
+        self._validate(plan, state)
+
+        # 3. evictions: back to the waiting queue, prefill restarts from 0
+        for rid in plan.evict:
+            t = self._live.pop(rid)
+            with obs.span("serve.evict", rid=rid, staged=t.prefill_done):
+                self.buffer.release(t.slot)
+                t.slot, t.prefill_done, t.evictions = -1, 0, t.evictions + 1
+                self._waiting.append(t)
+        if plan.evict:
+            self._waiting.sort(key=lambda t: (t.arrival_step, t.req.rid))
+
+        # 4. admissions
+        if plan.admit:
+            with obs.span("serve.admit", n=len(plan.admit)):
+                for rid in plan.admit:
+                    t = next(w for w in self._waiting if w.req.rid == rid)
+                    self._waiting.remove(t)
+                    t.slot = self.buffer.alloc(rid)
+                    t.admitted_step = now
+                    t.admitted_s = time.perf_counter() - self._t0
+                    self._live[rid] = t
+
+        # 5. chunked prefill
+        finished: List[int] = []
+        prefill_tokens = 0
+        for rid, grant in plan.prefill:
+            t = self._live[rid]
+            prefill_tokens += grant
+            self._run_prefill(t, grant, finished)
+
+        # 6. batched decode over every slot (inactive ones masked)
+        decode_tokens = int(self.buffer.active.sum())
+        if decode_tokens:
+            self._run_decode(finished)
+
+        report = ServeStepReport(
+            step=now,
+            policy=self.policy.name,
+            n_waiting=len(self._waiting),
+            n_prefilling=sum(1 for t in self._live.values() if not t.decoding),
+            n_decoding=sum(1 for t in self._live.values() if t.decoding),
+            admitted=list(plan.admit),
+            evicted=list(plan.evict),
+            finished=finished,
+            prefill_tokens=prefill_tokens,
+            decode_tokens=decode_tokens,
+            token_budget=self.token_budget,
+            prefill_budget=state.prefill_budget,
+            occupancy=self.buffer.occupancy,
+        )
+        self.reports.append(report)
+        obs.emit(
+            {
+                "kind": "serve_step",
+                "step": report.step,
+                "policy": report.policy,
+                "phase": report.phase,
+                "waiting": report.n_waiting,
+                "prefilling": report.n_prefilling,
+                "decoding": report.n_decoding,
+                "admitted": len(report.admitted),
+                "evicted": len(report.evicted),
+                "finished": len(report.finished),
+                "prefill_tokens": report.prefill_tokens,
+                "decode_tokens": report.decode_tokens,
+                "occupancy": report.occupancy,
+            }
+        )
+        self.step_i += 1
+        return report
+
+    def _validate(self, plan: StepPlan, state: ServeState) -> None:
+        """Malformed plans raise — the engine never silently clamps."""
+        waiting = {v.rid for v in state.waiting}
+        prefilling = {v.rid for v in state.prefilling}
+        if len(set(plan.evict)) != len(plan.evict) or not set(plan.evict) <= prefilling:
+            raise ValueError(f"plan evicts non-prefilling or duplicate rids: {plan.evict}")
+        if len(set(plan.admit)) != len(plan.admit) or not set(plan.admit) <= waiting:
+            raise ValueError(f"plan admits non-waiting or duplicate rids: {plan.admit}")
+        if len(plan.admit) > state.free_slots + len(plan.evict):
+            raise ValueError(
+                f"plan admits {len(plan.admit)} with only "
+                f"{state.free_slots} free + {len(plan.evict)} evicted slots"
+            )
+        stageable = (prefilling - set(plan.evict)) | set(plan.admit)
+        remaining = {v.rid: v.remaining_prefill for v in state.waiting}
+        remaining.update({v.rid: v.remaining_prefill for v in state.prefilling})
+        total = 0
+        seen = set()
+        for rid, n in plan.prefill:
+            if rid not in stageable or rid in seen:
+                raise ValueError(f"plan grants prefill to invalid rid {rid}")
+            if not 0 < n <= remaining[rid]:
+                raise ValueError(
+                    f"plan grants {n} prefill tokens to rid {rid} "
+                    f"(remaining {remaining[rid]})"
+                )
+            seen.add(rid)
+            total += n
+        if total > state.prefill_budget:
+            raise ValueError(
+                f"plan grants {total} prefill tokens over budget "
+                f"{state.prefill_budget}"
+            )
+
+    # -- phases --------------------------------------------------------------
+
+    def _run_prefill(self, t: _Track, grant: int, finished: List[int]) -> None:
+        """Stage ``grant`` prompt tokens for one request in (1, C) chunks."""
+        c = self.chunk
+        prompt = t.req.prompt
+        slot_caches = self.buffer.slot_caches(t.slot)
+        logits = None
+        while grant > 0:
+            take = min(c, grant)
+            chunk_tokens = np.zeros((1, c), np.int32)
+            chunk_tokens[0, :take] = prompt[t.prefill_done : t.prefill_done + take]
+            with obs.span(
+                "serve.prefill_chunk", rid=t.req.rid, start=t.prefill_done, n=take
+            ):
+                logits, slot_caches = self._chunk_fn(
+                    self.params,
+                    chunk_tokens,
+                    np.int32(t.prefill_done),
+                    np.int32(take),
+                    slot_caches,
+                )
+            t.prefill_done += take
+            grant -= take
+        self.buffer.set_slot_caches(t.slot, slot_caches)
+        if t.prefill_done == t.req.prompt_len:
+            # prompt fully staged: the last chunk's logits give token 1
+            tok = int(np.asarray(logits).argmax())
+            self._emit_token(t, tok, finished, first=True)
+
+    def _run_decode(self, finished: List[int]) -> None:
+        buf = self.buffer
+        with obs.span("serve.decode", n_active=int(buf.active.sum())):
+            logits, buf.caches = self._decode_fn(
+                self.params,
+                buf.last_token.copy(),
+                buf.lengths.copy(),
+                buf.caches,
+                buf.active.copy(),
+            )
+            logits = np.asarray(logits)
+        for t in list(self._live.values()):
+            if not t.decoding or t.req.rid in finished:
+                continue
+            tok = int(logits[t.slot].argmax())
+            self._emit_token(t, tok, finished, first=False)
+
+    def _emit_token(
+        self, t: _Track, tok: int, finished: List[int], first: bool
+    ) -> None:
+        t.generated.append(tok)
+        if first:
+            t.first_token_step = self.step_i
+            t.first_token_s = time.perf_counter() - self._t0
+            t.decoding = True
+            self.buffer.start_decode(t.slot, t.req.prompt_len, tok)
+        else:
+            self.buffer.advance(t.slot, tok)
+        eos = self.eos_id if t.req.eos_id is None else t.req.eos_id
+        if (eos is not None and tok == eos) or len(t.generated) >= t.req.max_new_tokens:
+            reason = "eos" if (eos is not None and tok == eos) else "max_new_tokens"
+            self._finish(t, reason)
+            finished.append(t.req.rid)
+
+    def _finish(self, t: _Track, reason: str) -> None:
+        self.buffer.release(t.slot)
+        del self._live[t.req.rid]
+        now_s = time.perf_counter() - self._t0
+        self.completions.append(
+            Completion(
+                rid=t.req.rid,
+                tokens=np.asarray(t.generated, np.int32),
+                prompt_len=t.req.prompt_len,
+                finish_reason=reason,
+                arrival_step=t.arrival_step,
+                admitted_step=t.admitted_step,
+                first_token_step=t.first_token_step,
+                finished_step=self.step_i,
+                arrival_s=t.arrival_s,
+                admitted_s=t.admitted_s,
+                first_token_s=t.first_token_s,
+                finished_s=now_s,
+                evictions=t.evictions,
+            )
+        )
+
+    # -- episode -------------------------------------------------------------
+
+    def run(
+        self, requests: Optional[List[Request]] = None, max_steps: int = 100_000
+    ) -> List[Completion]:
+        """Drive the step loop until every submitted request completes."""
+        for r in requests or []:
+            self.submit(r)
+        while self.n_outstanding:
+            if self.step_i >= max_steps:
+                raise RuntimeError(
+                    f"engine did not drain in {max_steps} steps "
+                    f"({self.n_outstanding} outstanding) — livelocked policy?"
+                )
+            self.step()
+        self._emit_summary()
+        return sorted(self.completions, key=lambda c: c.rid)
+
+    def _emit_summary(self) -> None:
+        cs = self.completions
+        if not cs:
+            return
+        ttft = np.asarray([c.ttft_steps for c in cs], np.float64)
+        gen = sum(c.n_generated for c in cs)
+        wall = time.perf_counter() - self._t0
+        obs.emit(
+            {
+                "kind": "serve",
+                "policy": self.policy.name,
+                "completions": len(cs),
+                "steps": self.step_i,
+                "generated_tokens": gen,
+                "tokens_per_s": gen / max(wall, 1e-9),
+                "ttft_steps_p50": float(np.percentile(ttft, 50)),
+                "ttft_steps_p99": float(np.percentile(ttft, 99)),
+                "mean_occupancy": float(
+                    np.mean([r.occupancy for r in self.reports])
+                ),
+                "evictions": sum(c.evictions for c in cs),
+            }
+        )
+
+
+def greedy_static(
+    params,
+    cfg: ArchConfig,
+    call,
+    prompt: np.ndarray,
+    max_new_tokens: int,
+    max_len: int,
+    eos_id: Optional[int] = None,
+    _fns: Optional[Tuple[Any, Any]] = None,
+) -> np.ndarray:
+    """Greedy generation through the static ``prefill`` + ``decode_step``
+    path, one request alone — the bit-exactness reference for the engine.
+
+    Both calls are jitted (like the engine's) rather than eager: XLA fuses
+    the eager and compiled programs differently, which moves bf16 rounding
+    by ~1e-3 — enough to flip a greedy argmax at a near-tie. Jitted-vs-
+    jitted, decode logits are batch-size-independent bit-for-bit.
+    """
+    import jax
+
+    from ..train.serve import prefill
+
+    if _fns is None:
+        _fns = (
+            jax.jit(lambda p, t: prefill(p, cfg, call, t, max_len)),
+            jax.jit(lambda p, t, l, c: decode_step(p, cfg, call, t, l, c)),
+        )
+    prefill_fn, decode_fn = _fns
+    prompt = np.asarray(prompt, np.int32).reshape(1, -1)
+    logits, caches, lens = prefill_fn(params, prompt)
+    out = [int(np.asarray(logits[0]).argmax())]
+    while out[-1] != eos_id and len(out) < max_new_tokens:
+        logits, caches = decode_fn(
+            params, np.asarray([out[-1]], np.int32), lens, caches
+        )
+        lens = lens + 1
+        out.append(int(np.asarray(logits[0]).argmax()))
+    return np.asarray(out, np.int32)
+
+
+def check_equivalence(
+    params, cfg, call, requests, completions, max_len, eos_id=None
+) -> List[int]:
+    """Return rids whose engine output differs from the static reference."""
+    import jax
+
+    from ..train.serve import prefill
+
+    fns = (
+        jax.jit(lambda p, t: prefill(p, cfg, call, t, max_len)),
+        jax.jit(lambda p, t, l, c: decode_step(p, cfg, call, t, l, c)),
+    )
+    by_rid = {c.rid: c for c in completions}
+    bad = []
+    for r in requests:
+        ref = greedy_static(
+            params, cfg, call, r.prompt, r.max_new_tokens, max_len,
+            eos_id=eos_id if r.eos_id is None else r.eos_id, _fns=fns,
+        )
+        got = by_rid[r.rid].tokens
+        if got.shape != ref.shape or not np.array_equal(got, ref):
+            bad.append(r.rid)
+    return bad
+
+
+__all__ = ["ServeEngine", "ServeStepReport", "greedy_static", "check_equivalence"]

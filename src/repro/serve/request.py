@@ -1,0 +1,96 @@
+"""Request / Completion — the serving engine's unit of work.
+
+A ``Request`` is one prompt plus generation limits; the engine turns it into
+a ``Completion`` carrying the generated tokens and the full latency
+lifecycle, stamped both in *engine steps* (deterministic — what the CI gate
+compares across policies) and in wall-clock seconds (what a dashboard plots).
+
+``arrival_step`` models bursty traffic offline: the engine only *sees* a
+request once its step counter reaches it, so a whole trace of traffic can be
+submitted up front and replayed deterministically.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class Request:
+    """One generation request.
+
+    ``prompt`` is (S,) int32 token ids; generation stops after
+    ``max_new_tokens`` or on ``eos_id`` (which is *included* in the output,
+    matching the static prefill+decode reference).
+    """
+
+    rid: int
+    prompt: np.ndarray
+    max_new_tokens: int
+    eos_id: Optional[int] = None
+    arrival_step: int = 0
+
+    def __post_init__(self):
+        self.prompt = np.asarray(self.prompt, dtype=np.int32).reshape(-1)
+        if self.prompt.size < 1:
+            raise ValueError(f"request {self.rid}: empty prompt")
+        if self.max_new_tokens < 1:
+            raise ValueError(
+                f"request {self.rid}: max_new_tokens must be >= 1, "
+                f"got {self.max_new_tokens}"
+            )
+        if self.arrival_step < 0:
+            raise ValueError(f"request {self.rid}: negative arrival_step")
+
+    @property
+    def prompt_len(self) -> int:
+        return int(self.prompt.size)
+
+
+@dataclasses.dataclass
+class Completion:
+    """A finished request with its latency lifecycle.
+
+    Step stamps are engine-step indices (first_token_step is the step whose
+    prefill completion emitted the first token); second stamps are
+    ``perf_counter`` wall times relative to the engine's episode start.
+    ``evictions`` counts how often the request was preempted mid-prefill and
+    re-queued (its tokens are unaffected — prefill restarts are exact).
+    """
+
+    rid: int
+    tokens: np.ndarray  # (n_generated,) int32, includes eos if hit
+    prompt_len: int
+    finish_reason: str  # "eos" | "max_new_tokens"
+    arrival_step: int
+    admitted_step: int
+    first_token_step: int
+    finished_step: int
+    arrival_s: float
+    admitted_s: float
+    first_token_s: float
+    finished_s: float
+    evictions: int = 0
+
+    @property
+    def n_generated(self) -> int:
+        return int(self.tokens.size)
+
+    @property
+    def ttft_steps(self) -> int:
+        """Time-to-first-token in engine steps (deterministic)."""
+        return self.first_token_step - self.arrival_step
+
+    @property
+    def ttft_s(self) -> float:
+        return self.first_token_s - self.arrival_s
+
+    @property
+    def latency_s(self) -> float:
+        return self.finished_s - self.arrival_s
+
+
+__all__ = ["Request", "Completion"]

@@ -1,0 +1,244 @@
+"""Serving-side request scheduling — SchedulerPolicy instances in the one
+sched registry.
+
+Skrull's thesis (schedule heterogeneous-length work dynamically instead of
+taking arrival order as given) applies to serving verbatim: each engine step
+a policy decides which waiting requests to admit into free slots, which
+admitted requests to preempt, and how to split a per-step token budget
+between chunked-prefill segments and the decode batch. The serving analogue
+of a training iteration's GlobalSchedule is a ``StepPlan``.
+
+Serve policies are full ``SchedulerPolicy`` objects registered under
+``serve-*`` names, so the loader/benchmark/explorer registry machinery sees
+them too: their batch-mode ``schedule(lengths, ctx)`` delegates to the
+offline policy with the same ordering philosophy (``serve-fcfs`` →
+arrival-order ``dacp-only``, ``serve-skrull`` → ``skrull``), and the serving
+engine calls the additional ``plan_step(state)`` surface.
+
+Budget semantics (decode-first regime): decode always runs for every
+decoding slot — one token per slot per step, bounding inter-token latency —
+and the remaining ``token_budget - n_decoding`` tokens are granted to
+prefill. Grants are sliced by the engine into fixed-shape chunks so the jit
+cache stays bounded.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Tuple
+
+from ..sched.api import SchedulerPolicy, SchedulingContext
+from ..sched.registry import get_policy, register_policy
+
+
+@dataclasses.dataclass
+class RequestView:
+    """What a policy may see about one request (no tokens, just shape/state)."""
+
+    rid: int
+    prompt_len: int
+    prefill_done: int
+    waited_steps: int  # engine steps since arrival
+    evictions: int
+
+    @property
+    def remaining_prefill(self) -> int:
+        return self.prompt_len - self.prefill_done
+
+
+@dataclasses.dataclass
+class ServeState:
+    """Engine state snapshot a policy plans one step against."""
+
+    step: int
+    waiting: List[RequestView]  # not yet admitted, arrival order
+    prefilling: List[RequestView]  # admitted, prefill incomplete, admission order
+    n_decoding: int
+    free_slots: int
+    token_budget: int
+    prefill_chunk: int
+    ctx: Optional[SchedulingContext] = None  # cost-model profiles, if any
+
+    @property
+    def prefill_budget(self) -> int:
+        return max(self.token_budget - self.n_decoding, 0)
+
+
+@dataclasses.dataclass
+class StepPlan:
+    """One engine step's worth of scheduling decisions.
+
+    ``evict`` names mid-prefill requests to preempt back to the waiting
+    queue (decoding slots are never evicted); ``admit`` names waiting
+    requests to place into free slots, in order; ``prefill`` grants each
+    named request up to that many prompt tokens this step. The engine
+    validates feasibility (slots, budget, remaining prefill) and raises on
+    a malformed plan rather than silently clamping.
+    """
+
+    admit: List[int] = dataclasses.field(default_factory=list)
+    evict: List[int] = dataclasses.field(default_factory=list)
+    prefill: List[Tuple[int, int]] = dataclasses.field(default_factory=list)
+
+
+class ServePolicy(SchedulerPolicy):
+    """Base class for serving policies: batch mode delegates, step mode plans."""
+
+    name = "serve-base"
+    batch_delegate = "skrull"  # offline analogue used for schedule(lengths, ctx)
+
+    def schedule(self, lengths, ctx: SchedulingContext):
+        return get_policy(self.batch_delegate).schedule(lengths, ctx)
+
+    def plan_step(self, state: ServeState) -> StepPlan:  # pragma: no cover
+        raise NotImplementedError
+
+    # -- shared helpers ------------------------------------------------------
+
+    def _grant(
+        self, order: List[RequestView], budget: int, plan: StepPlan
+    ) -> None:
+        """Grant prefill tokens to requests in ``order`` until budget runs out."""
+        for r in order:
+            if budget <= 0:
+                break
+            take = min(r.remaining_prefill, budget)
+            if take > 0:
+                plan.prefill.append((r.rid, take))
+                budget -= take
+
+    def _cost(self, r: RequestView, state: ServeState) -> float:
+        """Modeled time to finish ``r``'s prefill (Eq. 8-style when the
+        context carries profiles; token-count proxy otherwise)."""
+        ctx = state.ctx
+        if ctx is not None and ctx.profile is not None and ctx.hw is not None:
+            prof, hw = ctx.profile, ctx.hw
+            # remaining prefill FLOPs: total-prompt forward minus the part
+            # already staged (the quadratic term makes long prompts *more*
+            # than proportionally expensive — exactly what FCFS ignores)
+            full = prof.n_layers * prof.flops(float(r.prompt_len))
+            done = prof.n_layers * prof.flops(float(r.prefill_done))
+            return hw.t_comp(max(full - done, 0.0), chunk_tokens=float(state.prefill_chunk), width=float(prof.hidden))
+        return float(r.remaining_prefill)
+
+
+@register_policy("serve-fcfs")
+class ServeFCFSPolicy(ServePolicy):
+    """First-come-first-served continuous batching (the vLLM-default shape).
+
+    Admission and prefill budget strictly follow arrival order: a 500K
+    prefill at the head of the line soaks up every step's budget until it is
+    done, and the short requests queued behind it starve — the head-of-line
+    pathology ``serve-skrull`` exists to remove. Kept as the honest baseline
+    the BENCH_serve gate compares against.
+    """
+
+    name = "serve-fcfs"
+    batch_delegate = "dacp-only"  # arrival-order batching offline
+
+    def plan_step(self, state: ServeState) -> StepPlan:
+        plan = StepPlan()
+        order = list(state.prefilling)
+        free = state.free_slots
+        for r in state.waiting:
+            if free <= 0:
+                break
+            plan.admit.append(r.rid)
+            order.append(r)
+            free -= 1
+        self._grant(order, state.prefill_budget, plan)
+        return plan
+
+
+@register_policy("serve-skrull")
+class ServeSkrullPolicy(ServePolicy):
+    """Cost-model-driven admission and budget split (Skrull's Eq. 8 ordering
+    applied to serving).
+
+    Each step every waiting/prefilling request is scored by the modeled time
+    to finish its remaining prefill; cheapest-first gets slots and budget, so
+    short requests overtake a 500K-token prefill instead of starving behind
+    it. Two guards keep it honest:
+
+    * **aging** — a request waiting longer than ``starvation_steps`` is
+      treated as cost 0, so the long outlier is delayed, never starved;
+    * **bounded preemption** — when no slot is free and a waiting request is
+      ``evict_ratio``× cheaper than the most expensive mid-prefill request,
+      that request is evicted back to the queue — but at most
+      ``max_evictions`` times each, so every request eventually runs.
+    """
+
+    name = "serve-skrull"
+    batch_delegate = "skrull"
+
+    def __init__(
+        self,
+        starvation_steps: int = 256,
+        evict_ratio: float = 0.25,
+        max_evictions: int = 1,
+    ):
+        self.starvation_steps = starvation_steps
+        self.evict_ratio = evict_ratio
+        self.max_evictions = max_evictions
+
+    def _priority(self, r: RequestView, state: ServeState) -> float:
+        if r.waited_steps >= self.starvation_steps:
+            return 0.0  # aged out: jump the queue
+        return self._cost(r, state)
+
+    def plan_step(self, state: ServeState) -> StepPlan:
+        plan = StepPlan()
+        # stable sort: ties (equal cost) stay in arrival/admission order
+        waiting = sorted(
+            state.waiting, key=lambda r: self._priority(r, state)
+        )
+        active = list(state.prefilling)
+        free = state.free_slots
+        for r in waiting:
+            if free > 0:
+                plan.admit.append(r.rid)
+                active.append(r)
+                free -= 1
+                continue
+            # no free slot: preempt a strictly-more-expensive prefill?
+            evictable = [
+                a for a in active
+                if a.evictions < self.max_evictions and a.rid not in plan.admit
+            ]
+            if not evictable:
+                break
+            victim = max(evictable, key=lambda a: self._cost(a, state))
+            if self._priority(r, state) <= self.evict_ratio * self._cost(
+                victim, state
+            ):
+                plan.evict.append(victim.rid)
+                active.remove(victim)
+                plan.admit.append(r.rid)
+                active.append(r)
+            else:
+                break  # nothing cheap enough to justify preemption
+        active.sort(key=lambda r: self._priority(r, state))
+        self._grant(active, state.prefill_budget, plan)
+        return plan
+
+
+def get_serve_policy(policy) -> ServePolicy:
+    """Resolve to a ``ServePolicy`` (raises if the name lacks ``plan_step``)."""
+    p = get_policy(policy)
+    if not hasattr(p, "plan_step"):
+        raise ValueError(
+            f"policy {getattr(p, 'name', p)!r} is not a serving policy "
+            "(no plan_step); use one of the serve-* registry entries"
+        )
+    return p
+
+
+__all__ = [
+    "RequestView",
+    "ServeState",
+    "StepPlan",
+    "ServePolicy",
+    "ServeFCFSPolicy",
+    "ServeSkrullPolicy",
+    "get_serve_policy",
+]

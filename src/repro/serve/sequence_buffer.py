@@ -1,0 +1,120 @@
+"""Slot-based sequence buffer over the ring-buffer KV/SSM caches.
+
+The buffer owns the *device* half of continuous batching: one batched cache
+pytree (``train.serve.init_caches`` with B = max_slots), plus per-slot
+lengths / last-token / active arrays in host numpy mirrors. Slots are
+allocated on admission, written by chunked prefill (one-slot slices), read
+and advanced by the batched ``decode_step``, and reclaimed on finish or
+eviction.
+
+Reclaimed slots are **not** zeroed — correctness never depends on it:
+
+* attention: ``ring_positions(start)`` only marks ring entries the *current*
+  occupant has written as valid (prefill proceeds in order, so every claimed
+  position 0..start-1 was rewritten by it), and ``decode_attention`` masks
+  by ``min(pos+1, s_cache)`` the same way;
+* SSM: ``prefill_chunk`` resets state to zeros when ``start == 0``.
+
+The one deliberately *un*-fixed shape here is the per-slot cache slice
+(``n_rep, 1, ...``): slicing slot ``i`` bakes ``i`` into the (eager) gather,
+so the dispatch cache holds at most ``max_slots`` entries per op — bounded,
+like the engine's two jitted shapes.
+"""
+
+from __future__ import annotations
+
+from typing import Any, List, Optional
+
+import jax
+import numpy as np
+
+from ..configs.base import ArchConfig
+from ..train.serve import cache_len_for, init_caches
+
+
+class SequenceBuffer:
+    """Fixed-capacity slot buffer: batched caches + per-slot decode state."""
+
+    def __init__(
+        self,
+        params,
+        cfg: ArchConfig,
+        max_slots: int,
+        max_len: int,
+        dtype=None,
+    ):
+        if max_slots < 1:
+            raise ValueError(f"max_slots must be >= 1, got {max_slots}")
+        self.cfg = cfg
+        self.max_slots = max_slots
+        self.max_len = max_len
+        self.s_cache = cache_len_for(cfg, max_len)
+        kw = {} if dtype is None else {"dtype": dtype}
+        self.caches: List[Any] = init_caches(params, cfg, max_slots, max_len, **kw)
+        # host-side per-slot decode state (fed to decode_step as device arrays)
+        self.lengths = np.zeros((max_slots,), np.int32)
+        self.last_token = np.zeros((max_slots,), np.int32)
+        self.active = np.zeros((max_slots,), bool)  # decoding this step?
+        self.slot_rid: List[Optional[int]] = [None] * max_slots
+        self._free: List[int] = list(range(max_slots))  # LIFO reuse
+
+    # -- slot lifecycle ------------------------------------------------------
+
+    @property
+    def n_free(self) -> int:
+        return len(self._free)
+
+    @property
+    def occupancy(self) -> float:
+        return 1.0 - len(self._free) / self.max_slots
+
+    def alloc(self, rid: int) -> int:
+        """Reserve a slot for request ``rid`` (prefill phase: inactive)."""
+        if not self._free:
+            raise RuntimeError("sequence buffer full: no free slot")
+        slot = self._free.pop()
+        self.slot_rid[slot] = rid
+        self.lengths[slot] = 0
+        self.last_token[slot] = 0
+        self.active[slot] = False
+        return slot
+
+    def release(self, slot: int) -> None:
+        """Reclaim a slot (finish or eviction). Caches are left stale."""
+        if self.slot_rid[slot] is None:
+            raise RuntimeError(f"slot {slot} is already free")
+        self.slot_rid[slot] = None
+        self.active[slot] = False
+        self.lengths[slot] = 0
+        self._free.append(slot)
+
+    def start_decode(self, slot: int, prompt_len: int, first_token: int) -> None:
+        """Flip a slot from prefill to decode after its prompt is staged."""
+        self.lengths[slot] = prompt_len
+        self.last_token[slot] = first_token
+        self.active[slot] = True
+
+    def advance(self, slot: int, token: int) -> None:
+        """Record one decoded token: next step attends at position +1."""
+        self.lengths[slot] += 1
+        self.last_token[slot] = token
+
+    # -- cache views ---------------------------------------------------------
+
+    def slot_caches(self, slot: int) -> List[Any]:
+        """One slot's caches as the (n_rep, 1, ...) view prefill_chunk takes."""
+        return [
+            jax.tree.map(lambda a: a[:, slot : slot + 1], entry)
+            for entry in self.caches
+        ]
+
+    def set_slot_caches(self, slot: int, slot_caches: List[Any]) -> None:
+        self.caches = [
+            jax.tree.map(
+                lambda full, sl: full.at[:, slot].set(sl[:, 0]), entry, new
+            )
+            for entry, new in zip(self.caches, slot_caches)
+        ]
+
+
+__all__ = ["SequenceBuffer"]

@@ -1,0 +1,92 @@
+"""Synthetic bursty traffic for serving benchmarks and tests.
+
+Three mixes, mirroring the data regimes the training side schedules for
+(ROADMAP: short-heavy / long-tail / 500K-outlier):
+
+* ``short-heavy`` — almost all prompts short, mild length spread; the
+  regime where FCFS is already fine (the gate expects ~parity).
+* ``long-tail``  — lognormal lengths, a fat tail of multi-chunk prompts.
+* ``outlier``    — short-heavy plus one prompt ``outlier_len`` long arriving
+  *early*; under FCFS every later short request queues behind its prefill.
+  This is the mix the BENCH_serve p99-TTFT gate runs on.
+
+Arrivals are bursty: requests land in Poisson-ish clumps every
+``burst_every`` steps rather than uniformly, so admission pressure (full
+buffer, eviction decisions) actually occurs at small scale.
+
+Lengths here are *scaled down* by callers (tests/CI use the reduced preset);
+the generator only fixes the shape of the distribution.
+"""
+
+from __future__ import annotations
+
+from typing import List, Optional
+
+import numpy as np
+
+from .request import Request
+
+MIXES = ("short-heavy", "long-tail", "outlier")
+
+
+def make_traffic(
+    mix: str,
+    n_requests: int,
+    vocab: int,
+    *,
+    short_len: int = 12,
+    long_len: int = 96,
+    outlier_len: int = 256,
+    max_new_tokens: int = 8,
+    burst_every: int = 4,
+    burst_size: int = 3,
+    eos_id: Optional[int] = None,
+    seed: int = 0,
+) -> List[Request]:
+    """Build a deterministic request trace for one traffic mix."""
+    if mix not in MIXES:
+        raise ValueError(f"unknown traffic mix {mix!r}; choose from {MIXES}")
+    rng = np.random.default_rng(seed)
+    lens = _lengths(mix, n_requests, rng, short_len, long_len, outlier_len)
+    arrivals = _bursty_arrivals(n_requests, rng, burst_every, burst_size)
+    reqs = []
+    for rid, (s, at) in enumerate(zip(lens, arrivals)):
+        # tokens start at 1: id 0 doubles as padding in the engine's chunks
+        prompt = rng.integers(1, vocab, size=int(s), dtype=np.int32)
+        reqs.append(
+            Request(
+                rid=rid,
+                prompt=prompt,
+                max_new_tokens=int(rng.integers(1, max_new_tokens + 1)),
+                eos_id=eos_id,
+                arrival_step=int(at),
+            )
+        )
+    return reqs
+
+
+def _lengths(mix, n, rng, short_len, long_len, outlier_len):
+    if mix == "short-heavy":
+        lens = rng.integers(max(short_len // 2, 1), short_len + 1, size=n)
+    elif mix == "long-tail":
+        # lognormal with median ~short_len, tail reaching past long_len
+        raw = rng.lognormal(mean=np.log(short_len), sigma=0.9, size=n)
+        lens = np.clip(raw.astype(np.int64), 1, long_len)
+    else:  # outlier
+        lens = rng.integers(max(short_len // 2, 1), short_len + 1, size=n)
+        # the 500K-analogue lands early enough to block everyone behind it
+        lens[min(1, n - 1)] = outlier_len
+    return lens
+
+
+def _bursty_arrivals(n, rng, burst_every, burst_size):
+    arrivals = []
+    step = 0
+    while len(arrivals) < n:
+        k = max(int(rng.poisson(burst_size)), 1)
+        arrivals.extend([step] * min(k, n - len(arrivals)))
+        step += burst_every
+    return np.asarray(arrivals[:n])
+
+
+__all__ = ["MIXES", "make_traffic"]

@@ -11,6 +11,19 @@ length (this is why mamba2/jamba run the 500K-decode cell at all).
 ``prefill`` consumes (B, S) token blocks and emits last-position logits +
 caches; ``decode_step`` consumes one token per slot. Both scan over the block
 pattern exactly like training, so serve shares all model code.
+
+The continuous-batching engine (``repro.serve``) adds two requirements this
+module implements so all model code stays in one place:
+
+* ``decode_step(..., active=)`` — per-slot write masking. The engine decodes
+  the whole slot buffer every step; slots that are free or mid-prefill must
+  not have their caches clobbered by the dummy tokens they are fed.
+* ``prefill_chunk`` — continue one slot's prefill with a *fixed-shape* token
+  chunk (the engine jits exactly one chunk shape, so the jit cache stays
+  bounded no matter the prompt-length mix). Chunk queries attend to the
+  slot's ring cache (positions reconstructed from the ``pos % S_cache``
+  write rule) concatenated with the chunk itself; SSM pattern-positions run
+  the exact decode recurrence over the chunk, carrying state.
 """
 
 from __future__ import annotations
@@ -100,7 +113,7 @@ def _prefill(params, cfg, call, tokens, max_len):
     s_cache = cache_len_for(cfg, max_len)
     segs = jnp.ones((b, s), jnp.int32)
     pos = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
-    x = embed(params["embed"], tokens, dtype=jnp.bfloat16)
+    x = embed(params["embed"], tokens, dtype=call.dtype)
 
     def body(carry, block_params):
         h = carry
@@ -135,7 +148,7 @@ def _prefill(params, cfg, call, tokens, max_len):
                 else:
                     kc = jnp.pad(k, ((0, 0), (0, s_cache - s), (0, 0), (0, 0)))
                     vc = jnp.pad(v, ((0, 0), (0, s_cache - s), (0, 0), (0, 0)))
-                new_caches.append({"k": kc.astype(jnp.bfloat16), "v": vc.astype(jnp.bfloat16)})
+                new_caches.append({"k": kc.astype(call.dtype), "v": vc.astype(call.dtype)})
             if spec["ssm"]:
                 hn = rmsnorm(p["ln1"], h, cfg.norm_eps)
                 out, st = jax.vmap(
@@ -159,6 +172,129 @@ def _prefill(params, cfg, call, tokens, max_len):
 
 
 # ---------------------------------------------------------------------------
+# Chunked prefill (continuous-batching engine)
+# ---------------------------------------------------------------------------
+
+
+def ring_positions(start: jnp.ndarray, s_cache: int) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """(positions, valid) of a ring cache after ``start`` tokens were written.
+
+    Slot ``i`` holds the most recent absolute position ``p < start`` with
+    ``p % s_cache == i`` (the write rule shared by ``decode_step`` and the
+    ``prefill`` tail layout); ``valid`` is False for slots never written.
+    """
+    idx = jnp.arange(s_cache, dtype=jnp.int32)
+    pos = start - 1 - ((start - 1 - idx) % s_cache)
+    return pos, pos >= 0
+
+
+def prefill_chunk(
+    params,
+    cfg: ArchConfig,
+    call: CallConfig,
+    tokens: jnp.ndarray,  # (1, C) int32 — fixed chunk shape, zero-padded
+    start: jnp.ndarray,  # () int32 — absolute position of tokens[0, 0]
+    n_valid: jnp.ndarray,  # () int32 — real tokens in the chunk (<= C)
+    caches: List[Any],  # ONE slot's caches: (n_rep, 1, ...) per entry
+) -> Tuple[jnp.ndarray, List[Any]]:
+    """Advance one slot's prefill by one fixed-shape chunk.
+
+    Chunk queries attend to [slot ring cache ++ chunk] with absolute
+    positions; the chunk's K/V are ring-written at ``pos % s_cache`` (padded
+    and already-overwritten positions are dropped, so wraparound inside a
+    chunk stays consistent). ``start == 0`` resets SSM state, so the first
+    chunk of a reused slot never sees its previous occupant. Returns
+    (logits (V,) at the last valid position, updated slot caches).
+
+    Numerics note: the attention is the same online-softmax chunked scan the
+    static ``prefill`` uses, associated over a different KV split, so logits
+    agree to float tolerance (greedy tokens are identical in practice). SSM
+    positions run the *decode* recurrence over the chunk — exact in exact
+    arithmetic but numerically decode-flavoured, like ``decode_step`` itself.
+    """
+    pattern = block_pattern(cfg)
+    c = tokens.shape[1]
+    x = embed(params["embed"], tokens, dtype=call.dtype)  # (1, C, d)
+    pos = start + jnp.arange(c, dtype=jnp.int32)  # (C,) absolute
+    valid = jnp.arange(c, dtype=jnp.int32) < n_valid  # (C,)
+    q_seg = jnp.ones((c,), jnp.int32)
+    chunk_seg = valid.astype(jnp.int32)
+
+    # The pattern loop mirrors _decode_step: one python loop over the block
+    # pattern inside a lax.scan over repetitions.
+    def rep_body(carry, xs):
+        h = carry  # (1, C, d)
+        block_params, block_caches = xs
+        new_caches = []
+        for p, spec, cache in zip(block_params, pattern, block_caches):
+            if spec["attn"]:
+                hn = rmsnorm(p["ln1"], h, cfg.norm_eps)
+                hq, hkv, dh = cfg.n_heads, cfg.kv_heads, cfg.head_dim_
+                q = dense(p["q"], hn).reshape(1, c, hq, dh)
+                k = dense(p["k"], hn).reshape(1, c, hkv, dh)
+                v = dense(p["v"], hn).reshape(1, c, hkv, dh)
+                q = rope(q, pos[None], cfg.rope_theta)[0]  # (C, Hq, D)
+                k = rope(k, pos[None], cfg.rope_theta)[0]  # (C, Hkv, D)
+                v = v[0]
+                s_cache = cache["k"].shape[1]
+                cache_pos, cache_ok = ring_positions(start, s_cache)
+                kv_k = jnp.concatenate([cache["k"][0].astype(k.dtype), k], 0)
+                kv_v = jnp.concatenate([cache["v"][0].astype(v.dtype), v], 0)
+                kv_seg = jnp.concatenate([cache_ok.astype(jnp.int32), chunk_seg])
+                kv_pos = jnp.concatenate([cache_pos, pos])
+                from ..models.attention import segment_attention_chunked
+
+                out = segment_attention_chunked(
+                    q, kv_k, kv_v, q_seg, kv_seg, pos, kv_pos,
+                    cfg.window, kv_chunk=call.kv_chunk,
+                )
+                h = h + dense(p["o"], out.reshape(1, c, hq * dh))
+                # ring write: drop padded positions and positions another
+                # (newer) chunk token will overwrite at the same ring slot
+                survives = valid & (pos >= start + n_valid - s_cache)
+                write_idx = jnp.where(survives, pos % s_cache, s_cache)  # OOB -> drop
+                k_new = cache["k"][0].at[write_idx].set(
+                    k.astype(cache["k"].dtype), mode="drop"
+                )
+                v_new = cache["v"][0].at[write_idx].set(
+                    v.astype(cache["v"].dtype), mode="drop"
+                )
+                new_caches.append({"k": k_new[None], "v": v_new[None]})
+            if spec["ssm"]:
+                hn = rmsnorm(p["ln1"], h, cfg.norm_eps)
+                # first chunk of a (possibly reused) slot starts from zeros
+                state = jax.tree.map(
+                    lambda a: jnp.where(start > 0, a[0], jnp.zeros_like(a[0])),
+                    cache,
+                )
+
+                def tok_body(st, inp, p_ssm=p["ssm"]):
+                    xt, ok = inp
+                    y, st_new = ssm_decode_step(p_ssm, xt, st)
+                    st_kept = jax.tree.map(
+                        lambda nw, od: jnp.where(ok, nw, od), st_new, st
+                    )
+                    return st_kept, y
+
+                state, ys = jax.lax.scan(tok_body, state, (hn[0], valid))
+                h = h + ys[None].astype(h.dtype)
+                new_caches.append(jax.tree.map(lambda a: a[None], state))
+            if spec["moe"] or spec["mlp"]:
+                from ..models.transformer import _mlp_or_moe_layer
+
+                h = _mlp_or_moe_layer(p, cfg, call, h)
+            if not (spec["attn"] or spec["ssm"]):
+                new_caches.append({})
+        return h, tuple(new_caches)
+
+    x, new_caches = jax.lax.scan(rep_body, x, (params["blocks"], tuple(caches)))
+    h = rmsnorm(params["final_norm"], x, cfg.norm_eps)  # (1, C, d)
+    h_last = jax.lax.dynamic_index_in_dim(h[0], n_valid - 1, axis=0)  # (1, d)
+    logits = lm_head(params, cfg, h_last)[0]
+    return logits.astype(jnp.float32), list(new_caches)
+
+
+# ---------------------------------------------------------------------------
 # Decode
 # ---------------------------------------------------------------------------
 
@@ -170,20 +306,32 @@ def decode_step(
     token: jnp.ndarray,  # (B,) int32
     lengths: jnp.ndarray,  # (B,) int32 tokens generated so far
     caches: List[Any],
+    active: Optional[jnp.ndarray] = None,  # (B,) bool — None = all slots live
 ) -> Tuple[jnp.ndarray, List[Any]]:
     """One decode step for every slot. Returns (logits (B, V), new caches).
+
+    ``active`` masks cache/state writes per slot: inactive slots (free, or
+    mid-prefill in the serving engine) pass through unchanged, so batching
+    them into the fixed-shape decode dispatch is harmless. ``None`` keeps
+    the original all-slots behaviour bit-for-bit.
 
     ``serve.decode`` span: see the ``prefill`` note — eager call = dispatch
     cost, jitted call = one trace-time span per compilation.
     """
     with obs.span("serve.decode", batch=int(token.shape[0])):
-        return _decode_step(params, cfg, call, token, lengths, caches)
+        return _decode_step(params, cfg, call, token, lengths, caches, active)
 
 
-def _decode_step(params, cfg, call, token, lengths, caches):
+def _keep_active(active, new, old):
+    """Per-slot select over a (B, ...) cache tensor (batch axis leading)."""
+    sel = active.reshape(active.shape[0], *([1] * (new.ndim - 1)))
+    return jnp.where(sel, new, old)
+
+
+def _decode_step(params, cfg, call, token, lengths, caches, active=None):
     pattern = block_pattern(cfg)
     b = token.shape[0]
-    x = embed(params["embed"], token, dtype=jnp.bfloat16)  # (B, d)
+    x = embed(params["embed"], token, dtype=call.dtype)  # (B, d)
     pos = lengths  # absolute position of the new token
 
     def body(carry, xs):
@@ -209,6 +357,9 @@ def _decode_step(params, cfg, call, token, lengths, caches):
                     lambda c, vv, i: jax.lax.dynamic_update_slice(c, vv[None], (i, 0, 0))
                 )(cache["v"], v.astype(cache["v"].dtype), slot)
                 n_valid = jnp.minimum(pos + 1, s_cache)
+                if active is not None:
+                    k_new = _keep_active(active, k_new, cache["k"])
+                    v_new = _keep_active(active, v_new, cache["v"])
                 out = jax.vmap(
                     lambda qq, kk, vv, nn: decode_attention(qq, kk, vv, nn, None)
                 )(q, k_new, v_new, n_valid)
@@ -219,6 +370,10 @@ def _decode_step(params, cfg, call, token, lengths, caches):
                 out, st = jax.vmap(
                     lambda xx, ss: ssm_decode_step(p["ssm"], xx, ss)
                 )(hn, cache)
+                if active is not None:
+                    st = jax.tree.map(
+                        lambda nw, od: _keep_active(active, nw, od), st, cache
+                    )
                 h = h + out.astype(h.dtype)
                 new_caches.append(st)
             if spec["moe"] or spec["mlp"]:
@@ -240,4 +395,11 @@ def _decode_step(params, cfg, call, token, lengths, caches):
     return logits.astype(jnp.float32), list(new_caches)
 
 
-__all__ = ["init_caches", "prefill", "decode_step", "cache_len_for"]
+__all__ = [
+    "init_caches",
+    "prefill",
+    "prefill_chunk",
+    "decode_step",
+    "cache_len_for",
+    "ring_positions",
+]

@@ -443,3 +443,79 @@ def test_serve_spans(tiny_dense):
     spans = t.drain()
     names = [s.name for s in spans]
     assert "serve.prefill" in names and "serve.decode" in names
+
+
+# ---------------------------------------------------------------------------
+# serving-engine step attribution (launch/serve.py traces)
+# ---------------------------------------------------------------------------
+
+
+def test_attribute_serve_steps_labels():
+    spans = [
+        # step 0: 100ms, 70ms prefill chunks -> prefill-bound
+        _span("serve.step", 0, 100 * MS, attrs={"step": 0}),
+        _span("serve.prefill_chunk", 0, 40 * MS),
+        _span("serve.prefill_chunk", 40 * MS, 70 * MS),
+        _span("serve.decode", 80 * MS, 90 * MS),
+        # step 1: 100ms, decode dominates -> decode-bound
+        _span("serve.step", 200 * MS, 300 * MS, attrs={"step": 1}),
+        _span("serve.decode", 210 * MS, 280 * MS),
+        # step 2: 100ms of bookkeeping only -> admission-idle
+        _span("serve.step", 400 * MS, 500 * MS, attrs={"step": 2}),
+        _span("serve.admit", 400 * MS, 405 * MS),
+    ]
+    out = report.attribute_serve_steps(spans)
+    assert [a.label for a in out] == [
+        "prefill-bound", "decode-bound", "admission-idle"
+    ]
+    assert out[0].prefill_s == pytest.approx(0.070)
+    assert out[1].decode_s == pytest.approx(0.070)
+    assert out[2].admit_s == pytest.approx(0.005)
+
+
+def test_check_serve_coverage():
+    spans = [
+        _span("serve.step", 0, 10 * MS, attrs={"step": 0}),
+        _span("serve.decode", 1 * MS, 9 * MS),
+    ]
+    rows = [
+        {"kind": "serve_step", "step": 0},
+        {"kind": "serve", "policy": "serve-fcfs", "completions": 1},
+    ]
+    # serve-only metrics need no pipeline-summary row
+    assert report.check(spans, rows) == []
+    # a serve_step row with no covering span fails
+    rows2 = rows + [{"kind": "serve_step", "step": 1}]
+    assert any("serve.step" in e for e in report.check(spans, rows2))
+    # serve_step rows without the final summary row fail
+    assert any("summary" in e for e in report.check(spans, rows[:1]))
+
+
+def test_serve_episode_trace_passes_check(tiny_dense, tmp_path):
+    """A real engine episode's trace + metrics must pass report.check and
+    the serve attribution path end-to-end (the CI trace_report contract)."""
+    import jax
+
+    from repro.launch.trace_report import main as trace_report_main
+    from repro.models.transformer import CallConfig, init_model
+    from repro.serve.engine import ServeEngine
+    from repro.serve.request import Request
+
+    trace_p = str(tmp_path / "serve.trace.json")
+    metrics_p = str(tmp_path / "serve.metrics.jsonl")
+    obs.configure(trace_path=trace_p, metrics_path=metrics_p)
+    params = init_model(jax.random.PRNGKey(0), tiny_dense)
+    call = CallConfig(attention_impl="dense", remat="none", kv_chunk=32)
+    rng = np.random.default_rng(0)
+    reqs = [
+        Request(rid=i, prompt=rng.integers(1, 256, size=s).astype(np.int32),
+                max_new_tokens=3, arrival_step=a)
+        for i, (s, a) in enumerate([(12, 0), (5, 0), (9, 2)])
+    ]
+    eng = ServeEngine(params, tiny_dense, call, policy="serve-fcfs",
+                      max_slots=2, max_len=16, prefill_chunk_size=8)
+    eng.run(reqs)
+    obs.shutdown()
+
+    rc = trace_report_main([trace_p, "--metrics", metrics_p, "--check"])
+    assert rc == 0

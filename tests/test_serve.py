@@ -8,7 +8,13 @@ import numpy as np
 import pytest
 
 from repro.models.transformer import CallConfig, forward, init_model, lm_head
-from repro.train.serve import decode_step, init_caches, prefill
+from repro.train.serve import (
+    decode_step,
+    init_caches,
+    prefill,
+    prefill_chunk,
+    ring_positions,
+)
 
 
 def _roundtrip(cfg, rng, capf=1.25, extra=4, s=24, tol=0.3):
@@ -51,6 +57,85 @@ def test_hybrid_decode_no_drop_capacity(tiny_hybrid, rng):
     # capacity_factor large enough that the MoE drops no tokens => decode
     # must match teacher-forced forward up to numerics
     _roundtrip(tiny_hybrid, rng, capf=8.0, tol=0.35)
+
+
+def test_swa_ring_wraparound_regression(tiny_dense, rng):
+    """Decode far past S_cache must match the teacher-forced reference at
+    EVERY position — including the exact wrap boundaries pos = k*S_cache
+    where the ``len % S_cache`` write path starts overwriting."""
+    w = 8
+    cfg = dataclasses.replace(tiny_dense, window=w)
+    params = init_model(jax.random.PRNGKey(0), cfg)
+    call = CallConfig(attention_impl="dense", remat="none", kv_chunk=32)
+    b, s, total = 2, 4, 4 * w + 3  # prefill short, decode across 4 wraps
+    toks = jnp.asarray(rng.integers(0, cfg.vocab, (b, total)), jnp.int32)
+    segs = jnp.ones((b, total), jnp.int32)
+    pos = jnp.arange(total)[None].repeat(b, 0).astype(jnp.int32)
+    full = lm_head(params, cfg, forward(params, cfg, call, toks, segs, pos))
+    _, caches, lens = prefill(params, cfg, call, toks[:, :s], max_len=total)
+    assert caches[0]["k"].shape[2] == w
+    for t in range(s, total):
+        logits, caches = decode_step(params, cfg, call, toks[:, t], lens, caches)
+        lens = lens + 1
+        np.testing.assert_allclose(
+            np.asarray(logits),
+            np.asarray(full[:, t], np.float32),
+            atol=1e-3,
+            err_msg=f"divergence at pos {t} (ring slot {t % w})",
+        )
+
+
+def test_ring_positions_reconstruction():
+    """ring_positions must invert the ``pos % s_cache`` write rule: slot i
+    claims the most recent position < start congruent to i, or invalid."""
+    for s_cache in (4, 8):
+        for start in (0, 1, 3, s_cache - 1, s_cache, s_cache + 1, 3 * s_cache + 2):
+            pos, ok = ring_positions(jnp.int32(start), s_cache)
+            pos, ok = np.asarray(pos), np.asarray(ok)
+            for i in range(s_cache):
+                want = [p for p in range(start) if p % s_cache == i]
+                if want:
+                    assert ok[i] and pos[i] == want[-1], (s_cache, start, i)
+                else:
+                    assert not ok[i], (s_cache, start, i)
+
+
+@pytest.mark.parametrize("chunk", [5, 16])
+def test_prefill_chunk_ring_wraparound(tiny_dense, rng, chunk):
+    """Chunked prefill of a prompt longer than the SWA window must agree
+    with static prefill — both the last-position logits and the ring cache
+    layout — with wraps landing mid-chunk (chunk > window) and across
+    chunks (chunk < window)."""
+    w = 8
+    cfg = dataclasses.replace(tiny_dense, window=w)
+    params = init_model(jax.random.PRNGKey(0), cfg)
+    call = CallConfig(attention_impl="dense", remat="none", kv_chunk=32)
+    s, max_len = 21, 32
+    toks = jnp.asarray(rng.integers(0, cfg.vocab, (1, s)), jnp.int32)
+    logits_ref, caches_ref, _ = prefill(params, cfg, call, toks, max_len=max_len)
+    caches = [
+        jax.tree.map(lambda a: a[:, 0:1], e)
+        for e in init_caches(params, cfg, 1, max_len)
+    ]
+    done, logits = 0, None
+    while done < s:
+        take = min(chunk, s - done)
+        block = np.zeros((1, chunk), np.int32)
+        block[0, :take] = np.asarray(toks)[0, done : done + take]
+        logits, caches = prefill_chunk(
+            params, cfg, call, jnp.asarray(block),
+            jnp.int32(done), jnp.int32(take), caches,
+        )
+        done += take
+    np.testing.assert_allclose(
+        np.asarray(logits), np.asarray(logits_ref[0]), atol=1e-3
+    )
+    # ring layout: every retained position's K must match the static tail
+    np.testing.assert_allclose(
+        np.asarray(caches[0]["k"][:, 0], np.float32),
+        np.asarray(caches_ref[0]["k"][:, 0], np.float32),
+        atol=2e-2,
+    )
 
 
 def test_swa_ring_buffer_bounded(tiny_dense, rng):
