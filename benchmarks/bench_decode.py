@@ -1,0 +1,207 @@
+"""Split-KV flash-decode benchmark: dense vs flash vs flash+int8.
+
+Two kinds of numbers, deliberately separated:
+
+* **measured tokens/s** at CPU-feasible cache lengths (jitted, f32, the
+  XLA split math that is also the kernel's dispatch target off-TPU) —
+  a smoke-level sanity signal, not the HBM story;
+* an **analytic HBM bytes/token model** evaluated at the paper-relevant
+  cache lengths (4K / 64K / 500K). Decode attention is bandwidth-bound:
+  one query row cannot amortize the cache read, so bytes/token IS the
+  performance model, and CPU wall-clock at 500K would measure the host
+  memory bus instead.
+
+Model (per layer, per slot, attention only; f32 native, f32 partials):
+
+  dense       read K+V (4 B/elt) + the materialized (Hkv, G, S) f32 score
+              tensor written + re-read across the softmax reduction
+              boundary (two einsums cannot fuse through the row max/sum)
+  flash       read K+V once + tiny per-stripe partial (m, l, acc) state
+              written + re-read by the combine
+  flash+int8  K+V at 1 B/elt + 4 B per (row, head) scale + the same
+              partials — ~4x less cache traffic than f32 dense
+
+Slot capacity: serving slots per GiB of cache at 64K context for a
+0.5B-class geometry (24 layers, Hkv=2, D=64) under f32 / bf16 / int8
+storage. int8 keeps 4 D/(D+4) = 3.76x more slots than f32 at D=64.
+
+Writes ``BENCH_decode.json``. ``--check`` (CI) fails unless
+  * flash analytic bytes/token <= dense at every length,
+  * int8 slot capacity >= 3x native (f32 — the bit-exact serving config,
+    DESIGN.md §13/§14; the bf16 row is reported unaged),
+  * the split-KV math agrees with the dense oracle numerically on a
+    random ragged batch.
+"""
+
+from __future__ import annotations
+
+import json
+import math
+
+import numpy as np
+
+from .common import emit, timeit
+
+GEOM = dict(hq=8, hkv=2, d=64)  # G = 4 query group, 0.5B-class heads
+BLOCK_S = 128
+LENGTHS = (4096, 65536, 500_000)  # 4K / 64K / the 500K outlier
+MEASURE_MAX_S = 65536  # CPU timing beyond this measures the host DRAM bus
+CAPACITY = dict(n_layers=24, hkv=2, d=64, context=65536)
+
+
+def bytes_per_token(impl: str, s: int, hq: int, hkv: int, d: int) -> int:
+    """Analytic decode-attention HBM bytes for ONE token of ONE slot."""
+    g = hq // hkv
+    kv_elts = 2 * s * hkv * d
+    n_split = math.ceil(s / BLOCK_S)
+    # per-stripe (m, l) and (G, D) acc partials, written then re-read
+    partials = 2 * 4 * (hkv * n_split * g * (2 + d))
+    if impl == "dense":
+        scores = 2 * 4 * (hkv * g * s)  # f32 write + read at the reduction
+        return kv_elts * 4 + scores
+    if impl == "flash":
+        return kv_elts * 4 + partials
+    if impl == "flash_int8":
+        scales = 2 * s * hkv * 4
+        return kv_elts * 1 + scales + partials
+    raise ValueError(impl)
+
+
+def slot_capacity_table():
+    """Concurrent 64K-context slots fitting in one 16 GiB HBM (v5e-class)."""
+    n, hkv, d, L = (CAPACITY[k] for k in ("n_layers", "hkv", "d", "context"))
+    rows = 2 * n * L * hkv  # K and V, every layer, every position
+    per_slot = {
+        "f32": rows * d * 4,
+        "bf16": rows * d * 2,
+        "int8": rows * (d + 4),  # 1 B/elt + f32 scale per (row, head)
+    }
+    hbm = 16 << 30
+    return {
+        name: {"slot_bytes": b, "slots_per_hbm": hbm // b}
+        for name, b in per_slot.items()
+    }
+
+
+def _measured(s: int, batch: int = 4, seed: int = 0):
+    import jax
+    import jax.numpy as jnp
+
+    from repro.kernels.flash_decode import flash_decode_xla, quantize_kv
+    from repro.models.attention import decode_attention
+
+    hq, hkv, d = GEOM["hq"], GEOM["hkv"], GEOM["d"]
+    rng = np.random.default_rng(seed)
+    q = jnp.asarray(rng.normal(size=(batch, hq, d)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(batch, s, hkv, d)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(batch, s, hkv, d)), jnp.float32)
+    clen = jnp.asarray(rng.integers(s // 2, s + 1, size=batch), jnp.int32)
+    kq, ks = quantize_kv(k)
+    vq, vs = quantize_kv(v)
+
+    dense = jax.jit(jax.vmap(lambda qq, kk, vv, nn: decode_attention(qq, kk, vv, nn)))
+    flash = jax.jit(lambda *a: flash_decode_xla(*a, block_s=BLOCK_S))
+    flash8 = jax.jit(
+        lambda qx, kx, vx, nx, ksx, vsx: flash_decode_xla(
+            qx, kx, vx, nx, k_scale=ksx, v_scale=vsx, block_s=BLOCK_S
+        )
+    )
+    fns = {
+        "dense": lambda: jax.block_until_ready(dense(q, k, v, clen)),
+        "flash": lambda: jax.block_until_ready(flash(q, k, v, clen)),
+        "flash_int8": lambda: jax.block_until_ready(
+            flash8(q, kq, vq, clen, ks, vs)
+        ),
+    }
+    out = {}
+    for name, fn in fns.items():
+        us = timeit(fn, repeats=5, warmup=2)
+        out[name] = {"us_per_step": us, "tokens_per_s": batch / (us * 1e-6)}
+    return out
+
+
+def _agreement(seed: int = 0) -> float:
+    """Max |flash - dense| over a ragged batch — the numeric gate."""
+    import jax.numpy as jnp
+
+    from repro.kernels.flash_decode import flash_decode_xla
+    from repro.models.attention import decode_attention
+
+    hq, hkv, d, s, batch = GEOM["hq"], GEOM["hkv"], GEOM["d"], 512, 8
+    rng = np.random.default_rng(seed)
+    q = jnp.asarray(rng.normal(size=(batch, hq, d)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(batch, s, hkv, d)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(batch, s, hkv, d)), jnp.float32)
+    clen = jnp.asarray(rng.integers(1, s + 1, size=batch), jnp.int32)
+    o_flash = flash_decode_xla(q, k, v, clen, block_s=BLOCK_S)
+    o_dense = jnp.stack(
+        [decode_attention(q[i], k[i], v[i], clen[i]) for i in range(batch)]
+    )
+    return float(np.max(np.abs(np.asarray(o_flash) - np.asarray(o_dense))))
+
+
+def run(check: bool = False):
+    results: dict = {"geom": GEOM, "block_s": BLOCK_S, "lengths": {}}
+    failures = []
+
+    for s in LENGTHS:
+        row: dict = {"bytes_per_token": {}, "measured": None}
+        for impl in ("dense", "flash", "flash_int8"):
+            row["bytes_per_token"][impl] = bytes_per_token(impl, s, **GEOM)
+        if s <= MEASURE_MAX_S:
+            row["measured"] = _measured(s)
+        results["lengths"][str(s)] = row
+        bpt = row["bytes_per_token"]
+        saving = bpt["dense"] / bpt["flash_int8"]
+        derived = (
+            f"bytes/tok dense={bpt['dense']} flash={bpt['flash']} "
+            f"int8={bpt['flash_int8']} ({saving:.2f}x less than dense)"
+        )
+        if row["measured"]:
+            derived += (
+                f" tok/s dense={row['measured']['dense']['tokens_per_s']:.0f}"
+                f" flash={row['measured']['flash']['tokens_per_s']:.0f}"
+                f" int8={row['measured']['flash_int8']['tokens_per_s']:.0f}"
+            )
+        emit(f"decode/S{s}", 0.0, derived)
+        if bpt["flash"] > bpt["dense"]:
+            failures.append(
+                f"S={s}: flash bytes/token {bpt['flash']} exceeds dense "
+                f"{bpt['dense']}"
+            )
+
+    cap = slot_capacity_table()
+    results["slot_capacity"] = cap
+    # ratio from slot bytes, not the floored slot counts
+    ratio = cap["f32"]["slot_bytes"] / cap["int8"]["slot_bytes"]
+    results["slot_capacity"]["int8_vs_f32"] = ratio
+    emit(
+        "decode/slot_capacity", 0.0,
+        f"64K slots/16GiB f32={cap['f32']['slots_per_hbm']} "
+        f"bf16={cap['bf16']['slots_per_hbm']} "
+        f"int8={cap['int8']['slots_per_hbm']} (int8 {ratio:.2f}x f32)",
+    )
+    if ratio < 3.0:
+        failures.append(
+            f"int8 slot capacity only {ratio:.2f}x native f32 (gate: >= 3x)"
+        )
+
+    max_err = _agreement()
+    results["flash_vs_dense_max_err"] = max_err
+    emit("decode/flash_vs_dense", 0.0, f"max_abs_err={max_err:.2e}")
+    if max_err > 1e-5:
+        failures.append(f"flash-vs-dense max err {max_err:.2e} > 1e-5")
+
+    results["gate"] = {"ok": not failures, "failures": failures}
+    with open("BENCH_decode.json", "w") as f:
+        json.dump(results, f, indent=2)
+
+    if check and failures:
+        raise SystemExit("decode bench gate: " + "; ".join(failures))
+    return results
+
+
+if __name__ == "__main__":
+    import sys
+
+    run(check="--check" in sys.argv)

@@ -35,9 +35,12 @@ _CFG = ArchConfig(
 )
 # f32 compute: at this scale random-init logits sit ~5e-3 apart while bf16
 # fusion rounding differs ~7e-3 between the chunked and static prefill
-# programs — bit-exactness needs the noise floor far below the top-2 gap
+# programs — bit-exactness needs the noise floor far below the top-2 gap.
+# decode_impl="flash": the split-KV kernel serves every decode step, with
+# the static reference sharing the same CallConfig so the equivalence gate
+# audits flash-vs-flash (the serving contract, DESIGN.md §14)
 _CALL = CallConfig(attention_impl="dense", remat="none", kv_chunk=64,
-                   dtype="float32")
+                   dtype="float32", decode_impl="flash")
 
 # scaled-down traffic: the outlier is ~20 prefill chunks of head-of-line
 # blocking for FCFS at chunk=8 — the 500K pathology in miniature. Slots

@@ -13,6 +13,7 @@ Prints ``name,us_per_call,derived`` CSV rows (stub contract). Sections:
   kernels — kernel microbench + Pallas correctness/structure
   flash   — segment-block-sparse tile skipping (writes BENCH_flash.json)
   serve   — continuous-batching TTFT/throughput (writes BENCH_serve.json)
+  decode  — split-KV decode bytes/token + slot capacity (BENCH_decode.json)
   roofline— summary over the dry-run artifact (if present)
 """
 
@@ -27,6 +28,7 @@ def main() -> None:
         bench_attn_cp,
         bench_batchsize,
         bench_comm_table,
+        bench_decode,
         bench_distributions,
         bench_e2e_speedup,
         bench_flash,
@@ -52,6 +54,7 @@ def main() -> None:
     bench_kernels.run()
     bench_flash.run()  # writes BENCH_flash.json
     bench_serve.run()  # writes BENCH_serve.json
+    bench_decode.run()  # writes BENCH_decode.json
     bench_v5e_projection.run(iters=6)
     if os.path.exists("artifacts/dryrun.jsonl"):
         from . import roofline

@@ -76,6 +76,28 @@ def _finalize(carry: Carry, out_shape, dtype) -> jnp.ndarray:
     return out.reshape(out_shape).astype(dtype)
 
 
+def merge_softmax_partials(
+    m: jnp.ndarray,  # (..., N, ...) stripe maxima, split axis = `axis`
+    l: jnp.ndarray,  # same shape as m — stripe sum-exp
+    acc: jnp.ndarray,  # m.shape + (D,) — stripe weighted-V accumulators
+    axis: int = 0,
+) -> Carry:
+    """Merge independent online-softmax partial states along ``axis``.
+
+    This is the SAME merge the ring step applies incrementally (rescale by
+    ``exp(m_i - m)`` and add) — factored out so split-KV decode
+    (kernels/flash_decode.py) combines its parallel stripe partials under
+    exactly the contract the CP ring's sequential carry obeys: the merged
+    (m, l, acc) is independent of how the KV axis was split. Empty partials
+    (m = -inf sentinel, l = 0) merge as identities.
+    """
+    m_tot = jnp.max(m, axis=axis)
+    w = jnp.exp(m - jnp.expand_dims(m_tot, axis))  # dead stripes -> 0
+    l_tot = jnp.sum(l * w, axis=axis)
+    acc_tot = jnp.sum(acc * w[..., None], axis=axis if axis >= 0 else axis - 1)
+    return m_tot, l_tot, acc_tot
+
+
 def _ring_step_xla(
     carry: Carry,
     qg: jnp.ndarray,  # (T, Hkv, G, D) f32
@@ -306,6 +328,7 @@ def ring_attention_rows(
 
 __all__ = [
     "all_gather_kv",
+    "merge_softmax_partials",
     "ring_attention",
     "ring_attention_rows",
     "ring_step_pallas",

@@ -1,6 +1,7 @@
 """Pallas TPU kernels (validated in interpret mode on CPU; Mosaic on TPU).
 
 flash_attention.py — segment-block-sparse flash attention fwd + two-sweep bwd
+flash_decode.py    — split-KV decode kernel + int8 KV-cache quantization
 sparsity.py        — per-block segment metadata + live/full tile maps
 ops.py             — jit'd + custom_vjp public wrappers (training hot path)
 ssd_scan.py        — Mamba2 SSD chunked scan fwd
@@ -9,11 +10,15 @@ ref.py             — pure-jnp oracles
 """
 
 from .backend import resolve_interpret, set_interpret_override
-from .ops import flash_attention, ssd_scan_op
+from .flash_decode import dequantize_kv, quantize_kv
+from .ops import flash_attention, flash_decode, ssd_scan_op
 from .sparsity import live_fraction, packed_live_fraction
 
 __all__ = [
     "flash_attention",
+    "flash_decode",
+    "quantize_kv",
+    "dequantize_kv",
     "ssd_scan_op",
     "resolve_interpret",
     "set_interpret_override",

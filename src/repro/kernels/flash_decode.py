@@ -1,0 +1,296 @@
+"""Pallas split-KV flash-decode kernel + int8 KV-cache quantization.
+
+Decode is the regime the training flash kernel (flash_attention.py) is
+mis-shaped for: ONE query row per slot against a long (S, Hkv, D) cache.
+Tiling the query axis buys nothing; the only parallelism worth having is
+over the KV axis. Following the flex_decoding pattern, the grid is
+
+    (B, Hkv, SPLIT_KV)
+
+and each program reduces one KV *stripe* of ``block_s`` cache rows into a
+partial online-softmax state (m, l, acc) for the whole (G = Hq/Hkv, D)
+query group of its kv head — GQA is handled exactly like the PR-4
+in-kernel backward: the group dimension rides inside the program, so
+memory does not scale with g. Partials land in (B, Hkv, SPLIT_KV, G[, D])
+buffers and a combine step merges them with
+``dist.collectives.merge_softmax_partials`` — the SAME merge the CP ring
+applies sequentially, so the split-KV contract is literally the ring
+contract evaluated in parallel.
+
+Ragged batching: ``cache_len`` (B,) arrives via scalar prefetch; every
+stripe masks ``idx < cache_len[b]`` (ring caches: every written position
+is valid), and a sliding window additionally masks
+``idx >= cache_len[b] - window``. Stripes entirely outside
+``[cache_len - window, cache_len)`` are *dead*: the program skips the
+loads/FLOPs (``pl.when``) and emits the identity partial
+(m = -inf, l = 0, acc = 0), which the merge ignores.
+
+int8 KV cache: K/V stripes may arrive as int8 with per-row, per-head
+float32 scales (``quantize_kv`` — absmax over D / 127, the
+optim/compression.py idiom). The kernel dequantizes each stripe
+in-register right before the dot, so HBM traffic per token drops to
+~1 byte/element + 4 bytes/row-head for scales.
+
+Layouts (wrapper convention = the serving cache convention):
+q (B, Hq, D) one token per slot; k/v (B, S, Hkv, D); scales (B, S, Hkv).
+``interpret=None`` auto-detects the backend (kernels/backend.py).
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from .backend import resolve_interpret
+
+NEG = -1e30
+DEFAULT_BLOCK_S = 128
+
+
+# ---------------------------------------------------------------------------
+# int8 KV quantization (per cache row, per kv head)
+# ---------------------------------------------------------------------------
+
+
+def quantize_kv(x: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """(..., Hkv, D) float -> (int8 values, (..., Hkv) float32 scales).
+
+    Symmetric absmax quantization per (cache row, kv head): scale =
+    absmax/127, so |dequant(x) - x| <= scale/2 elementwise (round-half
+    error; the clip never binds because absmax/scale = 127 exactly).
+    All-zero rows (never-written ring slots, padding) get scale 0 and
+    quantize to 0."""
+    xf = x.astype(jnp.float32)
+    scale = jnp.max(jnp.abs(xf), axis=-1) / 127.0
+    q = jnp.clip(
+        jnp.round(xf / jnp.maximum(scale, 1e-12)[..., None]), -127, 127
+    ).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_kv(q: jnp.ndarray, scale: jnp.ndarray, dtype=jnp.float32) -> jnp.ndarray:
+    """Inverse of ``quantize_kv`` (up to the <= scale/2 rounding error)."""
+    return (q.astype(jnp.float32) * scale[..., None]).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Kernel: one program = one (slot, kv head, KV stripe) partial reduction
+# ---------------------------------------------------------------------------
+
+
+def _stripe_live(clen, start: int, block_s: int, window: Optional[int]):
+    """Is any row of stripe [start, start + block_s) attendable?"""
+    live = start < clen
+    if window is not None:
+        live = jnp.logical_and(live, start + block_s > clen - window)
+    return live
+
+
+def _decode_kernel(
+    len_ref,  # scalar prefetch: (B,) int32 valid cache rows per slot
+    q_ref, k_ref, v_ref, *refs,
+    scale: float, window: Optional[int], block_s: int, quantized: bool,
+):
+    if quantized:
+        ks_ref, vs_ref, m_ref, l_ref, acc_ref = refs
+    else:
+        m_ref, l_ref, acc_ref = refs
+    b = pl.program_id(0)
+    sb = pl.program_id(2)
+    clen = len_ref[b]
+    start = sb * block_s
+    live = _stripe_live(clen, start, block_s, window)
+
+    @pl.when(jnp.logical_not(live))
+    def _dead():
+        # identity partial: merge_softmax_partials weighs it exp(-inf) = 0
+        m_ref[0, 0, 0] = jnp.full_like(m_ref[0, 0, 0], NEG)
+        l_ref[0, 0, 0] = jnp.zeros_like(l_ref[0, 0, 0])
+        acc_ref[0, 0, 0] = jnp.zeros_like(acc_ref[0, 0, 0])
+
+    @pl.when(live)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)  # (G, D)
+        if quantized:
+            # in-register dequant: int8 stripe * per-row-per-head scale
+            k = k_ref[0, 0].astype(jnp.float32) * ks_ref[0, 0].reshape(block_s, 1)
+            v = v_ref[0, 0].astype(jnp.float32) * vs_ref[0, 0].reshape(block_s, 1)
+        else:
+            k = k_ref[0, 0].astype(jnp.float32)
+            v = v_ref[0, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        ) * scale  # (G, BS)
+        idx = start + jax.lax.broadcasted_iota(jnp.int32, (1, block_s), 1)
+        mask = idx < clen
+        if window is not None:
+            mask = jnp.logical_and(mask, idx >= clen - window)
+        s = jnp.where(mask, s, NEG)
+        m = jnp.max(s, axis=1, keepdims=True)  # (G, 1)
+        p = jnp.exp(s - m) * mask  # fully-masked stripe -> p = 0, l = 0
+        l = jnp.sum(p, axis=1, keepdims=True)
+        acc = jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+        )  # (G, D)
+        m_ref[0, 0, 0] = m[:, 0]
+        l_ref[0, 0, 0] = l[:, 0]
+        acc_ref[0, 0, 0] = acc
+
+
+def _pad_cache(x, pad):
+    return jnp.pad(x, ((0, 0), (0, pad)) + ((0, 0),) * (x.ndim - 2)) if pad else x
+
+
+def _prep(q, k_cache, v_cache, k_scale, v_scale, block_s):
+    """Shared wrapper prep: GQA grouping, stripe padding, head-leading KV."""
+    b, hq, d = q.shape
+    s, hkv = k_cache.shape[1], k_cache.shape[2]
+    g = hq // hkv
+    block_s = min(block_s, s)
+    pad = (-s) % block_s
+    k_cache, v_cache = _pad_cache(k_cache, pad), _pad_cache(v_cache, pad)
+    if k_scale is not None:
+        k_scale, v_scale = _pad_cache(k_scale, pad), _pad_cache(v_scale, pad)
+    n_split = (s + pad) // block_s
+    qg = q.reshape(b, hkv, g, d)  # heads are group-contiguous (attention.py)
+    kt = jnp.transpose(k_cache, (0, 2, 1, 3))  # (B, Hkv, S', D)
+    vt = jnp.transpose(v_cache, (0, 2, 1, 3))
+    st = (
+        (jnp.transpose(k_scale, (0, 2, 1)), jnp.transpose(v_scale, (0, 2, 1)))
+        if k_scale is not None
+        else None
+    )
+    return qg, kt, vt, st, block_s, n_split, g
+
+
+def _combine(m_p, l_p, acc_p, b, hq, d, dtype):
+    from ..dist.collectives import merge_softmax_partials  # lazy: avoids cycle
+
+    m, l, acc = merge_softmax_partials(m_p, l_p, acc_p, axis=2)
+    out = jnp.where(l[..., None] > 0, acc / jnp.maximum(l[..., None], 1e-30), 0.0)
+    return out.reshape(b, hq, d).astype(dtype)
+
+
+def flash_decode(
+    q: jnp.ndarray,  # (B, Hq, D) — one new token per slot
+    k_cache: jnp.ndarray,  # (B, S, Hkv, D) float — or int8 with k_scale
+    v_cache: jnp.ndarray,
+    cache_len: jnp.ndarray,  # (B,) int32 valid rows per slot (ragged)
+    window: Optional[int] = None,
+    k_scale: Optional[jnp.ndarray] = None,  # (B, S, Hkv) f32 — int8 cache
+    v_scale: Optional[jnp.ndarray] = None,
+    block_s: int = DEFAULT_BLOCK_S,
+    interpret: Optional[bool] = None,
+) -> jnp.ndarray:
+    """Split-KV decode attention over a batch of ragged cache slots."""
+    b, hq, d = q.shape
+    quantized = k_scale is not None
+    qg, kt, vt, st, block_s, n_split, g = _prep(
+        q, k_cache, v_cache, k_scale, v_scale, block_s
+    )
+    kernel = functools.partial(
+        _decode_kernel,
+        scale=1.0 / math.sqrt(d),
+        window=window,
+        block_s=block_s,
+        quantized=quantized,
+    )
+    hkv = kt.shape[1]
+    in_specs = [
+        pl.BlockSpec((1, 1, g, d), lambda bi, h, sb, *_: (bi, h, 0, 0)),
+        pl.BlockSpec((1, 1, block_s, d), lambda bi, h, sb, *_: (bi, h, sb, 0)),
+        pl.BlockSpec((1, 1, block_s, d), lambda bi, h, sb, *_: (bi, h, sb, 0)),
+    ]
+    operands = [qg, kt, vt]
+    if quantized:
+        in_specs += [
+            pl.BlockSpec((1, 1, block_s), lambda bi, h, sb, *_: (bi, h, sb)),
+            pl.BlockSpec((1, 1, block_s), lambda bi, h, sb, *_: (bi, h, sb)),
+        ]
+        operands += list(st)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(b, hkv, n_split),
+        in_specs=in_specs,
+        out_specs=[
+            pl.BlockSpec((1, 1, 1, g), lambda bi, h, sb, *_: (bi, h, sb, 0)),
+            pl.BlockSpec((1, 1, 1, g), lambda bi, h, sb, *_: (bi, h, sb, 0)),
+            pl.BlockSpec((1, 1, 1, g, d), lambda bi, h, sb, *_: (bi, h, sb, 0, 0)),
+        ],
+    )
+    m_p, l_p, acc_p = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((b, hkv, n_split, g), jnp.float32),
+            jax.ShapeDtypeStruct((b, hkv, n_split, g), jnp.float32),
+            jax.ShapeDtypeStruct((b, hkv, n_split, g, d), jnp.float32),
+        ],
+        interpret=resolve_interpret(interpret),
+    )(cache_len.astype(jnp.int32), *operands)
+    return _combine(m_p, l_p, acc_p, b, hq, d, q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# XLA reference: the identical split-KV math, no Pallas
+# ---------------------------------------------------------------------------
+
+
+def flash_decode_xla(
+    q: jnp.ndarray,
+    k_cache: jnp.ndarray,
+    v_cache: jnp.ndarray,
+    cache_len: jnp.ndarray,
+    window: Optional[int] = None,
+    k_scale: Optional[jnp.ndarray] = None,
+    v_scale: Optional[jnp.ndarray] = None,
+    block_s: int = DEFAULT_BLOCK_S,
+) -> jnp.ndarray:
+    """Pure-XLA fallback computing the SAME stripe partials + merge as the
+    kernel (per-stripe masked softmax states combined with the ring merge).
+    This is the reference the kernel is validated against and the dispatch
+    target when Pallas is unavailable."""
+    b, hq, d = q.shape
+    qg, kt, vt, st, block_s, n_split, g = _prep(
+        q, k_cache, v_cache, k_scale, v_scale, block_s
+    )
+    hkv = kt.shape[1]
+    ks = kt.reshape(b, hkv, n_split, block_s, d)
+    vs = vt.reshape(b, hkv, n_split, block_s, d)
+    if st is not None:
+        ksc = st[0].reshape(b, hkv, n_split, block_s)
+        vsc = st[1].reshape(b, hkv, n_split, block_s)
+        ks = ks.astype(jnp.float32) * ksc[..., None]
+        vs = vs.astype(jnp.float32) * vsc[..., None]
+    scale = 1.0 / math.sqrt(d)
+    s = jnp.einsum(
+        "bhgd,bhnsd->bhngs", qg.astype(jnp.float32), ks,
+        preferred_element_type=jnp.float32,
+    ) * scale  # (B, Hkv, n_split, G, BS)
+    idx = jnp.arange(n_split * block_s, dtype=jnp.int32).reshape(n_split, block_s)
+    clen = cache_len.astype(jnp.int32).reshape(b, 1, 1, 1, 1)
+    mask = idx[None, None, :, None, :] < clen
+    if window is not None:
+        mask = jnp.logical_and(mask, idx[None, None, :, None, :] >= clen - window)
+    s = jnp.where(mask, s, NEG)
+    m_p = jnp.max(s, axis=-1)
+    p = jnp.exp(s - m_p[..., None]) * mask
+    l_p = jnp.sum(p, axis=-1)
+    acc_p = jnp.einsum("bhngs,bhnsd->bhngd", p, vs,
+                       preferred_element_type=jnp.float32)
+    return _combine(m_p, l_p, acc_p, b, hq, d, q.dtype)
+
+
+__all__ = [
+    "flash_decode",
+    "flash_decode_xla",
+    "quantize_kv",
+    "dequantize_kv",
+    "DEFAULT_BLOCK_S",
+]

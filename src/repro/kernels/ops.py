@@ -21,6 +21,8 @@ import jax.numpy as jnp
 
 from .backend import resolve_interpret
 from .flash_attention import flash_attention_bwd, flash_attention_fwd
+from .flash_decode import flash_decode as _flash_decode_pallas
+from .flash_decode import flash_decode_xla
 from .ssd_scan import ssd_scan
 
 
@@ -115,4 +117,37 @@ def ssd_scan_op(x, dt, a_neg, b, c, seg, chunk: int = 128,
                     interpret=resolve_interpret(interpret))
 
 
-__all__ = ["flash_attention", "ssd_scan_op"]
+def flash_decode(
+    q: jnp.ndarray,  # (B, Hq, D) — one new token per slot
+    k_cache: jnp.ndarray,  # (B, S, Hkv, D) — or int8 with k_scale/v_scale
+    v_cache: jnp.ndarray,
+    cache_len: jnp.ndarray,  # (B,) int32 valid cache rows per slot
+    window: Optional[int] = None,
+    k_scale: Optional[jnp.ndarray] = None,  # (B, S, Hkv) f32 int8-cache scales
+    v_scale: Optional[jnp.ndarray] = None,
+    block_s: int = 128,
+    via: str = "pallas",
+    interpret: Optional[bool] = None,
+) -> jnp.ndarray:
+    """Split-KV flash decode (kernels/flash_decode.py) — the serving decode
+    hot path dispatched by ``CallConfig.decode_impl="flash"``.
+
+    Forward-only (no custom_vjp: decode never backpropagates). ``via="xla"``
+    selects the pure-XLA reference computing the identical stripe partials +
+    ring merge — the validation oracle and the no-Pallas fallback. Lowering
+    mode for ``via="pallas"`` is backend-aware (kernels/backend.py)."""
+    if via == "xla":
+        return flash_decode_xla(
+            q, k_cache, v_cache, cache_len, window=window,
+            k_scale=k_scale, v_scale=v_scale, block_s=block_s,
+        )
+    if via != "pallas":
+        raise ValueError(f"via must be 'pallas' or 'xla', got {via!r}")
+    return _flash_decode_pallas(
+        q, k_cache, v_cache, cache_len, window=window,
+        k_scale=k_scale, v_scale=v_scale, block_s=block_s,
+        interpret=resolve_interpret(interpret),
+    )
+
+
+__all__ = ["flash_attention", "flash_decode", "ssd_scan_op"]

@@ -44,6 +44,14 @@ def main(argv=None):
     ap.add_argument("--metrics-jsonl", default=None, metavar="PATH",
                     help="write one serve_step row per engine step + a final "
                          "serve summary row via repro.obs")
+    ap.add_argument("--decode-impl", default="dense",
+                    choices=("dense", "flash"),
+                    help="decode attention kernel: dense XLA or the split-KV "
+                         "Pallas flash-decode kernel (kernels/flash_decode.py)")
+    ap.add_argument("--kv-cache-dtype", default="native",
+                    choices=("native", "int8"),
+                    help="KV-cache storage: native compute dtype or int8 with "
+                         "per-row absmax scales (~4x f32 slot capacity)")
     ap.add_argument("--reduced", action="store_true",
                     help="use the smoke-size config (CPU)")
     ap.add_argument("--no-verify", action="store_true",
@@ -75,7 +83,9 @@ def main(argv=None):
           f"chunk={args.prefill_chunk} max_len={max_len}")
 
     params = init_model(jax.random.PRNGKey(args.seed), cfg)
-    call = CallConfig(attention_impl="dense", remat="none", kv_chunk=64)
+    call = CallConfig(attention_impl="dense", remat="none", kv_chunk=64,
+                      decode_impl=args.decode_impl,
+                      kv_cache_dtype=args.kv_cache_dtype)
 
     if args.trace_out or args.metrics_jsonl:
         obs.configure(trace_path=args.trace_out, metrics_path=args.metrics_jsonl)

@@ -54,6 +54,8 @@ from .ssm import ssm_block, ssm_decode_state, ssm_decode_step, ssm_init
 
 
 ATTENTION_IMPL_CHOICES = ("dense", "chunked", "flash")
+DECODE_IMPL_CHOICES = ("dense", "flash")
+KV_CACHE_DTYPE_CHOICES = ("native", "int8")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -72,6 +74,14 @@ class CallConfig:
     capacity_factor: float = 1.25
     moe_group: int = 4096  # token group size for MoE routing
     dtype: Any = jnp.bfloat16  # activation/compute dtype (f32 for exactness tests)
+    # serving decode path: "dense" = XLA decode_attention fallback; "flash" =
+    # split-KV Pallas kernel (kernels/flash_decode.py) — grid over
+    # (slot, kv head, KV stripe), ragged cache_len masking, stripe skipping
+    decode_impl: str = "dense"
+    decode_block_s: int = 128  # split-KV stripe length (cache rows/program)
+    # KV-cache storage: "native" follows `dtype`; "int8" stores quantized
+    # K/V + per-row-per-head f32 scales, dequantized in-kernel at decode
+    kv_cache_dtype: str = "native"
     # DACP dist-region exchange: "gather" = KV all-gather (Eq. 15 volume, via
     # shard_fn); "ring" = repro.dist.collectives stripe exchange (O(S/N) KV
     # memory per rank — the memory-bound regime)
@@ -84,6 +94,16 @@ class CallConfig:
             raise ValueError(
                 f"attention_impl must be one of {ATTENTION_IMPL_CHOICES}, "
                 f"got {self.attention_impl!r}"
+            )
+        if self.decode_impl not in DECODE_IMPL_CHOICES:
+            raise ValueError(
+                f"decode_impl must be one of {DECODE_IMPL_CHOICES}, "
+                f"got {self.decode_impl!r}"
+            )
+        if self.kv_cache_dtype not in KV_CACHE_DTYPE_CHOICES:
+            raise ValueError(
+                f"kv_cache_dtype must be one of {KV_CACHE_DTYPE_CHOICES}, "
+                f"got {self.kv_cache_dtype!r}"
             )
 
 
@@ -455,6 +475,8 @@ def lm_loss(
 
 __all__ = [
     "ATTENTION_IMPL_CHOICES",
+    "DECODE_IMPL_CHOICES",
+    "KV_CACHE_DTYPE_CHOICES",
     "CallConfig",
     "block_pattern",
     "init_model",

@@ -434,6 +434,21 @@ def format_report(
             f"occupancy {float(sv.get('mean_occupancy', 0.0)):.2f}, "
             f"{int(sv.get('evictions', 0))} evictions"
         )
+        # decode path + mean device-cache footprint per step (fall back to
+        # the per-step serve_step rows for episodes without a summary field)
+        kv = sv.get("mean_kv_cache_bytes")
+        if kv is None:
+            steps_kv = [
+                float(r["kv_cache_bytes"])
+                for r in _serve_step_rows(rows)
+                if "kv_cache_bytes" in r
+            ]
+            kv = sum(steps_kv) / len(steps_kv) if steps_kv else None
+        if kv is not None:
+            lines.append(
+                f"serve cache: decode_impl={sv.get('decode_impl', 'dense')}, "
+                f"mean {float(kv) / 1024.0:.1f} KiB KV/SSM cache per step"
+            )
     return "\n".join(lines)
 
 

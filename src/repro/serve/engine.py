@@ -64,6 +64,10 @@ class ServeStepReport:
     # completes this step joins the same step's decode batch
     prefill_budget: int
     occupancy: float
+    # device KV/SSM cache bytes held by occupied slots at end of step, and
+    # which decode kernel served it (CallConfig.decode_impl)
+    kv_cache_bytes: int = 0
+    decode_impl: str = "dense"
 
     @property
     def budget_utilization(self) -> float:
@@ -131,9 +135,12 @@ class ServeEngine:
         self.cfg = cfg
         self.policy = get_serve_policy(policy)
         # cache dtype follows the compute dtype: bf16 serving by default,
-        # f32 when the caller needs association-order-stable numerics
+        # f32 when the caller needs association-order-stable numerics —
+        # unless the cache lanes are int8-quantized (call.kv_cache_dtype)
         self.buffer = SequenceBuffer(params, cfg, max_slots, max_len,
-                                     dtype=call.dtype)
+                                     dtype=call.dtype,
+                                     kv_cache_dtype=call.kv_cache_dtype)
+        self.decode_impl = call.decode_impl
         self.chunk = prefill_chunk_size
         # default: one full chunk of prefill headroom on top of the decode
         # batch, so decode never starves prefill to zero by itself
@@ -262,6 +269,8 @@ class ServeEngine:
             token_budget=self.token_budget,
             prefill_budget=state.prefill_budget,
             occupancy=self.buffer.occupancy,
+            kv_cache_bytes=self.buffer.kv_cache_bytes,
+            decode_impl=self.decode_impl,
         )
         self.reports.append(report)
         obs.emit(
@@ -279,6 +288,8 @@ class ServeEngine:
                 "prefill_tokens": report.prefill_tokens,
                 "decode_tokens": report.decode_tokens,
                 "occupancy": report.occupancy,
+                "kv_cache_bytes": report.kv_cache_bytes,
+                "decode_impl": report.decode_impl,
             }
         )
         self.step_i += 1
@@ -442,6 +453,10 @@ class ServeEngine:
                 "mean_occupancy": float(
                     np.mean([r.occupancy for r in self.reports])
                 ),
+                "mean_kv_cache_bytes": float(
+                    np.mean([r.kv_cache_bytes for r in self.reports])
+                ),
+                "decode_impl": self.decode_impl,
                 "evictions": sum(c.evictions for c in cs),
             }
         )

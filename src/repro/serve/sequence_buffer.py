@@ -42,6 +42,7 @@ class SequenceBuffer:
         max_slots: int,
         max_len: int,
         dtype=None,
+        kv_cache_dtype: str = "native",
     ):
         if max_slots < 1:
             raise ValueError(f"max_slots must be >= 1, got {max_slots}")
@@ -49,8 +50,15 @@ class SequenceBuffer:
         self.max_slots = max_slots
         self.max_len = max_len
         self.s_cache = cache_len_for(cfg, max_len)
+        self.kv_cache_dtype = kv_cache_dtype
         kw = {} if dtype is None else {"dtype": dtype}
-        self.caches: List[Any] = init_caches(params, cfg, max_slots, max_len, **kw)
+        self.caches: List[Any] = init_caches(
+            params, cfg, max_slots, max_len, kv_cache_dtype=kv_cache_dtype, **kw
+        )
+        # per-slot device cache footprint (static: fixed-shape lanes)
+        self.slot_cache_bytes = sum(
+            a.nbytes for entry in self.caches for a in jax.tree.leaves(entry)
+        ) // max_slots
         # host-side per-slot decode state (fed to decode_step as device arrays)
         self.lengths = np.zeros((max_slots,), np.int32)
         self.last_token = np.zeros((max_slots,), np.int32)
@@ -67,6 +75,11 @@ class SequenceBuffer:
     @property
     def occupancy(self) -> float:
         return 1.0 - len(self._free) / self.max_slots
+
+    @property
+    def kv_cache_bytes(self) -> int:
+        """Device cache bytes attributable to currently-occupied slots."""
+        return self.slot_cache_bytes * (self.max_slots - len(self._free))
 
     def alloc(self, rid: int) -> int:
         """Reserve a slot for request ``rid`` (prefill phase: inactive)."""

@@ -50,20 +50,63 @@ def cache_len_for(cfg: ArchConfig, max_len: int) -> int:
     return max_len
 
 
+def _quantized_entry(cache: Any) -> bool:
+    """Is this KV-cache entry int8 (values + per-row-per-head scales)?"""
+    return isinstance(cache, dict) and "k_scale" in cache
+
+
+def _store_kv(k: jnp.ndarray, v: jnp.ndarray, call: CallConfig) -> dict:
+    """Full-tensor KV-cache entry under the configured storage dtype."""
+    if call.kv_cache_dtype == "int8":
+        from ..kernels.flash_decode import quantize_kv
+
+        kq, ks = quantize_kv(k)
+        vq, vs = quantize_kv(v)
+        return {"k": kq, "v": vq, "k_scale": ks, "v_scale": vs}
+    return {"k": k.astype(call.dtype), "v": v.astype(call.dtype)}
+
+
+def _load_kv(cache: dict, dtype) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Read one slot's (S, Hkv, D) K/V out of a cache entry slice."""
+    if _quantized_entry(cache):
+        from ..kernels.flash_decode import dequantize_kv
+
+        return (
+            dequantize_kv(cache["k"], cache["k_scale"], dtype),
+            dequantize_kv(cache["v"], cache["v_scale"], dtype),
+        )
+    return cache["k"].astype(dtype), cache["v"].astype(dtype)
+
+
 def init_caches(
-    params, cfg: ArchConfig, batch: int, max_len: int, dtype=jnp.bfloat16
+    params, cfg: ArchConfig, batch: int, max_len: int, dtype=jnp.bfloat16,
+    kv_cache_dtype: str = "native",
 ) -> List[Any]:
-    """One cache entry per pattern position, stacked over repetitions."""
+    """One cache entry per pattern position, stacked over repetitions.
+
+    ``kv_cache_dtype="int8"`` stores K/V as int8 plus per-row, per-head f32
+    scales (kernels/flash_decode.quantize_kv) — ~(dtype_bytes*D)/(D+4)x less
+    cache HBM per slot; writes quantize, reads dequantize (in-register on
+    the flash decode path)."""
     pattern = block_pattern(cfg)
     n_rep = cfg.n_layers // len(pattern)
     s_cache = cache_len_for(cfg, max_len)
     caches: List[Any] = []
     for pos_i, spec in enumerate(pattern):
         if spec["attn"]:
-            kv = {
-                "k": jnp.zeros((n_rep, batch, s_cache, cfg.kv_heads, cfg.head_dim_), dtype),
-                "v": jnp.zeros((n_rep, batch, s_cache, cfg.kv_heads, cfg.head_dim_), dtype),
-            }
+            kv_shape = (n_rep, batch, s_cache, cfg.kv_heads, cfg.head_dim_)
+            if kv_cache_dtype == "int8":
+                kv = {
+                    "k": jnp.zeros(kv_shape, jnp.int8),
+                    "v": jnp.zeros(kv_shape, jnp.int8),
+                    "k_scale": jnp.zeros(kv_shape[:-1], jnp.float32),
+                    "v_scale": jnp.zeros(kv_shape[:-1], jnp.float32),
+                }
+            else:
+                kv = {
+                    "k": jnp.zeros(kv_shape, dtype),
+                    "v": jnp.zeros(kv_shape, dtype),
+                }
             caches.append(kv)
         elif spec["ssm"]:
             n_heads = params["blocks"][pos_i]["ssm"]["A_log"].shape[1]
@@ -148,7 +191,7 @@ def _prefill(params, cfg, call, tokens, max_len):
                 else:
                     kc = jnp.pad(k, ((0, 0), (0, s_cache - s), (0, 0), (0, 0)))
                     vc = jnp.pad(v, ((0, 0), (0, s_cache - s), (0, 0), (0, 0)))
-                new_caches.append({"k": kc.astype(call.dtype), "v": vc.astype(call.dtype)})
+                new_caches.append(_store_kv(kc, vc, call))
             if spec["ssm"]:
                 hn = rmsnorm(p["ln1"], h, cfg.norm_eps)
                 out, st = jax.vmap(
@@ -238,8 +281,10 @@ def prefill_chunk(
                 v = v[0]
                 s_cache = cache["k"].shape[1]
                 cache_pos, cache_ok = ring_positions(start, s_cache)
-                kv_k = jnp.concatenate([cache["k"][0].astype(k.dtype), k], 0)
-                kv_v = jnp.concatenate([cache["v"][0].astype(v.dtype), v], 0)
+                slot_entry = jax.tree.map(lambda a: a[0], cache)
+                ck, cv = _load_kv(slot_entry, k.dtype)
+                kv_k = jnp.concatenate([ck, k], 0)
+                kv_v = jnp.concatenate([cv, v], 0)
                 kv_seg = jnp.concatenate([cache_ok.astype(jnp.int32), chunk_seg])
                 kv_pos = jnp.concatenate([cache_pos, pos])
                 from ..models.attention import segment_attention_chunked
@@ -253,13 +298,14 @@ def prefill_chunk(
                 # (newer) chunk token will overwrite at the same ring slot
                 survives = valid & (pos >= start + n_valid - s_cache)
                 write_idx = jnp.where(survives, pos % s_cache, s_cache)  # OOB -> drop
-                k_new = cache["k"][0].at[write_idx].set(
-                    k.astype(cache["k"].dtype), mode="drop"
-                )
-                v_new = cache["v"][0].at[write_idx].set(
-                    v.astype(cache["v"].dtype), mode="drop"
-                )
-                new_caches.append({"k": k_new[None], "v": v_new[None]})
+                write = _store_kv(k, v, call)  # quantizes rows when int8
+                new_entry = {
+                    name: slot_entry[name].at[write_idx].set(
+                        write[name].astype(slot_entry[name].dtype), mode="drop"
+                    )[None]
+                    for name in slot_entry
+                }
+                new_caches.append(new_entry)
             if spec["ssm"]:
                 hn = rmsnorm(p["ln1"], h, cfg.norm_eps)
                 # first chunk of a (possibly reused) slot starts from zeros
@@ -350,21 +396,49 @@ def _decode_step(params, cfg, call, token, lengths, caches, active=None):
                 v = v[:, 0]
                 s_cache = cache["k"].shape[1]
                 slot = (pos % s_cache).astype(jnp.int32)
-                k_new = jax.vmap(
-                    lambda c, kk, i: jax.lax.dynamic_update_slice(c, kk[None], (i, 0, 0))
-                )(cache["k"], k.astype(cache["k"].dtype), slot)
-                v_new = jax.vmap(
-                    lambda c, vv, i: jax.lax.dynamic_update_slice(c, vv[None], (i, 0, 0))
-                )(cache["v"], v.astype(cache["v"].dtype), slot)
+                write = _store_kv(k, v, call)  # (B, Hkv, D) rows [+ scales]
+
+                def _row_write(full, row, i):
+                    return jax.lax.dynamic_update_slice(
+                        full, row[None], (i,) + (0,) * row.ndim
+                    )
+
+                new_entry = {
+                    name: jax.vmap(_row_write)(
+                        cache[name], write[name].astype(cache[name].dtype), slot
+                    )
+                    for name in cache
+                }
                 n_valid = jnp.minimum(pos + 1, s_cache)
                 if active is not None:
-                    k_new = _keep_active(active, k_new, cache["k"])
-                    v_new = _keep_active(active, v_new, cache["v"])
-                out = jax.vmap(
-                    lambda qq, kk, vv, nn: decode_attention(qq, kk, vv, nn, None)
-                )(q, k_new, v_new, n_valid)
+                    new_entry = {
+                        name: _keep_active(active, new_entry[name], cache[name])
+                        for name in cache
+                    }
+                k_new, v_new = new_entry["k"], new_entry["v"]
+                quantized = "k_scale" in new_entry
+                if call.decode_impl == "flash":
+                    from ..kernels.ops import flash_decode  # lazy
+
+                    out = flash_decode(
+                        q, k_new, v_new, n_valid, window=None,
+                        k_scale=new_entry["k_scale"] if quantized else None,
+                        v_scale=new_entry["v_scale"] if quantized else None,
+                        block_s=call.decode_block_s,
+                    )
+                elif quantized:
+                    out = jax.vmap(
+                        lambda qq, kk, vv, nn, ks, vs: decode_attention(
+                            qq, kk, vv, nn, None, k_scale=ks, v_scale=vs
+                        )
+                    )(q, k_new, v_new, n_valid,
+                      new_entry["k_scale"], new_entry["v_scale"])
+                else:
+                    out = jax.vmap(
+                        lambda qq, kk, vv, nn: decode_attention(qq, kk, vv, nn, None)
+                    )(q, k_new, v_new, n_valid)
                 h = h + dense(p["o"], out.reshape(b, hq * dh))
-                new_caches.append({"k": k_new, "v": v_new})
+                new_caches.append(new_entry)
             if spec["ssm"]:
                 hn = rmsnorm(p["ln1"], h, cfg.norm_eps)
                 out, st = jax.vmap(

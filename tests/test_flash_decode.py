@@ -1,0 +1,232 @@
+"""Split-KV flash-decode kernel (kernels/flash_decode.py) invariants.
+
+Exactness contract (DESIGN.md §14): the Pallas kernel is validated
+bit-for-bit against ``flash_decode_xla`` — the identical stripe math with
+the identical ``merge_softmax_partials`` combine — because that is the
+program actually dispatched on either backend. Against the single-pass
+dense oracle (``decode_attention``) the split-KV association differs, so
+the comparison is tight-tolerance f32 allclose, not bitwise.
+
+The ragged sweep drives ``cache_len`` across EVERY stripe boundary of a
+deliberately non-stripe-aligned cache (S = 70, block_s = 16: boundary,
+boundary ± 1, full ring = wraparound), with sliding windows both smaller
+than one stripe and spanning several.
+"""
+
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.flash_decode import (
+    dequantize_kv,
+    flash_decode,
+    flash_decode_xla,
+    quantize_kv,
+)
+from repro.kernels.ops import flash_decode as flash_decode_op
+from repro.models.attention import decode_attention
+
+BS = 16  # small stripes so a test-size cache has many boundaries
+S = 70  # NOT a multiple of BS: exercises the tail-stripe padding path
+
+# every stripe boundary of (S=70, BS=16), straddled from both sides, plus
+# the degenerate one-row cache and the full ring (wraparound: all S valid)
+BOUNDARY_LENS = sorted(
+    {1}
+    | {c for b in range(BS, S, BS) for c in (b - 1, b, b + 1)}
+    | {S - 1, S}
+)
+
+
+def _slot(seed, b=2, s=S, hq=4, hkv=2, d=16):
+    rng = np.random.default_rng(seed)
+    q = jnp.asarray(rng.normal(size=(b, hq, d)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(b, s, hkv, d)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(b, s, hkv, d)), jnp.float32)
+    return q, k, v
+
+
+def _dense_ref(q, k, v, clen, window=None, k_scale=None, v_scale=None):
+    return jnp.stack(
+        [
+            decode_attention(
+                q[i], k[i], v[i], clen[i], window,
+                k_scale=None if k_scale is None else k_scale[i],
+                v_scale=None if v_scale is None else v_scale[i],
+            )
+            for i in range(q.shape[0])
+        ]
+    )
+
+
+# -- ragged stripe-boundary sweep --------------------------------------------
+
+
+@pytest.mark.parametrize("window", [None, 5, 24, 48])
+def test_kernel_boundary_sweep(window):
+    """Kernel == XLA fallback bitwise; == dense oracle to f32 tolerance —
+    at every cache_len straddling a stripe boundary. window=5 < BS is the
+    sub-stripe SWA case (at most two stripes live per slot)."""
+    q, k, v = _slot(0)
+    for i in range(0, len(BOUNDARY_LENS) - 1, 2):
+        # ragged pairs: the two slots sit at different boundaries
+        clen = jnp.asarray(
+            [BOUNDARY_LENS[i], BOUNDARY_LENS[i + 1]], jnp.int32
+        )
+        o_pl = flash_decode(q, k, v, clen, window=window, block_s=BS)
+        o_xla = flash_decode_xla(q, k, v, clen, window=window, block_s=BS)
+        assert np.array_equal(np.asarray(o_pl), np.asarray(o_xla)), (
+            f"kernel != split-KV fallback at clen={clen} window={window}"
+        )
+        o_dense = _dense_ref(q, k, v, clen, window)
+        np.testing.assert_allclose(
+            np.asarray(o_pl), np.asarray(o_dense), atol=1e-6,
+            err_msg=f"clen={clen} window={window}",
+        )
+
+
+def test_dead_stripes_ignore_cache_garbage():
+    """Rows outside [clen - window, clen) must not contribute: poisoning
+    them (stale ring entries from a previous slot occupant) cannot change
+    the output — the stripes are either dead-skipped or masked."""
+    q, k, v = _slot(1)
+    clen = jnp.asarray([37, 20], jnp.int32)
+    window = 5
+    poison_k, poison_v = k, v
+    for i, c in enumerate([37, 20]):
+        live = np.zeros(S, bool)
+        live[max(c - window, 0) : c] = True
+        poison_k = poison_k.at[i, ~live].set(1e4)
+        poison_v = poison_v.at[i, ~live].set(-1e4)
+    o_clean = flash_decode(q, k, v, clen, window=window, block_s=BS)
+    o_poison = flash_decode(q, poison_k, poison_v, clen, window=window, block_s=BS)
+    assert np.array_equal(np.asarray(o_clean), np.asarray(o_poison))
+
+
+def test_batched_rows_match_single_slot():
+    """Engine property: each row of a batched call is bit-identical to the
+    same slot run alone at B=1 (continuous batching cannot perturb a
+    request's logits)."""
+    q, k, v = _slot(2, b=3)
+    clen = jnp.asarray([7, S, 33], jnp.int32)
+    o_batch = flash_decode(q, k, v, clen, block_s=BS)
+    for i in range(3):
+        o_one = flash_decode(
+            q[i : i + 1], k[i : i + 1], v[i : i + 1], clen[i : i + 1], block_s=BS
+        )
+        assert np.array_equal(np.asarray(o_batch[i]), np.asarray(o_one[0]))
+
+
+def test_block_s_invariance():
+    """The stripe size is a tiling choice, not a semantic one: any block_s
+    gives the same answer as the fallback at that block_s, and all sizes
+    agree with dense to tolerance."""
+    q, k, v = _slot(3)
+    clen = jnp.asarray([S, 41], jnp.int32)
+    dense = np.asarray(_dense_ref(q, k, v, clen))
+    for bs in (8, 16, 64, 128):  # 128 > S: single-stripe degenerate case
+        o = flash_decode(q, k, v, clen, block_s=bs)
+        x = flash_decode_xla(q, k, v, clen, block_s=bs)
+        assert np.array_equal(np.asarray(o), np.asarray(x)), f"block_s={bs}"
+        np.testing.assert_allclose(np.asarray(o), dense, atol=1e-6)
+
+
+def test_ops_wrapper_dispatch():
+    q, k, v = _slot(4, b=1)
+    clen = jnp.asarray([29], jnp.int32)
+    o_pl = flash_decode_op(q, k, v, clen, block_s=BS, via="pallas")
+    o_xla = flash_decode_op(q, k, v, clen, block_s=BS, via="xla")
+    assert np.array_equal(np.asarray(o_pl), np.asarray(o_xla))
+    with pytest.raises(ValueError, match="via"):
+        flash_decode_op(q, k, v, clen, via="cuda")
+
+
+def test_decode_attention_flash_impl_matches_dense():
+    """models.decode_attention(impl=\"flash\") routes one slot through the
+    kernel and agrees with its own dense path."""
+    q, k, v = _slot(5, b=1)
+    for clen in (1, 16, S):
+        o_flash = decode_attention(
+            q[0], k[0], v[0], jnp.int32(clen), impl="flash", block_s=BS
+        )
+        o_dense = decode_attention(q[0], k[0], v[0], jnp.int32(clen))
+        np.testing.assert_allclose(
+            np.asarray(o_flash), np.asarray(o_dense), atol=1e-6
+        )
+
+
+# -- int8 KV cache ------------------------------------------------------------
+
+
+def test_quantize_roundtrip_error_bound():
+    """|dequant(quant(x)) - x| <= scale/2 elementwise, exactly-zero rows
+    stay exactly zero (never-written ring slots must not invent values)."""
+    rng = np.random.default_rng(6)
+    x = jnp.asarray(rng.normal(size=(3, S, 2, 16)) * 4.0, jnp.float32)
+    x = x.at[0, 5].set(0.0)
+    qx, scale = quantize_kv(x)
+    err = np.abs(np.asarray(dequantize_kv(qx, scale)) - np.asarray(x))
+    bound = np.asarray(scale)[..., None] / 2.0 + 1e-7
+    assert (err <= bound).all()
+    assert np.asarray(qx)[0, 5].max() == 0 and np.asarray(scale)[0, 5].max() == 0.0
+
+
+@settings(max_examples=15)
+@given(seed=st.integers(0, 10_000), clen=st.sampled_from(BOUNDARY_LENS))
+def test_int8_attention_analytic_error_bound(seed, clen):
+    """Quantized-cache decode error obeys the analytic bound
+
+        |out' - out| <= max(v_scale)/2 + (e^{2 eps} - 1) * max|v|
+
+    where eps bounds the score perturbation from K quantization: writing
+    p' = softmax(s + delta) with |delta| <= eps gives
+    p'_i <= p_i e^{2 eps}, so ||p' - p||_1 <= e^{2 eps} - 1; the V term is
+    a convex combination of per-row errors <= v_scale/2."""
+    rng = np.random.default_rng(seed)
+    hq, hkv, d = 4, 2, 16
+    q = jnp.asarray(rng.normal(size=(1, hq, d)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(1, S, hkv, d)) * 2.0, jnp.float32)
+    v = jnp.asarray(rng.normal(size=(1, S, hkv, d)) * 2.0, jnp.float32)
+    kq, ks = quantize_kv(k)
+    vq, vs = quantize_kv(v)
+    cl = jnp.asarray([clen], jnp.int32)
+
+    o_int8 = flash_decode(q, kq, vq, cl, k_scale=ks, v_scale=vs, block_s=BS)
+    o_exact = _dense_ref(q, k, v, cl)
+    # kernel == its own XLA fallback stays bitwise even when quantized
+    o_xla = flash_decode_xla(q, kq, vq, cl, k_scale=ks, v_scale=vs, block_s=BS)
+    assert np.array_equal(np.asarray(o_int8), np.asarray(o_xla))
+
+    # eps from the ACTUAL dequantization error of the valid rows
+    k_err = np.asarray(dequantize_kv(kq, ks) - k)[0, :clen]  # (clen, Hkv, D)
+    qn = np.abs(np.asarray(q))[0].reshape(hkv, hq // hkv, d)  # (Hkv, G, D)
+    eps = max(
+        float(
+            np.max(np.einsum("gd,sd->gs", qn[h], np.abs(k_err[:, h])))
+        )
+        for h in range(hkv)
+    ) / math.sqrt(d)
+    v_np = np.abs(np.asarray(v))[0, :clen]
+    bound = (
+        float(np.max(np.asarray(vs))) / 2.0
+        + (math.expm1(2.0 * eps)) * float(np.max(v_np))
+        + 1e-5
+    )
+    err = float(np.max(np.abs(np.asarray(o_int8) - np.asarray(o_exact))))
+    assert err <= bound, f"err={err} > bound={bound} (eps={eps})"
+
+
+def test_int8_dense_fallback_matches_kernel():
+    """decode_attention's dense path on a quantized cache (dequantize then
+    attend) tracks the in-register-dequant kernel to f32 tolerance."""
+    q, k, v = _slot(7)
+    kq, ks = quantize_kv(k)
+    vq, vs = quantize_kv(v)
+    clen = jnp.asarray([48, 17], jnp.int32)
+    o_kernel = flash_decode(q, kq, vq, clen, k_scale=ks, v_scale=vs, block_s=BS)
+    o_dense = _dense_ref(q, kq, vq, clen, k_scale=ks, v_scale=vs)
+    np.testing.assert_allclose(np.asarray(o_kernel), np.asarray(o_dense), atol=1e-6)
