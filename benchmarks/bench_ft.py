@@ -1,0 +1,225 @@
+"""Fault-tolerance benchmark: async checkpoint critical path + preemption drill.
+
+Two sections, one artifact (``BENCH_ft.json``):
+
+* **ckpt** — the same state tree saved sync vs async. Sync pays snapshot +
+  serialization + fsync on the calling thread; async pays snapshot + bounded
+  enqueue, with the write riding the persistent ``skrull-ckpt`` thread behind
+  simulated compute. The gate is the point of the split: mean calling-thread
+  blocked time per save must be *strictly* lower async than sync.
+
+* **drill** — the preemption drill the CI ft-drill job runs: a seeded
+  ``FaultPlan`` (prefetch-producer crash, checkpoint-writer kill, simulated
+  preemption) against a supervised depth-2 trainer, vs the identical fault-free
+  run. Gates: the recovered loss stream is bit-identical to the fault-free
+  one, every fault was recovered (expected restart count), and steps-goodput
+  (productive / computed — deterministic, unlike wall-clock) stays >= 0.8.
+  Wall-clock goodput is reported alongside but never gated (CI jitter).
+
+Emits the usual ``name,us_per_call,derived`` CSV rows; ``--check`` turns the
+gates into SystemExit failures.
+"""
+
+from __future__ import annotations
+
+import json
+import shutil
+import tempfile
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+from .common import H100, emit
+from repro.checkpoint.manager import CheckpointManager
+from repro.configs.base import ArchConfig
+from repro.data import SkrullDataLoader, SyntheticSFTDataset, chatqa2_like
+from repro.ft import faults
+from repro.ft.faults import Fault, FaultPlan
+from repro.ft.supervisor import Supervisor, SupervisorConfig
+from repro.models.transformer import CallConfig
+from repro.train.loop import Trainer, TrainerConfig
+
+_GOODPUT_FLOOR = 0.8
+
+_CFG = ArchConfig(
+    name="bench-ft-tiny", family="dense", modality="text",
+    n_layers=1, d_model=32, n_heads=2, kv_heads=1, d_ff=64, vocab=128,
+    head_dim=16,
+)
+_CALL = CallConfig(attention_impl="dense", remat="none", logits_chunk=0)
+
+# the drill plan: one fault per recoverable subsystem, spread over the run
+_DRILL_STEPS = 16
+_DRILL_PLAN = [
+    Fault(site="prefetch.produce", step=4),            # producer crash
+    Fault(site="checkpoint.write", step=6, kind="kill"),  # writer dies mid-write
+    Fault(site="train.step", step=12, kind="preempt"),  # SIGTERM-at-step-N
+]
+_EXPECTED_RESTARTS = len(_DRILL_PLAN)
+
+
+# -- section 1: sync vs async checkpoint critical path ------------------------
+
+def _state_tree(n_arrays: int = 6, side: int = 512):
+    rng = np.random.default_rng(0)
+    return {
+        f"w{i}": jnp.asarray(rng.normal(size=(side, side)), jnp.float32)
+        for i in range(n_arrays)
+    }
+
+
+def _bench_ckpt(saves: int = 6) -> dict:
+    tree = _state_tree()
+    out = {}
+    for mode in ("sync", "async"):
+        d = tempfile.mkdtemp(prefix=f"bench_ft_{mode}_")
+        m = CheckpointManager(d, keep=2, async_save=(mode == "async"))
+        # warmup save: first npz write pays one-time allocator/import costs
+        m.save(0, tree)
+        m.wait()
+        warm_blocked = m.stats.blocked_s
+        t0 = time.perf_counter()
+        for s in range(1, saves + 1):
+            m.save(s, tree)
+            # stand-in for device compute between checkpoints: long enough
+            # for the async writer to drain, so blocked time measures the
+            # steady-state critical path rather than queue backpressure
+            time.sleep(0.03)
+        m.wait()
+        wall = time.perf_counter() - t0
+        blocked = m.stats.blocked_s - warm_blocked
+        out[mode] = {
+            "saves": saves,
+            "blocked_ms_per_save": blocked / saves * 1e3,
+            "snapshot_ms_per_save": m.stats.snapshot_s / (saves + 1) * 1e3,
+            "write_ms_per_save": m.stats.write_s / (saves + 1) * 1e3,
+            "wall_s": wall,
+            "write_errors": m.stats.write_errors,
+        }
+        m.close()
+        shutil.rmtree(d, ignore_errors=True)
+        emit(
+            f"ft/ckpt_{mode}",
+            out[mode]["blocked_ms_per_save"] * 1e3,
+            f"blocked={out[mode]['blocked_ms_per_save']:.2f}ms/save "
+            f"snapshot={out[mode]['snapshot_ms_per_save']:.2f}ms "
+            f"write={out[mode]['write_ms_per_save']:.2f}ms",
+        )
+    out["async_speedup"] = out["sync"]["blocked_ms_per_save"] / max(
+        out["async"]["blocked_ms_per_save"], 1e-9
+    )
+    emit("ft/ckpt_critical_path", 0.0,
+         f"async blocks {out['async_speedup']:.1f}x less than sync")
+    return out
+
+
+# -- section 2: the preemption drill ------------------------------------------
+
+def _trainer(steps: int, ckpt_dir: str) -> Trainer:
+    ds = SyntheticSFTDataset(
+        chatqa2_like(), vocab_size=_CFG.vocab, seed=5, size=512, max_len=400
+    )
+    loader = SkrullDataLoader(
+        ds, global_batch=16, ws=2, n_cp=2, c_budget=1024,
+        profile=_CFG.to_profile(), hw=H100, seed=1,
+    )
+    return Trainer(
+        _CFG, _CALL, loader,
+        TrainerConfig(total_steps=steps, ckpt_every=1, ckpt_dir=ckpt_dir,
+                      log_every=10_000, lr=1e-3, prefetch_depth=2),
+    )
+
+
+def _bench_drill(steps: int = _DRILL_STEPS) -> dict:
+    ref_dir = tempfile.mkdtemp(prefix="bench_ft_ref_")
+    t_ref = _trainer(steps, ref_dir)
+    t0 = time.perf_counter()
+    hist_ref = t_ref.run()
+    wall_ref = time.perf_counter() - t0
+    t_ref.close()
+    shutil.rmtree(ref_dir, ignore_errors=True)
+
+    drill_dir = tempfile.mkdtemp(prefix="bench_ft_drill_")
+    faults.arm(FaultPlan(list(_DRILL_PLAN), name="bench-drill"))
+    try:
+        t = _trainer(steps, drill_dir)
+        sup = Supervisor(t, SupervisorConfig(max_restarts=2 * _EXPECTED_RESTARTS,
+                                             backoff_base_s=0.0))
+        rep = sup.run()
+        t.close()
+    finally:
+        faults.disarm()
+        shutil.rmtree(drill_dir, ignore_errors=True)
+
+    losses_ref = [m["loss"] for m in hist_ref]
+    losses = [m["loss"] for m in rep.history]
+    out = {
+        "steps": steps,
+        "plan": [f.to_dict() for f in _DRILL_PLAN],
+        "restarts": rep.restarts,
+        "expected_restarts": _EXPECTED_RESTARTS,
+        "restart_kinds": sorted(e.kind for e in rep.events),
+        "steps_productive": rep.steps_productive,
+        "steps_computed": rep.steps_computed,
+        "steps_wasted": rep.steps_wasted,
+        "goodput": rep.goodput,
+        "wall_goodput": wall_ref / max(rep.wall_s, 1e-9),  # reported, not gated
+        "losses_match": losses == losses_ref,
+    }
+    emit(
+        "ft/drill",
+        rep.wall_s * 1e6 / steps,
+        f"restarts={rep.restarts} goodput={rep.goodput:.3f} "
+        f"wasted={rep.steps_wasted} bit_exact={out['losses_match']}",
+    )
+    return out
+
+
+def run(out_path: str = "BENCH_ft.json", check: bool = False):
+    ckpt = _bench_ckpt()
+    drill = _bench_drill()
+    data = {
+        "bench": "ft",
+        "ckpt": ckpt,
+        "drill": drill,
+        "async_blocked_lt_sync": ckpt["async"]["blocked_ms_per_save"]
+        < ckpt["sync"]["blocked_ms_per_save"],
+        "goodput_floor": _GOODPUT_FLOOR,
+    }
+    with open(out_path, "w") as f:
+        json.dump(data, f, indent=2)
+    print(f"ft/json,0.0,wrote {out_path}")
+
+    if check:
+        if not data["async_blocked_lt_sync"]:
+            raise SystemExit(
+                "async save does not shrink the critical path: blocked "
+                f"{ckpt['async']['blocked_ms_per_save']:.2f}ms/save vs sync "
+                f"{ckpt['sync']['blocked_ms_per_save']:.2f}ms/save"
+            )
+        if ckpt["sync"]["write_errors"] or ckpt["async"]["write_errors"]:
+            raise SystemExit("checkpoint writes failed during the benchmark")
+        if not drill["losses_match"]:
+            raise SystemExit(
+                "drill loss stream diverged from the fault-free run — "
+                "bit-exact recovery is broken"
+            )
+        if drill["restarts"] != drill["expected_restarts"]:
+            raise SystemExit(
+                f"expected {drill['expected_restarts']} supervised recoveries, "
+                f"got {drill['restarts']} ({drill['restart_kinds']})"
+            )
+        if drill["goodput"] < _GOODPUT_FLOOR:
+            raise SystemExit(
+                f"steps-goodput {drill['goodput']:.3f} under the seeded plan "
+                f"fell below the {_GOODPUT_FLOOR} floor "
+                f"(wasted {drill['steps_wasted']} of {drill['steps_computed']})"
+            )
+    return data
+
+
+if __name__ == "__main__":
+    import sys
+
+    run(check="--check" in sys.argv)

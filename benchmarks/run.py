@@ -14,6 +14,7 @@ Prints ``name,us_per_call,derived`` CSV rows (stub contract). Sections:
   flash   — segment-block-sparse tile skipping (writes BENCH_flash.json)
   serve   — continuous-batching TTFT/throughput (writes BENCH_serve.json)
   decode  — split-KV decode bytes/token + slot capacity (BENCH_decode.json)
+  ft      — async-ckpt critical path + preemption drill (BENCH_ft.json)
   roofline— summary over the dry-run artifact (if present)
 """
 
@@ -33,6 +34,7 @@ def main() -> None:
         bench_e2e_speedup,
         bench_flash,
         bench_flops_curve,
+        bench_ft,
         bench_kernels,
         bench_pipeline,
         bench_policies,
@@ -55,6 +57,7 @@ def main() -> None:
     bench_flash.run()  # writes BENCH_flash.json
     bench_serve.run()  # writes BENCH_serve.json
     bench_decode.run()  # writes BENCH_decode.json
+    bench_ft.run()  # writes BENCH_ft.json
     bench_v5e_projection.run(iters=6)
     if os.path.exists("artifacts/dryrun.jsonl"):
         from . import roofline

@@ -38,6 +38,12 @@ def main():
                          "off by default, does not perturb losses")
     ap.add_argument("--metrics-jsonl", default=None, metavar="PATH",
                     help="write per-step structured metrics JSONL (repro.obs)")
+    ap.add_argument("--fault-plan", default=None, metavar="SPEC",
+                    help="arm fault injection: inline JSON, a plan file, or "
+                         "'seed:N[:k]' (repro.ft.faults)")
+    ap.add_argument("--max-restarts", type=int, default=0,
+                    help="supervise the run with hot restart on transient "
+                         "failures (0 = unsupervised)")
     args = ap.parse_args()
 
     from repro import obs
@@ -76,12 +82,25 @@ def main():
             prefetch_depth=args.prefetch_depth,
         ),
     )
+    from repro.ft import faults
+
+    if args.fault_plan:
+        faults.arm(faults.FaultPlan.from_spec(args.fault_plan, total_steps=args.steps))
+
     resumed = trainer.maybe_resume()
     if resumed:
         print(f"resumed from step {trainer.step}")
     try:
-        trainer.run()
+        if args.max_restarts > 0:
+            from repro.ft.supervisor import Supervisor, SupervisorConfig
+
+            sup = Supervisor(trainer, SupervisorConfig(max_restarts=args.max_restarts))
+            rep = sup.run()
+            print(f"supervised: restarts={rep.restarts} goodput={rep.goodput:.3f}")
+        else:
+            trainer.run()
     finally:
+        faults.disarm()
         trainer.close()
         trace_path = obs.shutdown()
         if trace_path:

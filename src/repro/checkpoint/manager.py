@@ -6,8 +6,27 @@ pointer written last — a crash mid-save can never corrupt the restore path).
 Arrays are saved as host numpy (gathered from any sharding), so a checkpoint
 written on a 4x8 mesh restores onto 2x16, 1x1, or the 512-chip production
 mesh — the ELASTIC substrate: reload + re-shard is the whole rescale story
-(ft/elastic.py). The async writer moves serialization off the training thread;
-``wait()`` joins before the next save or shutdown.
+(ft/elastic.py).
+
+Async saves are split in two so the trainer thread pays only the snapshot:
+
+  * ``checkpoint.snapshot`` — one batched ``device_get`` of every leaf on the
+    calling thread (the only device sync on the save path), then an enqueue
+    onto a bounded write queue. The trainer is blocked only for the snapshot
+    plus any wait for a queue slot (``queue_depth`` outstanding writes).
+  * ``checkpoint.write``    — serialization + fsync + atomic publish on the
+    persistent ``skrull-ckpt`` writer thread, fully off the critical path.
+
+Durability: ``arrays.npz``/``meta.json`` are fsynced (file then directory)
+BEFORE the ``os.rename`` publish, and the parent directory is fsynced before
+and after the ``LATEST`` swap — a crash at any point leaves ``LATEST``
+pointing at a complete step dir on any POSIX filesystem, never a torn one.
+
+Writer failures are never swallowed: the writer thread survives, the
+exception is parked and re-raised on the next ``save()``/``wait()`` (counted
+in the ``ft.ckpt_write_errors`` metric), so a dead write can't masquerade as
+a landed checkpoint. ``ft/faults.py`` can kill the writer mid-write (after
+payload fsync, before publish) to drill exactly that path.
 
 State captured: params, AdamW (step, m, v), loader state (epoch/cursor/seed),
 RNG key, user metadata. Restore is bit-exact (test_checkpoint.py).
@@ -15,17 +34,21 @@ RNG key, user metadata. Restore is bit-exact (test_checkpoint.py).
 
 from __future__ import annotations
 
+import dataclasses
 import json
 import os
+import queue
 import shutil
 import tempfile
 import threading
-from typing import Any, Callable, Dict, List, Optional, Tuple
+import time
+from typing import Any, Dict, List, Optional, Tuple
 
 import jax
 import numpy as np
 
 from .. import obs
+from ..ft import faults
 
 
 def _flatten(tree: Any) -> Tuple[List[np.ndarray], Any]:
@@ -36,51 +59,168 @@ def _flatten(tree: Any) -> Tuple[List[np.ndarray], Any]:
     return [np.asarray(x) for x in jax.device_get(leaves)], treedef
 
 
+def _fsync_dir(path: str) -> None:
+    """Make a directory entry durable (rename/replace publishes)."""
+    try:
+        fd = os.open(path, os.O_RDONLY)
+    except OSError:
+        return  # platform without directory fds: best effort
+    try:
+        os.fsync(fd)
+    except OSError:
+        pass  # some filesystems reject dir fsync; the rename is still atomic
+    finally:
+        os.close(fd)
+
+
+@dataclasses.dataclass
+class CheckpointStats:
+    """Where checkpoint time goes, split by thread (bench_ft's raw material).
+
+    ``blocked_s`` is total calling-thread time inside ``save()``/``wait()`` —
+    the critical-path cost the async split is meant to shrink; ``write_s``
+    accumulates on the skrull-ckpt thread and is free under overlap.
+    """
+
+    saves: int = 0
+    writes: int = 0
+    write_errors: int = 0
+    snapshot_s: float = 0.0
+    enqueue_wait_s: float = 0.0
+    blocked_s: float = 0.0
+    write_s: float = 0.0
+
+
+_SHUTDOWN = object()
+
+
 class CheckpointManager:
-    def __init__(self, directory: str, keep: int = 3, async_save: bool = True):
+    def __init__(
+        self,
+        directory: str,
+        keep: int = 3,
+        async_save: bool = True,
+        queue_depth: int = 2,
+        fsync: bool = True,
+    ):
         self.directory = directory
         self.keep = keep
         self.async_save = async_save
+        self.fsync = fsync
+        self.stats = CheckpointStats()
+        self._q: queue.Queue = queue.Queue(maxsize=max(int(queue_depth), 1))
         self._thread: Optional[threading.Thread] = None
+        self._err_lock = threading.Lock()
+        self._pending_error: Optional[BaseException] = None
         os.makedirs(directory, exist_ok=True)
 
     # -- save ---------------------------------------------------------------
     def save(self, step: int, state_tree: Any, meta: Optional[Dict] = None) -> None:
-        # checkpoint.save covers only the training-thread cost (the batched
-        # D2H gather + join of any previous writer); checkpoint.write is the
-        # serialization on the skrull-ckpt track
-        with obs.span("checkpoint.save", step=step):
-            leaves, _ = _flatten(state_tree)
-            meta = dict(meta or {})
-            meta["step"] = int(step)
-            self.wait()
-            if self.async_save:
-                self._thread = threading.Thread(
-                    target=self._write, args=(step, leaves, meta),
-                    name="skrull-ckpt", daemon=True,
-                )
-                self._thread.start()
-            else:
+        # checkpoint.save covers only the calling-thread cost: surfacing a
+        # prior writer failure, the snapshot D2H gather, and the bounded
+        # enqueue; checkpoint.write is the serialization on the skrull-ckpt
+        # track (inline here only when async_save=False)
+        t0 = time.perf_counter()
+        try:
+            with obs.span("checkpoint.save", step=step):
+                self._raise_pending()
+                with obs.span("checkpoint.snapshot", step=step):
+                    ts = time.perf_counter()
+                    leaves, _ = _flatten(state_tree)
+                    self.stats.snapshot_s += time.perf_counter() - ts
+                meta = dict(meta or {})
+                meta["step"] = int(step)
+                if self.async_save:
+                    self._ensure_writer()
+                    tq = time.perf_counter()
+                    # bounded: blocks only when queue_depth writes are already
+                    # outstanding — backpressure instead of unbounded host RAM
+                    self._q.put((step, leaves, meta))
+                    self.stats.enqueue_wait_s += time.perf_counter() - tq
+                else:
+                    self._write(step, leaves, meta)
+                self.stats.saves += 1
+        finally:
+            self.stats.blocked_s += time.perf_counter() - t0
+
+    def _ensure_writer(self) -> None:
+        if self._thread is not None and self._thread.is_alive():
+            return
+        self._thread = threading.Thread(
+            target=self._writer_loop, name="skrull-ckpt", daemon=True
+        )
+        self._thread.start()
+
+    def _writer_loop(self) -> None:
+        while True:
+            item = self._q.get()
+            if item is _SHUTDOWN:
+                self._q.task_done()
+                return
+            step, leaves, meta = item
+            try:
                 self._write(step, leaves, meta)
+            except BaseException as e:
+                # park it for the next save()/wait() — a silently-dead write
+                # must never read as a landed checkpoint — and keep the
+                # writer alive for subsequent saves
+                with self._err_lock:
+                    self._pending_error = e
+                self.stats.write_errors += 1
+                obs.counter("ft.ckpt_write_errors").inc()
+            finally:
+                self._q.task_done()
+
+    def _raise_pending(self) -> None:
+        with self._err_lock:
+            err, self._pending_error = self._pending_error, None
+        if err is not None:
+            raise RuntimeError("checkpoint writer failed") from err
 
     def _write(self, step: int, leaves: List[np.ndarray], meta: Dict) -> None:
         with obs.span("checkpoint.write", step=step):
-            self._write_inner(step, leaves, meta)
+            tw = time.perf_counter()
+            try:
+                self._write_inner(step, leaves, meta)
+                self.stats.writes += 1
+            finally:
+                self.stats.write_s += time.perf_counter() - tw
+
+    def _fsync_file(self, f) -> None:
+        if self.fsync:
+            f.flush()
+            os.fsync(f.fileno())
 
     def _write_inner(self, step: int, leaves: List[np.ndarray], meta: Dict) -> None:
         final = os.path.join(self.directory, f"step_{step:010d}")
         tmp = tempfile.mkdtemp(dir=self.directory, prefix=".tmp_")
         try:
-            np.savez(os.path.join(tmp, "arrays.npz"), *leaves)
+            # payload fsynced (files, then the tmp dir holding their entries)
+            # BEFORE the rename publish: a crash in between can lose the new
+            # checkpoint but can never publish a torn step dir
+            with open(os.path.join(tmp, "arrays.npz"), "wb") as f:
+                np.savez(f, *leaves)
+                self._fsync_file(f)
             with open(os.path.join(tmp, "meta.json"), "w") as f:
                 json.dump(meta, f)
+                self._fsync_file(f)
+            if self.fsync:
+                _fsync_dir(tmp)
+            # writer-kill drill site: payload durable, publish not yet done —
+            # LATEST must still point at the previous complete checkpoint
+            faults.enact("checkpoint.write", step)
             if os.path.exists(final):
                 shutil.rmtree(final)
             os.rename(tmp, final)  # atomic publish of the step dir
+            if self.fsync:
+                _fsync_dir(self.directory)
             latest_tmp = os.path.join(self.directory, ".LATEST.tmp")
             with open(latest_tmp, "w") as f:
                 f.write(os.path.basename(final))
+                self._fsync_file(f)
             os.replace(latest_tmp, os.path.join(self.directory, "LATEST"))
+            if self.fsync:
+                _fsync_dir(self.directory)
             self._gc()
         finally:
             if os.path.exists(tmp):
@@ -94,9 +234,24 @@ class CheckpointManager:
             shutil.rmtree(os.path.join(self.directory, d), ignore_errors=True)
 
     def wait(self) -> None:
-        if self._thread is not None:
+        """Drain outstanding writes; re-raise any parked writer failure."""
+        t0 = time.perf_counter()
+        try:
+            if self._thread is not None:
+                self._q.join()
+            self._raise_pending()
+        finally:
+            self.stats.blocked_s += time.perf_counter() - t0
+
+    def close(self) -> None:
+        """Drain + stop the writer thread (it restarts lazily on next save).
+        Swallows nothing: parked errors still raise here."""
+        if self._thread is not None and self._thread.is_alive():
+            self._q.join()
+            self._q.put(_SHUTDOWN)
             self._thread.join()
-            self._thread = None
+        self._thread = None
+        self._raise_pending()
 
     # -- restore --------------------------------------------------------------
     def latest_step(self) -> Optional[int]:
@@ -119,6 +274,7 @@ class CheckpointManager:
         ``shardings`` (a matching tree of jax.sharding.Sharding — the elastic
         re-shard path)."""
         if step is None:
+            self.wait()  # an in-flight write may be about to become latest
             step = self.latest_step()
         if step is None:
             raise FileNotFoundError(f"no checkpoint in {self.directory}")
@@ -149,4 +305,4 @@ class CheckpointManager:
         return treedef.unflatten(leaves), meta
 
 
-__all__ = ["CheckpointManager"]
+__all__ = ["CheckpointManager", "CheckpointStats"]

@@ -1,6 +1,41 @@
-"""Fault tolerance: health monitoring, elastic rescale, straggler-aware GDS."""
+"""Fault tolerance: health monitoring, fault injection, supervised hot
+restart, elastic rescale, straggler-aware GDS.
 
-from .elastic import rescale
+``elastic``/``supervisor`` are lazy: they import the checkpoint manager,
+which itself hooks ``ft.faults`` — eager imports here would close that loop.
+"""
+
+from . import faults
+from .faults import (
+    Fault,
+    FaultPlan,
+    InjectedFault,
+    RankLostError,
+    SimulatedPreemption,
+)
 from .health import HealthMonitor
 
-__all__ = ["rescale", "HealthMonitor"]
+__all__ = [
+    "faults",
+    "Fault",
+    "FaultPlan",
+    "InjectedFault",
+    "RankLostError",
+    "SimulatedPreemption",
+    "HealthMonitor",
+    "rescale",
+    "Supervisor",
+    "SupervisorConfig",
+]
+
+
+def __getattr__(name):
+    if name == "rescale":
+        from .elastic import rescale
+
+        return rescale
+    if name in ("Supervisor", "SupervisorConfig", "SupervisorReport"):
+        from . import supervisor
+
+        return getattr(supervisor, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

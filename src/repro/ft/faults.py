@@ -1,0 +1,320 @@
+"""Deterministic fault injection — the proof half of the availability story.
+
+A recovery path nobody can trigger is a recovery path nobody can trust.
+``FaultPlan`` injects failures at named *sites* — explicit hooks in the hot
+paths (``pipeline/prefetch.py``, ``pipeline/transfer.py``,
+``checkpoint/manager.py``, ``train/loop.py``) — so tests, the preemption
+drill in CI, and ``benchmarks/bench_ft.py`` can kill the run at exactly the
+worst moments and check that supervised recovery (ft/supervisor.py) replays a
+bit-identical loss stream.
+
+Discipline (same as ``repro.obs``): hooks are zero-overhead no-ops when no
+plan is armed — each site does one module-global ``None`` check, no
+allocation, no clock read. Arming is process-global (``arm``/``disarm``)
+because the sites fire from four different threads (trainer, skrull-prefetch,
+skrull-h2d, skrull-ckpt); one-shot faults are consumed under a lock so a
+fault fires exactly once no matter which thread polls first.
+
+Sites and their enactment:
+
+  ``train.step``        preemption (SIGTERM analogue) at the top of step N —
+                        raises ``SimulatedPreemption`` before the step runs
+  ``prefetch.produce``  producer crash before drawing iteration N — the
+                        loader cursor rewinds (prefetch error contract) and
+                        the error surfaces on the consumer's next ``get()``
+  ``transfer.stage``    H2D staging stall: sleeps ``duration_s`` in the
+                        stacking+device_put path (straggler-shaped latency)
+  ``checkpoint.write``  writer killed mid-write: raises after the payload is
+                        written+fsynced but BEFORE the rename publish — the
+                        durability property under test is that LATEST never
+                        points at a torn step dir
+  ``health.heartbeat``  rank ``rank``'s heartbeat lost at step N — the
+                        monitor marks it dead and the trainer raises
+                        ``RankLostError`` (recoverable via rescale)
+  ``health.straggler``  rank ``rank``'s beat times scaled by ``factor`` over
+                        ``[step, until_step)`` — feeds the speed-factor EMA,
+                        exercising scheduler-side mitigation (non-fatal)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import threading
+import time
+from typing import Any, Dict, List, Optional, Sequence
+
+import numpy as np
+
+from .. import obs
+
+SITES = (
+    "train.step",
+    "prefetch.produce",
+    "transfer.stage",
+    "checkpoint.write",
+    "health.heartbeat",
+    "health.straggler",
+)
+
+KINDS = ("error", "preempt", "kill", "stall", "drop", "slow")
+
+# which kinds make sense where (validated at plan construction, so a typo'd
+# plan fails at arm time, not silently never-fires at run time)
+_SITE_KINDS = {
+    "train.step": ("preempt", "error"),
+    "prefetch.produce": ("error", "kill"),
+    "transfer.stage": ("stall",),
+    "checkpoint.write": ("kill", "error"),
+    "health.heartbeat": ("drop",),
+    "health.straggler": ("slow",),
+}
+
+_DEFAULT_KIND = {
+    "train.step": "preempt",
+    "prefetch.produce": "error",
+    "transfer.stage": "stall",
+    "checkpoint.write": "kill",
+    "health.heartbeat": "drop",
+    "health.straggler": "slow",
+}
+
+
+class InjectedFault(RuntimeError):
+    """An armed fault fired. ``transient=True`` means the supervisor may
+    retry (hot restart from checkpoint); fatal faults propagate."""
+
+    def __init__(self, site: str, step: int, kind: str = "error",
+                 transient: bool = True):
+        super().__init__(f"injected fault at {site} step {step} ({kind})")
+        self.site = site
+        self.step = step
+        self.kind = kind
+        self.transient = transient
+
+
+class SimulatedPreemption(InjectedFault):
+    """SIGTERM-at-step-N analogue: the process 'dies' at the top of a step.
+    Always transient — a preempted job is exactly what restart recovers."""
+
+    def __init__(self, site: str, step: int):
+        super().__init__(site, step, kind="preempt", transient=True)
+
+
+class RankLostError(RuntimeError):
+    """The health monitor declared DP rank(s) dead (heartbeat timeout).
+    Recoverable by rescaling to a smaller topology (ft/supervisor.py)."""
+
+    def __init__(self, ranks: Sequence[int]):
+        self.ranks = sorted(int(r) for r in ranks)
+        super().__init__(f"rank(s) {self.ranks} lost heartbeat")
+
+
+@dataclasses.dataclass(frozen=True)
+class Fault:
+    """One planned failure: fire at the ``step``-th event of ``site``.
+
+    ``step`` indexing is per-site and 1-based: trainer steps for
+    ``train.step``/``health.*``, producer draw count for
+    ``prefetch.produce``, staged-row count for ``transfer.stage``, and the
+    checkpointed step for ``checkpoint.write``. ``until_step`` (exclusive)
+    turns drop/slow/stall faults into a window; one-shot otherwise.
+    """
+
+    site: str
+    step: int
+    kind: str = ""
+    rank: Optional[int] = None
+    duration_s: float = 0.0
+    factor: float = 1.0
+    until_step: Optional[int] = None
+    transient: bool = True
+
+    def __post_init__(self):
+        if self.site not in SITES:
+            raise ValueError(f"unknown fault site {self.site!r} (sites: {SITES})")
+        kind = self.kind or _DEFAULT_KIND[self.site]
+        if kind not in _SITE_KINDS[self.site]:
+            raise ValueError(
+                f"kind {kind!r} is not valid at site {self.site!r} "
+                f"(valid: {_SITE_KINDS[self.site]})"
+            )
+        object.__setattr__(self, "kind", kind)
+        if self.step < 1:
+            raise ValueError(f"fault step must be >= 1, got {self.step}")
+        if self.until_step is not None and self.until_step <= self.step:
+            raise ValueError("until_step must be > step")
+
+    def matches(self, step: int) -> bool:
+        if self.until_step is None:
+            return step == self.step
+        return self.step <= step < self.until_step
+
+    @property
+    def windowed(self) -> bool:
+        return self.until_step is not None
+
+    def to_dict(self) -> Dict[str, Any]:
+        d = dataclasses.asdict(self)
+        return {k: v for k, v in d.items() if v not in (None,)}
+
+
+class FaultPlan:
+    """A seeded, deterministic set of faults. Two plans built from the same
+    spec fire identically — the drill's faulted run is reproducible."""
+
+    def __init__(self, faults: Sequence[Fault], seed: int = 0, name: str = ""):
+        self.faults = list(faults)
+        self.seed = int(seed)
+        self.name = name or f"plan-seed{seed}"
+        self._lock = threading.Lock()
+        self._fired: set = set()  # indices of consumed one-shot faults
+
+    # -- construction ---------------------------------------------------------
+    @staticmethod
+    def random(seed: int, total_steps: int, n_faults: int = 3) -> "FaultPlan":
+        """Deterministic plan over the recoverable kill sites: producer
+        crash, SIGTERM preemption, checkpoint-writer kill — cycled over
+        ``n_faults`` distinct steps drawn from ``[2, total_steps]``."""
+        if total_steps < 2:
+            raise ValueError("need total_steps >= 2 to place faults")
+        rng = np.random.default_rng(seed)
+        hi = max(total_steps, 3)
+        steps = sorted(
+            int(s) for s in
+            rng.choice(np.arange(2, hi + 1), size=min(n_faults, hi - 1),
+                       replace=False)
+        )
+        sites = ("prefetch.produce", "train.step", "checkpoint.write")
+        faults = [Fault(site=sites[i % len(sites)], step=s)
+                  for i, s in enumerate(steps)]
+        return FaultPlan(faults, seed=seed, name=f"random-seed{seed}")
+
+    @staticmethod
+    def from_spec(spec: Any, total_steps: int = 0) -> "FaultPlan":
+        """Build from a JSON dict/string, a path to a JSON file, or the
+        ``seed:<n>[:<n_faults>]`` shorthand (needs ``total_steps``)."""
+        if isinstance(spec, FaultPlan):
+            return spec
+        if isinstance(spec, str):
+            s = spec.strip()
+            if s.startswith("seed:"):
+                parts = s.split(":")
+                seed = int(parts[1])
+                n = int(parts[2]) if len(parts) > 2 else 3
+                if total_steps < 2:
+                    raise ValueError(
+                        "seed:<n> fault-plan shorthand needs total_steps"
+                    )
+                return FaultPlan.random(seed, total_steps, n_faults=n)
+            if s.startswith("{"):
+                spec = json.loads(s)
+            elif os.path.exists(s):
+                with open(s) as f:
+                    spec = json.load(f)
+            else:
+                raise ValueError(
+                    f"fault plan spec {spec!r} is neither JSON, a file, nor "
+                    "a seed:<n> shorthand"
+                )
+        if not isinstance(spec, dict):
+            raise TypeError(f"fault plan spec must be a dict, got {type(spec)}")
+        faults = [Fault(**f) for f in spec.get("faults", ())]
+        return FaultPlan(faults, seed=int(spec.get("seed", 0)),
+                         name=spec.get("name", ""))
+
+    def to_dict(self) -> Dict[str, Any]:
+        return {
+            "name": self.name,
+            "seed": self.seed,
+            "faults": [f.to_dict() for f in self.faults],
+        }
+
+    # -- matching -------------------------------------------------------------
+    def poll(self, site: str, step: int, rank: Optional[int] = None
+             ) -> Optional[Fault]:
+        """First matching fault for this site event, consuming one-shots.
+
+        ``rank`` filters only when BOTH the fault and the caller name one;
+        windowed faults match every step in their half-open window.
+        """
+        with self._lock:
+            for i, f in enumerate(self.faults):
+                if f.site != site or not f.matches(step):
+                    continue
+                if (rank is not None and f.rank is not None
+                        and f.rank != rank):
+                    continue
+                if not f.windowed:
+                    if i in self._fired:
+                        continue
+                    self._fired.add(i)
+                obs.counter("ft.faults_injected").inc()
+                return f
+        return None
+
+    def reset(self) -> None:
+        """Re-arm consumed one-shot faults (fresh drill, same plan)."""
+        with self._lock:
+            self._fired.clear()
+
+
+# -- process-global arming ----------------------------------------------------
+_PLAN: Optional[FaultPlan] = None
+
+
+def arm(plan: FaultPlan) -> FaultPlan:
+    global _PLAN
+    _PLAN = plan
+    return plan
+
+
+def disarm() -> None:
+    global _PLAN
+    _PLAN = None
+
+
+def active() -> Optional[FaultPlan]:
+    return _PLAN
+
+
+def trip(site: str, step: int, rank: Optional[int] = None) -> Optional[Fault]:
+    """Site hook, information-only: returns the matching fault (the caller
+    enacts it) or None. THE fast path: one global load when disarmed."""
+    plan = _PLAN
+    if plan is None:
+        return None
+    return plan.poll(site, step, rank)
+
+
+def enact(site: str, step: int) -> None:
+    """Site hook with default enactment: stall kinds sleep, preempt raises
+    ``SimulatedPreemption``, everything else raises ``InjectedFault``."""
+    plan = _PLAN
+    if plan is None:
+        return
+    f = plan.poll(site, step)
+    if f is None:
+        return
+    if f.kind == "stall":
+        time.sleep(f.duration_s)
+        return
+    if f.kind == "preempt":
+        raise SimulatedPreemption(site, step)
+    raise InjectedFault(site, step, kind=f.kind, transient=f.transient)
+
+
+__all__ = [
+    "SITES",
+    "Fault",
+    "FaultPlan",
+    "InjectedFault",
+    "SimulatedPreemption",
+    "RankLostError",
+    "arm",
+    "disarm",
+    "active",
+    "trip",
+    "enact",
+]

@@ -16,7 +16,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Dict, List, Optional, Sequence
+from typing import Callable, Dict, List, Optional, Sequence
 
 import numpy as np
 
@@ -28,9 +28,12 @@ class HealthMonitor:
     ws: int
     heartbeat_timeout_s: float = 60.0
     ema: float = 0.7
+    # injectable clock: tests drive timeout detection deterministically
+    # (no time.sleep); every now=None path reads through this
+    clock: Callable[[], float] = time.monotonic
 
     def __post_init__(self):
-        self._last_beat = {i: time.monotonic() for i in range(self.ws)}
+        self._last_beat = {i: self.clock() for i in range(self.ws)}
         self._speed = np.ones(self.ws)
         self.last_report = None
         self._imbalance_ema: Optional[float] = None
@@ -66,7 +69,7 @@ class HealthMonitor:
         return 1.0 if self._imbalance_ema is None else self._imbalance_ema
 
     def beat(self, rank: int, step_time_s: Optional[float] = None, now: Optional[float] = None):
-        self._last_beat[rank] = time.monotonic() if now is None else now
+        self._last_beat[rank] = self.clock() if now is None else now
         if step_time_s is not None and step_time_s > 0:
             # relative speed: inverse step time, normalised below
             inv = 1.0 / step_time_s
@@ -96,12 +99,23 @@ class HealthMonitor:
             self.beat(r, step_time_s=float(rel[r]), now=now)
 
     def failed_ranks(self, now: Optional[float] = None) -> List[int]:
-        t = time.monotonic() if now is None else now
+        """Ranks whose heartbeat is older than the timeout — recomputed from
+        the beat table, so a rank that resumes beating after being declared
+        failed drops back out of the list (recovery is observable)."""
+        t = self.clock() if now is None else now
         return [
             r
             for r, last in self._last_beat.items()
             if t - last > self.heartbeat_timeout_s
         ]
+
+    def mark_lost(self, ranks: Sequence[int]) -> None:
+        """Declare ranks dead NOW (fault injection / external coordinator):
+        their last beat is pushed past any timeout, deterministically —
+        ``failed_ranks`` reports them until they beat again."""
+        for r in ranks:
+            if r in self._last_beat:
+                self._last_beat[r] = float("-inf")
 
     def speed_factors(self, deadband: float = 0.0) -> Optional[np.ndarray]:
         """Per-rank relative speed, mean ~1, clipped to [0.2, 5].
@@ -134,7 +148,7 @@ class HealthMonitor:
 
     def resize(self, ws: int):
         self.ws = ws
-        self._last_beat = {i: time.monotonic() for i in range(ws)}
+        self._last_beat = {i: self.clock() for i in range(ws)}
         self._speed = np.ones(ws)
         self.last_report = None
         self._imbalance_ema = None

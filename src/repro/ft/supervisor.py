@@ -1,0 +1,210 @@
+"""Supervised hot restart: the run loop that survives what faults.py throws.
+
+``Supervisor.run`` wraps ``Trainer.run`` and turns failures into recoveries:
+
+  * transient faults (``InjectedFault(transient=True)``, simulated
+    preemptions, prefetch-producer crashes, checkpoint-writer failures) are
+    retried with bounded exponential backoff;
+  * rank loss (``RankLostError`` from the health monitor's heartbeat
+    timeout) triggers a rescale to a smaller DP grid before the restart —
+    GDS is partition-invariant, so the sample stream is unchanged;
+  * everything else (or a transient fault past ``max_restarts``) propagates.
+
+The restart is HOT: the same ``Trainer`` object continues in-process, so jit
+caches stay warm and recovery costs checkpoint-restore + replay, not
+recompile. ``Trainer.recover()`` re-syncs from the latest checkpoint (or
+rewinds the prefetcher to the last consumed batch's snapshot when none
+exists yet); because resume is bit-exact at any prefetch depth
+(repro.pipeline contract) and the speed-factor deadband keeps a healthy
+fleet's schedules feedback-free, the post-recovery loss stream is
+bit-identical to an uninterrupted run — the preemption-drill CI gate.
+
+Accounting: every computed step lands in ``Trainer.history``, including
+steps recomputed after a restart; the supervisor's per-step merge keeps one
+row per step (recomputed rows overwrite — they are bit-identical anyway).
+``steps_wasted = steps_computed - steps_productive`` prices each fault at
+exactly the work replayed since the last durable checkpoint, and
+``goodput = productive / computed`` is the deterministic availability number
+bench_ft gates on (wall-clock goodput is reported alongside).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, List, Optional, Union
+
+from .. import obs
+from ..sched import Topology
+from .faults import InjectedFault, RankLostError, SimulatedPreemption
+
+
+@dataclasses.dataclass
+class SupervisorConfig:
+    max_restarts: int = 3
+    backoff_base_s: float = 0.05
+    backoff_factor: float = 2.0
+    backoff_max_s: float = 2.0
+    # shrink DP by the failed ranks and keep going; off = rank loss is fatal
+    rescale_on_rank_loss: bool = True
+
+
+@dataclasses.dataclass
+class RestartEvent:
+    """One recovery, for the report and the drill's assertions."""
+
+    failure_step: int  # trainer step when the failure surfaced
+    resumed_step: int  # step recovered to (checkpoint or in-memory snapshot)
+    kind: str  # preempt | producer | ckpt-writer | rank-lost | fault | error
+    error: str
+    backoff_s: float
+    from_checkpoint: bool
+    new_ws: Optional[int] = None  # set when the recovery rescaled
+
+    def as_dict(self) -> Dict[str, Any]:
+        return dataclasses.asdict(self)
+
+
+@dataclasses.dataclass
+class SupervisorReport:
+    history: List[Dict[str, float]]
+    restarts: int
+    events: List[RestartEvent]
+    steps_productive: int
+    steps_computed: int
+    wall_s: float
+
+    @property
+    def steps_wasted(self) -> int:
+        return self.steps_computed - self.steps_productive
+
+    @property
+    def goodput(self) -> float:
+        """Productive fraction of all computed steps (1.0 = fault-free)."""
+        return self.steps_productive / max(self.steps_computed, 1)
+
+
+def _classify(e: BaseException) -> Optional[str]:
+    """Recovery kind for a failure, or None when it is not recoverable."""
+    if isinstance(e, SimulatedPreemption):
+        return "preempt"
+    if isinstance(e, RankLostError):
+        return "rank-lost"
+    if isinstance(e, InjectedFault):
+        return "fault" if e.transient else None
+    cause = e.__cause__
+    if isinstance(e, RuntimeError) and isinstance(cause, InjectedFault):
+        if not cause.transient:
+            return None
+        # surfaced through a pipeline/checkpoint thread boundary: name it
+        msg = str(e)
+        if "prefetch producer" in msg:
+            return "producer"
+        if "checkpoint writer" in msg:
+            return "ckpt-writer"
+        return "fault"
+    return None
+
+
+class Supervisor:
+    """Runs a trainer to completion across injected/real failures.
+
+    ``sleep`` is injectable so tests assert the backoff schedule without
+    waiting it out.
+    """
+
+    def __init__(
+        self,
+        trainer: Any,
+        cfg: Optional[SupervisorConfig] = None,
+        sleep: Callable[[float], None] = time.sleep,
+    ):
+        self.trainer = trainer
+        self.cfg = cfg or SupervisorConfig()
+        self._sleep = sleep
+        self.events: List[RestartEvent] = []
+
+    @property
+    def restarts(self) -> int:
+        return len(self.events)
+
+    def _backoff(self) -> float:
+        c = self.cfg
+        # restarts == prior recoveries: first retry waits base, then grows
+        return min(
+            c.backoff_base_s * c.backoff_factor ** self.restarts,
+            c.backoff_max_s,
+        )
+
+    def _rescale(self, e: RankLostError) -> Optional[int]:
+        """Shrink the grid by the lost ranks. Trainer.set_topology flushes
+        schedule-ahead work, re-grids the loader, and resizes the monitor —
+        the checkpoint is topology-agnostic, so recover() just restores."""
+        t = self.trainer
+        lost = [r for r in e.ranks if r < t.loader.ws]
+        new_dp = max(t.loader.ws - len(lost), 1)
+        topo = Topology(dp=new_dp, cp=t.loader.topology.cp,
+                        pods=t.loader.topology.pods)
+        t.set_topology(topo)
+        return new_dp
+
+    def run(self, steps: Optional[int] = None) -> SupervisorReport:
+        t = self.trainer
+        t0 = time.perf_counter()
+        by_step: Dict[int, Dict[str, float]] = {}
+        computed_before = len(t.history)
+        while True:
+            try:
+                t.run(steps)
+                break
+            except BaseException as e:  # noqa: BLE001 — classify, then re-raise
+                kind = _classify(e)
+                # rows computed before the failure are real work — finalize
+                # (idempotent) so the merged history is plain host floats
+                t._finalize_metrics(t.history)
+                if kind is None or self.restarts >= self.cfg.max_restarts:
+                    raise
+                backoff = self._backoff()
+                failure_step = int(t.step)
+                obs.counter("ft.restarts").inc()
+                with obs.span("ft.recover", step=failure_step, kind=kind):
+                    self._sleep(backoff)
+                    new_ws = None
+                    if kind == "rank-lost" and self.cfg.rescale_on_rank_loss:
+                        new_ws = self._rescale(e)
+                    from_ckpt = t.recover()
+                ev = RestartEvent(
+                    failure_step=failure_step,
+                    resumed_step=int(t.step),
+                    kind=kind,
+                    error=str(e),
+                    backoff_s=backoff,
+                    from_checkpoint=from_ckpt,
+                    new_ws=new_ws,
+                )
+                self.events.append(ev)
+                obs.emit({"kind": "ft_restart", **ev.as_dict()})
+        t._finalize_metrics(t.history)
+        for m in t.history:
+            by_step[int(m["step"])] = m  # recomputed steps overwrite
+        history = [by_step[s] for s in sorted(by_step)]
+        report = SupervisorReport(
+            history=history,
+            restarts=self.restarts,
+            events=self.events,
+            steps_productive=len(history),
+            steps_computed=len(t.history) - computed_before,
+            wall_s=time.perf_counter() - t0,
+        )
+        obs.emit({
+            "kind": "ft_supervisor",
+            "restarts": report.restarts,
+            "steps_productive": report.steps_productive,
+            "steps_computed": report.steps_computed,
+            "goodput": report.goodput,
+            "wall_s": report.wall_s,
+        })
+        return report
+
+
+__all__ = ["Supervisor", "SupervisorConfig", "SupervisorReport", "RestartEvent"]

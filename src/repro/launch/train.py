@@ -57,6 +57,15 @@ def main():
                     help="write one structured JSON line per step (schedule "
                          "report, health beats, pipeline stats, flash live "
                          "fraction, per-bucket step times) via repro.obs")
+    ap.add_argument("--fault-plan", default=None, metavar="SPEC",
+                    help="arm fault injection (repro.ft.faults): inline JSON, "
+                         "a path to a plan JSON, or 'seed:N[:k]' for a seeded "
+                         "random plan over --steps; pair with --max-restarts "
+                         "for a supervised preemption drill")
+    ap.add_argument("--max-restarts", type=int, default=0, metavar="N",
+                    help="supervise the run (repro.ft.supervisor): hot-restart "
+                         "from the latest checkpoint on transient failures, "
+                         "up to N times; 0 = unsupervised (failures are fatal)")
     ap.add_argument("--reduced", action="store_true", help="use the smoke-size config")
     ap.add_argument("--distributed", action="store_true", help="multi-host: jax.distributed.initialize()")
     args = ap.parse_args()
@@ -130,10 +139,29 @@ def main():
     if args.trace_out or args.metrics_jsonl:
         obs.configure(trace_path=args.trace_out, metrics_path=args.metrics_jsonl)
 
+    from ..ft import faults
+
+    if args.fault_plan:
+        faults.arm(faults.FaultPlan.from_spec(args.fault_plan, total_steps=args.steps))
+
     trainer.maybe_resume()
     try:
-        trainer.run()
+        if args.max_restarts > 0:
+            from ..ft.supervisor import Supervisor, SupervisorConfig
+
+            sup = Supervisor(trainer, SupervisorConfig(max_restarts=args.max_restarts))
+            rep = sup.run()
+            print(f"supervised: restarts={rep.restarts} "
+                  f"productive={rep.steps_productive} computed={rep.steps_computed} "
+                  f"goodput={rep.goodput:.3f}")
+            for ev in rep.events:
+                print(f"  restart [{ev.kind}] at step {ev.failure_step} -> "
+                      f"resumed from {ev.resumed_step} "
+                      f"({'checkpoint' if ev.from_checkpoint else 'in-memory rewind'})")
+        else:
+            trainer.run()
     finally:
+        faults.disarm()
         trainer.close()
         trace_path = obs.shutdown()
         if trace_path:

@@ -40,9 +40,11 @@ TRANSFER_STAGE = "transfer.stage"
 TRANSFER_WAIT = "transfer.wait"
 PUT_BUFFERS = "dist.put_buffers"
 CKPT_SAVE = "checkpoint.save"
-CKPT_WRITE = "checkpoint.write"
+CKPT_SNAPSHOT = "checkpoint.snapshot"  # on-thread D2H gather (child of save)
+CKPT_WRITE = "checkpoint.write"  # serialization+fsync on the skrull-ckpt track
 CKPT_RESTORE = "checkpoint.restore"
 FT_RESCALE = "ft.rescale"
+FT_RECOVER = "ft.recover"
 SERVE_PREFILL = "serve.prefill"
 SERVE_DECODE = "serve.decode"
 SERVE_STEP = "serve.step"
@@ -394,12 +396,18 @@ def format_report(
             f"per-rank time imbalance (max/mean): mean {imb[0]:.3f}, "
             f"worst step {imb[1]:.3f}"
         )
-    ckpt = [s for s in spans if s.name in (CKPT_SAVE, CKPT_WRITE)]
+    ckpt = [s for s in spans if s.name in (CKPT_SAVE, CKPT_SNAPSHOT, CKPT_WRITE)]
     if ckpt:
+        save_s = sum(s.dur_s for s in ckpt if s.name == CKPT_SAVE)
+        snap_s = sum(s.dur_s for s in ckpt if s.name == CKPT_SNAPSHOT)
+        write_s = sum(s.dur_s for s in ckpt if s.name == CKPT_WRITE)
+        # the snapshot/write split is the async-checkpoint contract (DESIGN
+        # §15): save covers only calling-thread cost, write rides skrull-ckpt
         lines.append(
             f"checkpoint: {sum(1 for s in ckpt if s.name == CKPT_SAVE)} saves, "
-            f"{sum(s.dur_s for s in ckpt if s.name == CKPT_SAVE) * 1e3:.1f}ms "
-            "on the training thread"
+            f"{save_s * 1e3:.1f}ms on the training thread "
+            f"(snapshot {snap_s * 1e3:.1f}ms) + {write_s * 1e3:.1f}ms "
+            "writer-thread serialization"
         )
     serve = attribute_serve_steps(spans)
     if serve:
@@ -472,9 +480,11 @@ __all__ = [
     "TRANSFER_WAIT",
     "PUT_BUFFERS",
     "CKPT_SAVE",
+    "CKPT_SNAPSHOT",
     "CKPT_WRITE",
     "CKPT_RESTORE",
     "FT_RESCALE",
+    "FT_RECOVER",
     "SERVE_PREFILL",
     "SERVE_DECODE",
     "SERVE_STEP",

@@ -45,6 +45,7 @@ from typing import Optional
 
 from .. import obs
 from ..data.loader import IterationBatch, LoaderState, SkrullDataLoader
+from ..ft import faults
 from .metrics import PrefetchStats
 
 # distinguishes "no pending update" from "update to None" (clear factors)
@@ -110,6 +111,10 @@ class Prefetcher:
             state_before = self.loader.state()
             try:
                 n_iter = self.stats.produced
+                # producer-crash drill site: dies before drawing iteration
+                # n_iter+1 — the except below rewinds the cursor and the
+                # error surfaces on the consumer's next get()
+                faults.enact("prefetch.produce", n_iter + 1)
                 self._apply_pending_factors()
                 it = self.loader.next_iteration()
                 # the prefetch.produce span is recorded from the loader's own
@@ -182,6 +187,10 @@ class Prefetcher:
             # so span-derived overlap efficiency is exactly 0 (report.py)
             t0 = time.perf_counter_ns()
             n_iter = self.stats.produced
+            # same drill site as the threaded producer: at depth=0 the crash
+            # surfaces directly on the consumer thread (cursor untouched —
+            # enact fires before the draw)
+            faults.enact("prefetch.produce", n_iter + 1)
             self._apply_pending_factors()
             it = self.loader.next_iteration()
             t1 = time.perf_counter_ns()

@@ -26,6 +26,7 @@ import jax.numpy as jnp
 
 from .. import obs
 from ..dist.executor import stack_row
+from ..ft import faults
 from .metrics import TransferStats
 
 
@@ -69,6 +70,10 @@ class TransferPipeline:
         # under overlap (hidden time), the trainer thread inline (visible
         # time — trace_report attributes it as transfer-bound)
         with obs.span("transfer.stage"):
+            # H2D-stall drill site: sleeps on whichever thread stages, so an
+            # injected stall is transfer-bound in trace_report exactly like a
+            # real slow interconnect would be
+            faults.enact("transfer.stage", self.stats.staged + 1)
             self.stats.shape_keys.add(shape_key(row))
             self.stats.staged += 1
             return self.put(stack_row(row))

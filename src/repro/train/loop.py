@@ -35,6 +35,8 @@ from ..configs.base import ArchConfig
 from ..data.loader import SkrullDataLoader, LoaderState
 from ..dist.executor import DistExecutor
 from ..dist.plan import lower_schedule
+from ..ft import faults
+from ..ft.faults import RankLostError
 from ..ft.health import HealthMonitor
 from ..kernels.sparsity import packed_live_fraction
 from ..models.transformer import CallConfig, init_model
@@ -176,6 +178,23 @@ class Trainer:
         self.step = int(meta["step"])
         return True
 
+    def recover(self) -> bool:
+        """Hot-restart hook (ft/supervisor.py): re-sync to the latest durable
+        checkpoint — or, when none has landed yet, rewind the prefetcher to
+        the last consumed batch's end-of-draw snapshot and continue in place.
+        Returns True when a checkpoint was restored."""
+        if self.ckpt is not None:
+            try:
+                self.ckpt.wait()  # let in-flight writes land first
+            except RuntimeError:
+                # a parked writer failure is the thing being recovered FROM:
+                # acknowledge it and restore the last checkpoint that DID land
+                pass
+        if self.maybe_resume():
+            return True
+        self.prefetch.reset(self._resume_state)
+        return False
+
     # -- topology -------------------------------------------------------------
     def set_topology(self, topology: Union[int, Topology]) -> None:
         """Elastic hook: flush stale schedule-ahead work, re-grid the loader,
@@ -186,6 +205,10 @@ class Trainer:
 
     # -- iteration ------------------------------------------------------------
     def train_step(self) -> Dict[str, float]:
+        # preemption drill site: a SIGTERM-at-step-N 'kills' the run before
+        # the step touches any state, so recovery replays from the last
+        # checkpoint with nothing half-applied
+        faults.enact("train.step", self.step + 1)
         # the span taxonomy here is a compatibility surface (DESIGN.md §12):
         # one train_step per step, phases schedule/accumulate/finalize —
         # launch/trace_report.py's --check mode asserts this structure
@@ -248,8 +271,26 @@ class Trainer:
                 times = dt * np.maximum(share, 1e-6)
             else:
                 times = np.full(self.loader.ws, dt)
+            # injected straggler: scale one rank's beat time so the speed-
+            # factor EMA (and through it, GDS bin-packing) sees a slow rank
+            sf = faults.trip("health.straggler", self.step + 1)
+            if sf is not None and sf.rank is not None and sf.rank < len(times):
+                times = times.copy()
+                times[sf.rank] *= sf.factor
             if len(times) == self.health.ws:
                 self.health.beat_round(times)
+            # injected heartbeat loss: the coordinator stops hearing from a
+            # rank — deterministic (no wall-clock wait) via mark_lost
+            hf = faults.trip("health.heartbeat", self.step + 1)
+            if hf is not None:
+                lost = [hf.rank] if hf.rank is not None else [self.health.ws - 1]
+                self.health.mark_lost(lost)
+            failed = self.health.failed_ranks()
+            if failed:
+                # the supervisor (ft/supervisor.py) rescales and hot-restarts;
+                # unsupervised runs fail loudly instead of training on a grid
+                # that no longer exists
+                raise RankLostError(failed)
             factors = self.health.speed_factors(deadband=self.tcfg.speed_deadband)
             # versioned hand-off: the prefetcher applies this to iterations
             # that have not been scheduled yet (never to queued batches)
@@ -369,9 +410,12 @@ class Trainer:
         return self.history
 
     def close(self) -> None:
-        """Stop pipeline threads (safe to call between run() segments)."""
+        """Stop pipeline threads (safe to call between run() segments — the
+        checkpoint writer restarts lazily on the next save)."""
         self.prefetch.close()
         self.transfer.close()
+        if self.ckpt is not None:
+            self.ckpt.close()
 
 
 __all__ = ["Trainer", "TrainerConfig"]

@@ -73,3 +73,93 @@ def test_elastic_reshard_roundtrip(tmp_path):
     restored, _ = m.restore(_tree(0), shardings=sh)
     assert restored["a"].sharding == sh["a"]
     assert (np.asarray(restored["a"]) == np.asarray(t["a"])).all()
+
+
+# -- async writer: durability + error surfacing (repro.ft drill) --------------
+
+
+def _wait_for(pred, timeout=5.0):
+    import time
+
+    t0 = time.monotonic()
+    while not pred():
+        if time.monotonic() - t0 > timeout:
+            raise TimeoutError("condition not met")
+        time.sleep(0.005)
+
+
+@pytest.fixture()
+def _disarm_faults():
+    from repro.ft import faults
+
+    yield faults
+    faults.disarm()
+
+
+def test_writer_kill_keeps_latest_on_previous_step(tmp_path, _disarm_faults):
+    """Killed mid-write (payload durable, publish pending): LATEST still
+    names the previous complete step; no tmp debris; the error is loud."""
+    from repro.ft.faults import Fault, FaultPlan, InjectedFault
+
+    faults = _disarm_faults
+    m = CheckpointManager(str(tmp_path), keep=3, async_save=True)
+    m.save(1, _tree(1))
+    m.wait()
+    faults.arm(FaultPlan([Fault(site="checkpoint.write", step=2, kind="kill")]))
+    m.save(2, _tree(2))
+    with pytest.raises(RuntimeError, match="checkpoint writer failed") as ei:
+        m.wait()
+    assert isinstance(ei.value.__cause__, InjectedFault)
+    assert m.latest_step() == 1
+    assert m.stats.write_errors == 1
+    assert not [d for d in os.listdir(tmp_path) if d.startswith(".tmp_")]
+    # the writer thread survived the kill: the next save lands normally
+    m.save(3, _tree(3))
+    m.wait()
+    assert m.latest_step() == 3
+    m.close()
+
+
+def test_writer_error_surfaces_on_next_save(tmp_path, _disarm_faults):
+    from repro.ft.faults import Fault, FaultPlan
+
+    faults = _disarm_faults
+    m = CheckpointManager(str(tmp_path), keep=3, async_save=True)
+    faults.arm(FaultPlan([Fault(site="checkpoint.write", step=1, kind="kill")]))
+    m.save(1, _tree(1))
+    _wait_for(lambda: m.stats.write_errors == 1)
+    with pytest.raises(RuntimeError, match="checkpoint writer failed"):
+        m.save(2, _tree(2))
+    # the parked error was consumed by the raise; saves resume cleanly
+    m.save(3, _tree(3))
+    m.close()
+    assert m.latest_step() == 3
+
+
+def test_sync_kill_raises_inline(tmp_path, _disarm_faults):
+    from repro.ft.faults import Fault, FaultPlan, InjectedFault
+
+    faults = _disarm_faults
+    m = CheckpointManager(str(tmp_path), keep=3, async_save=False)
+    faults.arm(FaultPlan([Fault(site="checkpoint.write", step=1, kind="kill")]))
+    with pytest.raises(InjectedFault):
+        m.save(1, _tree(1))
+    assert m.latest_step() is None
+
+
+def test_async_split_accounting(tmp_path):
+    """The calling thread pays snapshot + enqueue only; serialization cost
+    accrues to the writer thread (write_s), not to blocked_s per save."""
+    m = CheckpointManager(str(tmp_path), keep=2, async_save=True)
+    for s in (1, 2, 3):
+        m.save(s, _tree(s))
+    m.close()
+    assert m.stats.saves == m.stats.writes == 3
+    assert m.stats.write_errors == 0
+    assert m.stats.snapshot_s > 0 and m.stats.write_s > 0
+
+
+def test_fsync_disabled_still_atomic(tmp_path):
+    m = CheckpointManager(str(tmp_path), keep=2, async_save=False, fsync=False)
+    m.save(4, _tree(4))
+    assert m.latest_step() == 4

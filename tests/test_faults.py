@@ -1,0 +1,159 @@
+"""Fault injection (repro.ft.faults): plan determinism, site hooks,
+zero-overhead disarmed fast path."""
+
+import json
+
+import pytest
+
+from repro.ft import faults
+from repro.ft.faults import (
+    Fault,
+    FaultPlan,
+    InjectedFault,
+    SimulatedPreemption,
+)
+
+
+@pytest.fixture(autouse=True)
+def _disarm():
+    """Arming is process-global (sites fire from four threads) — never leak
+    a plan into another test."""
+    yield
+    faults.disarm()
+
+
+def test_plan_validation():
+    with pytest.raises(ValueError, match="unknown fault site"):
+        Fault(site="nope", step=1)
+    with pytest.raises(ValueError, match="not valid at site"):
+        Fault(site="transfer.stage", step=1, kind="preempt")
+    with pytest.raises(ValueError, match="step must be >= 1"):
+        Fault(site="train.step", step=0)
+    with pytest.raises(ValueError, match="until_step"):
+        Fault(site="health.straggler", step=3, until_step=3)
+
+
+def test_default_kinds_per_site():
+    assert Fault(site="train.step", step=1).kind == "preempt"
+    assert Fault(site="prefetch.produce", step=1).kind == "error"
+    assert Fault(site="checkpoint.write", step=1).kind == "kill"
+    assert Fault(site="transfer.stage", step=1).kind == "stall"
+    assert Fault(site="health.heartbeat", step=1).kind == "drop"
+    assert Fault(site="health.straggler", step=1).kind == "slow"
+
+
+def test_one_shot_consumed_exactly_once():
+    plan = FaultPlan([Fault(site="train.step", step=3)])
+    assert plan.poll("train.step", 2) is None
+    assert plan.poll("train.step", 3) is not None
+    assert plan.poll("train.step", 3) is None  # consumed
+    plan.reset()
+    assert plan.poll("train.step", 3) is not None  # re-armed
+
+
+def test_windowed_fault_matches_half_open_window():
+    plan = FaultPlan(
+        [Fault(site="health.straggler", step=3, until_step=6, rank=1, factor=4.0)]
+    )
+    assert plan.poll("health.straggler", 2) is None
+    for s in (3, 4, 5):
+        f = plan.poll("health.straggler", s)
+        assert f is not None and f.factor == 4.0
+    assert plan.poll("health.straggler", 6) is None
+    # windowed faults are not consumed: re-polling the window still matches
+    assert plan.poll("health.straggler", 4) is not None
+
+
+def test_rank_filter():
+    plan = FaultPlan([Fault(site="health.heartbeat", step=2, rank=1)])
+    assert plan.poll("health.heartbeat", 2, rank=0) is None
+    plan2 = FaultPlan([Fault(site="health.heartbeat", step=2, rank=1)])
+    assert plan2.poll("health.heartbeat", 2, rank=1) is not None
+
+
+def test_random_plan_deterministic():
+    a = FaultPlan.random(seed=7, total_steps=20)
+    b = FaultPlan.random(seed=7, total_steps=20)
+    assert a.to_dict() == b.to_dict()
+    c = FaultPlan.random(seed=8, total_steps=20)
+    assert a.to_dict()["faults"] != c.to_dict()["faults"]
+    # covers the three recoverable kill sites
+    sites = {f["site"] for f in a.to_dict()["faults"]}
+    assert sites == {"prefetch.produce", "train.step", "checkpoint.write"}
+
+
+def test_spec_roundtrip_json_string_and_file(tmp_path):
+    plan = FaultPlan(
+        [
+            Fault(site="train.step", step=5),
+            Fault(site="checkpoint.write", step=4, kind="kill"),
+        ],
+        seed=3,
+        name="drill",
+    )
+    as_json = json.dumps(plan.to_dict())
+    again = FaultPlan.from_spec(as_json)
+    assert again.to_dict() == plan.to_dict()
+    p = tmp_path / "plan.json"
+    p.write_text(as_json)
+    assert FaultPlan.from_spec(str(p)).to_dict() == plan.to_dict()
+
+
+def test_spec_seed_shorthand():
+    plan = FaultPlan.from_spec("seed:5", total_steps=12)
+    assert plan.to_dict() == FaultPlan.random(5, 12).to_dict()
+    with pytest.raises(ValueError, match="total_steps"):
+        FaultPlan.from_spec("seed:5")
+    with pytest.raises(ValueError, match="neither JSON"):
+        FaultPlan.from_spec("not-a-plan")
+
+
+def test_disarmed_hooks_are_noops():
+    faults.disarm()
+    assert faults.trip("train.step", 1) is None
+    faults.enact("train.step", 1)  # no raise
+    assert faults.active() is None
+
+
+def test_enact_raises_by_kind():
+    faults.arm(FaultPlan([Fault(site="train.step", step=2)]))
+    faults.enact("train.step", 1)
+    with pytest.raises(SimulatedPreemption) as ei:
+        faults.enact("train.step", 2)
+    assert ei.value.transient and ei.value.site == "train.step"
+
+    faults.arm(FaultPlan([Fault(site="prefetch.produce", step=1)]))
+    with pytest.raises(InjectedFault) as ei:
+        faults.enact("prefetch.produce", 1)
+    assert not isinstance(ei.value, SimulatedPreemption)
+
+
+def test_enact_stall_sleeps_not_raises():
+    import time
+
+    faults.arm(
+        FaultPlan([Fault(site="transfer.stage", step=1, duration_s=0.01)])
+    )
+    t0 = time.perf_counter()
+    faults.enact("transfer.stage", 1)  # sleeps, returns
+    assert time.perf_counter() - t0 >= 0.01
+
+
+def test_threaded_one_shot_fires_once():
+    import threading
+
+    plan = FaultPlan([Fault(site="prefetch.produce", step=1)])
+    faults.arm(plan)
+    hits = []
+
+    def poll():
+        f = faults.trip("prefetch.produce", 1)
+        if f is not None:
+            hits.append(f)
+
+    threads = [threading.Thread(target=poll) for _ in range(8)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert len(hits) == 1

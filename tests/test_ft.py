@@ -157,3 +157,62 @@ def test_elastic_rescale_roundtrip(tiny_dense, tmp_path):
     # placed on the new mesh with real shardings
     leaf = jax.tree.leaves(new_state.params)[0]
     assert leaf.sharding.mesh.shape == dict(data=1, model=1) or True
+
+
+# -- heartbeat timeout with an injectable clock (no time.sleep) ---------------
+
+
+def _fake_clock():
+    t = {"now": 100.0}
+
+    def clock():
+        return t["now"]
+
+    return t, clock
+
+
+def test_health_injectable_clock_detects_timeout():
+    t, clock = _fake_clock()
+    mon = HealthMonitor(ws=2, heartbeat_timeout_s=5.0, clock=clock)
+    mon.beat(0)
+    t["now"] = 103.0
+    mon.beat(1)
+    assert mon.failed_ranks() == []
+    t["now"] = 107.0  # rank 0 last beat 7s ago, rank 1 only 4s
+    assert mon.failed_ranks() == [0]
+    t["now"] = 120.0
+    assert mon.failed_ranks() == [0, 1]
+
+
+def test_health_rank_recovers_after_declared_failed():
+    """failed_ranks is recomputed from the beat table: a rank that resumes
+    beating after being declared dead drops back off the list."""
+    t, clock = _fake_clock()
+    mon = HealthMonitor(ws=2, heartbeat_timeout_s=5.0, clock=clock)
+    t["now"] = 110.0
+    assert mon.failed_ranks() == [0, 1]
+    mon.beat(0)
+    assert mon.failed_ranks() == [1]
+    mon.beat(1)
+    assert mon.failed_ranks() == []
+
+
+def test_health_mark_lost_is_immediate_and_reversible():
+    t, clock = _fake_clock()
+    mon = HealthMonitor(ws=3, heartbeat_timeout_s=1e9, clock=clock)
+    mon.mark_lost([2])
+    assert mon.failed_ranks() == [2]
+    mon.mark_lost([5])  # unknown rank: ignored, not KeyError
+    assert mon.failed_ranks() == [2]
+    mon.beat(2)
+    assert mon.failed_ranks() == []
+
+
+def test_health_resize_uses_clock():
+    t, clock = _fake_clock()
+    mon = HealthMonitor(ws=1, heartbeat_timeout_s=5.0, clock=clock)
+    t["now"] = 200.0
+    mon.resize(3)
+    assert mon.failed_ranks() == []  # fresh beats stamped at resize time
+    t["now"] = 206.0
+    assert mon.failed_ranks() == [0, 1, 2]

@@ -1,0 +1,202 @@
+"""Supervised hot restart (repro.ft.supervisor): the preemption drill.
+
+The headline property (ISSUE 9 / CI ft-drill gate): with a seeded FaultPlan
+killing the run mid-step at prefetch depth 2, the supervisor resumes from
+checkpoint and the full loss sequence is bit-identical to an uninterrupted
+run."""
+
+import numpy as np
+import pytest
+
+from repro.core.perf_model import H100
+from repro.data import SkrullDataLoader, SyntheticSFTDataset, wikipedia_like
+from repro.ft import faults
+from repro.ft.faults import Fault, FaultPlan, RankLostError, SimulatedPreemption
+from repro.ft.supervisor import Supervisor, SupervisorConfig
+from repro.models.transformer import CallConfig
+from repro.train.loop import Trainer, TrainerConfig
+
+CALL = CallConfig(attention_impl="dense", remat="none", logits_chunk=512)
+
+
+@pytest.fixture(autouse=True)
+def _disarm():
+    yield
+    faults.disarm()
+
+
+def _trainer(cfg, tmp, steps, depth=2, ckpt_every=2):
+    ds = SyntheticSFTDataset(
+        wikipedia_like(), vocab_size=cfg.vocab, seed=5, size=256, max_len=300
+    )
+    loader = SkrullDataLoader(
+        ds, global_batch=8, ws=2, n_cp=2, c_budget=1024,
+        profile=cfg.to_profile(), hw=H100, seed=1,
+    )
+    tc = TrainerConfig(
+        total_steps=steps, ckpt_every=ckpt_every, ckpt_dir=str(tmp),
+        log_every=100, lr=1e-3, prefetch_depth=depth,
+    )
+    return Trainer(cfg, CALL, loader, tc)
+
+
+def _sup(t, max_restarts=5):
+    # zero backoff + no-op sleep: the schedule is asserted elsewhere
+    return Supervisor(
+        t,
+        SupervisorConfig(max_restarts=max_restarts, backoff_base_s=0.0),
+        sleep=lambda s: None,
+    )
+
+
+def test_drill_losses_bit_exact_vs_uninterrupted(tiny_dense, tmp_path):
+    """Producer crash + checkpoint-writer kill + SIGTERM-at-step-N, depth 2:
+    three supervised recoveries, loss stream bit-identical to fault-free."""
+    ref = _trainer(tiny_dense, tmp_path / "ref", steps=8)
+    hist_ref = ref.run()
+    ref.close()
+
+    faults.arm(FaultPlan([
+        Fault(site="prefetch.produce", step=4),
+        Fault(site="checkpoint.write", step=4, kind="kill"),
+        Fault(site="train.step", step=7, kind="preempt"),
+    ], seed=0, name="drill"))
+    t = _trainer(tiny_dense, tmp_path / "drill", steps=8)
+    sup = _sup(t)
+    rep = sup.run()
+    t.close()
+
+    assert rep.restarts == 3, [e.as_dict() for e in rep.events]
+    kinds = sorted(e.kind for e in rep.events)
+    assert kinds == ["ckpt-writer", "preempt", "producer"]
+    assert rep.steps_productive == 8
+    assert [m["step"] for m in rep.history] == list(range(1, 9))
+    # the availability claim, bit-for-bit
+    assert [m["loss"] for m in rep.history] == [m["loss"] for m in hist_ref]
+    # every fault costs only the replay since the last durable checkpoint
+    assert rep.steps_wasted > 0
+    assert rep.goodput >= 0.5
+
+
+def test_recomputed_steps_are_bit_identical(tiny_dense, tmp_path):
+    """Replayed steps (trained twice across a restart) produce the same loss
+    both times — the resume contract, observed from inside one process."""
+    faults.arm(FaultPlan([Fault(site="train.step", step=4, kind="preempt")]))
+    t = _trainer(tiny_dense, tmp_path, steps=6)
+    rep = _sup(t).run()
+    t.close()
+    assert rep.restarts == 1
+    by_step = {}
+    for m in t.history:
+        by_step.setdefault(int(m["step"]), []).append(m["loss"])
+    replayed = {s: ls for s, ls in by_step.items() if len(ls) > 1}
+    assert replayed, "preemption at step 4 with ckpt at 2 must replay step 3"
+    for s, ls in replayed.items():
+        assert len(set(ls)) == 1, f"step {s} diverged across replay: {ls}"
+
+
+def test_preemption_without_checkpoint_recovers_in_place(tiny_dense, tmp_path):
+    """No ckpt_dir: recover() rewinds the prefetcher to the last consumed
+    batch's snapshot and continues — still deterministic."""
+    ds = SyntheticSFTDataset(
+        wikipedia_like(), vocab_size=tiny_dense.vocab, seed=5, size=256, max_len=300
+    )
+    loader = SkrullDataLoader(
+        ds, global_batch=8, ws=2, n_cp=2, c_budget=1024,
+        profile=tiny_dense.to_profile(), hw=H100, seed=1,
+    )
+    ref = _trainer(tiny_dense, tmp_path / "ref", steps=5)
+    hist_ref = ref.run()
+    ref.close()
+
+    faults.arm(FaultPlan([Fault(site="train.step", step=3, kind="preempt")]))
+    t = Trainer(tiny_dense, CALL, loader, TrainerConfig(
+        total_steps=5, log_every=100, lr=1e-3, prefetch_depth=2))
+    rep = _sup(t).run()
+    t.close()
+    assert rep.restarts == 1
+    assert not rep.events[0].from_checkpoint
+    assert [m["loss"] for m in rep.history] == [m["loss"] for m in hist_ref]
+
+
+def test_rank_loss_triggers_rescale(tiny_dense, tmp_path):
+    """Heartbeat loss on rank 1 -> RankLostError -> supervisor shrinks the
+    grid to dp=1 and training finishes on the smaller topology."""
+    faults.arm(FaultPlan([Fault(site="health.heartbeat", step=2, rank=1)]))
+    t = _trainer(tiny_dense, tmp_path, steps=4, ckpt_every=1)
+    rep = _sup(t).run()
+    assert rep.restarts == 1
+    ev = rep.events[0]
+    assert ev.kind == "rank-lost" and ev.new_ws == 1
+    assert t.loader.ws == 1 and t.health.ws == 1
+    assert rep.steps_productive == 4
+    assert all(np.isfinite(m["loss"]) for m in rep.history)
+    t.close()
+
+
+def test_unsupervised_rank_loss_fails_loudly(tiny_dense, tmp_path):
+    faults.arm(FaultPlan([Fault(site="health.heartbeat", step=2, rank=0)]))
+    t = _trainer(tiny_dense, tmp_path, steps=3, depth=0)
+    with pytest.raises(RankLostError) as ei:
+        t.run()
+    assert ei.value.ranks == [0]
+    t.close()
+
+
+def test_max_restarts_exhausted_reraises(tiny_dense, tmp_path):
+    faults.arm(FaultPlan([
+        Fault(site="train.step", step=2, kind="preempt"),
+        Fault(site="train.step", step=3, kind="preempt"),
+    ]))
+    t = _trainer(tiny_dense, tmp_path, steps=4)
+    sup = _sup(t, max_restarts=1)
+    with pytest.raises(SimulatedPreemption):
+        sup.run()
+    assert sup.restarts == 1
+    t.close()
+
+
+def test_nontransient_fault_is_fatal(tiny_dense, tmp_path):
+    faults.arm(FaultPlan([
+        Fault(site="train.step", step=2, kind="error", transient=False),
+    ]))
+    t = _trainer(tiny_dense, tmp_path, steps=3)
+    sup = _sup(t)
+    with pytest.raises(faults.InjectedFault):
+        sup.run()
+    assert sup.restarts == 0
+    t.close()
+
+
+def test_backoff_schedule_bounded_exponential(tiny_dense, tmp_path):
+    faults.arm(FaultPlan([
+        Fault(site="train.step", step=2, kind="preempt"),
+        Fault(site="train.step", step=3, kind="preempt"),
+        Fault(site="train.step", step=4, kind="preempt"),
+    ]))
+    sleeps = []
+    t = _trainer(tiny_dense, tmp_path, steps=5, ckpt_every=1)
+    sup = Supervisor(
+        t,
+        SupervisorConfig(max_restarts=5, backoff_base_s=0.1,
+                         backoff_factor=2.0, backoff_max_s=0.15),
+        sleep=sleeps.append,
+    )
+    rep = sup.run()
+    assert rep.restarts == 3
+    assert sleeps == [0.1, 0.15, 0.15]  # base, then capped
+    t.close()
+
+
+def test_straggler_fault_shifts_speed_factors(tiny_dense, tmp_path):
+    """A windowed slow fault on rank 0 must push the speed-factor EMA out of
+    the healthy deadband — the scheduler-side mitigation becomes active."""
+    faults.arm(FaultPlan([
+        Fault(site="health.straggler", step=2, until_step=6, rank=0, factor=8.0),
+    ]))
+    t = _trainer(tiny_dense, tmp_path, steps=6, depth=0)
+    t.run()
+    f = t.health.speed_factors(deadband=0.05)
+    assert f is not None, "slowdown should defeat the deadband"
+    assert f[0] < f[1]  # rank 0 is the slow one
+    t.close()
