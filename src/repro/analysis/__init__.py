@@ -1,0 +1,34 @@
+"""repro.analysis — static program analysis over the repo's hot paths.
+
+Two pass families, one CLI (``launch/analyze.py``):
+
+* **Compiled-program audits** (``program.py`` + ``passes.py``): trace/lower
+  the real hot paths — trainer fused step per ladder bucket, serve
+  prefill-chunk + batched decode, flash fwd/bwd, CP-ring step — and run
+  passes over the jaxpr / lowered MLIR / compiled HLO:
+  jit-cache audit (bounded compiled-shape sets), dtype-promotion audit
+  (no silent f32 temporaries on bf16 paths), donation audit (donated
+  buffers actually elided), host-transfer audit (no callbacks/infeed in
+  step programs), collective inventory (bytes per collective kind,
+  cross-checked against the Eq. 8/15 perf model and ``dist/plan``).
+
+* **Source-level concurrency lint** (``lint.py``, AST-based): mutable state
+  reachable from the four host threads, inconsistent lock-guarded writes,
+  and repo discipline rules (perf_counter over time.time, no host syncs
+  outside finalize boundaries, no hardcoded ``interpret=True``).
+
+Findings carry stable fingerprints; accepted exceptions live in a checked-in
+baseline file (``findings.Baseline``) with one-line justifications.
+"""
+
+from .findings import Baseline, Finding
+from .hlo import HloStats, analyze_hlo, collective_bytes, collective_inventory
+
+__all__ = [
+    "Baseline",
+    "Finding",
+    "HloStats",
+    "analyze_hlo",
+    "collective_bytes",
+    "collective_inventory",
+]

@@ -1,0 +1,89 @@
+"""Finding + Baseline: the currency every analysis pass trades in.
+
+A ``Finding`` is one violated invariant with a *stable fingerprint* —
+``rule:where`` with volatile detail (byte counts, line numbers of compiled
+text) kept OUT of the fingerprint so a baseline entry survives refactors
+that don't change the violation itself.
+
+A ``Baseline`` is a checked-in JSON allowlist: each accepted finding's
+fingerprint plus a mandatory one-line justification. ``--check`` fails on
+any finding not in the baseline, AND on stale baseline entries that no
+longer match anything (so the allowlist can only shrink silently, never
+grow).
+"""
+
+from __future__ import annotations
+
+import json
+from dataclasses import dataclass, field
+from pathlib import Path
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+
+@dataclass(frozen=True)
+class Finding:
+    """One violated invariant, attributable and fingerprint-stable."""
+
+    rule: str  # e.g. "jit-cache", "dtype-promotion", "lock-discipline"
+    where: str  # program/file-qualified site, e.g. "serve.decode" or "a.py:Foo.bar"
+    message: str  # human detail; NOT part of the fingerprint
+    severity: str = "error"  # "error" | "warning"
+    detail: Dict[str, Any] = field(default_factory=dict, compare=False, hash=False)
+
+    @property
+    def fingerprint(self) -> str:
+        return f"{self.rule}:{self.where}"
+
+    def render(self) -> str:
+        sev = self.severity.upper()
+        return f"[{sev}] {self.rule} @ {self.where}: {self.message}"
+
+
+@dataclass
+class Baseline:
+    """Checked-in allowlist of accepted findings with justifications."""
+
+    entries: Dict[str, str] = field(default_factory=dict)  # fingerprint -> why
+    path: Optional[Path] = None
+
+    @classmethod
+    def load(cls, path: Optional[Path]) -> "Baseline":
+        if path is None or not Path(path).exists():
+            return cls(path=Path(path) if path else None)
+        raw = json.loads(Path(path).read_text())
+        entries: Dict[str, str] = {}
+        for item in raw.get("accepted", []):
+            fp = item["fingerprint"]
+            why = item.get("justification", "").strip()
+            if not why:
+                raise ValueError(f"baseline entry {fp!r} has no justification")
+            entries[fp] = why
+        return cls(entries=entries, path=Path(path))
+
+    def save(self, path: Optional[Path] = None) -> None:
+        target = Path(path) if path else self.path
+        if target is None:
+            raise ValueError("no baseline path")
+        payload = {
+            "accepted": [
+                {"fingerprint": fp, "justification": why}
+                for fp, why in sorted(self.entries.items())
+            ]
+        }
+        target.write_text(json.dumps(payload, indent=2) + "\n")
+
+    def accepts(self, finding: Finding) -> bool:
+        return finding.fingerprint in self.entries
+
+    def split(
+        self, findings: Sequence[Finding]
+    ) -> Tuple[List[Finding], List[Finding], List[str]]:
+        """(new, accepted, stale-entry fingerprints)."""
+        new = [f for f in findings if not self.accepts(f)]
+        accepted = [f for f in findings if self.accepts(f)]
+        seen = {f.fingerprint for f in findings}
+        stale = [fp for fp in self.entries if fp not in seen]
+        return new, accepted, stale
+
+
+__all__ = ["Finding", "Baseline"]

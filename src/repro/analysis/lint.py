@@ -1,0 +1,383 @@
+"""AST concurrency + discipline lint over the four-host-thread surface.
+
+Four host threads share this codebase's mutable state: the trainer loop,
+the prefetch producer, the H2D stager, and the checkpoint writer (plus obs
+buffers they all append to). The documented guards are the loader/prefetcher
+locks, the bounded checkpoint queue, and obs's per-thread append-only
+buffers — everything else must be single-owner. This lint makes that
+discipline machine-checked:
+
+  * ``lock-discipline`` — an instance attribute written BOTH under a
+    ``with self.<lock>`` block and bare (outside ``__init__``) in the same
+    class: one of the two sites is wrong — either the lock is unnecessary
+    or the bare write races.
+  * ``time-source``     — ``time.time()`` in span/timing code: wall clock
+    is NTP-steppable; spans and stall attribution require the monotonic
+    ``perf_counter``/``perf_counter_ns`` family.
+  * ``host-sync``       — ``block_until_ready``/``device_get``/
+    ``np.asarray`` on the step path (train loop, pipeline): host syncs
+    belong ONLY at the documented finalize/checkpoint boundaries.
+  * ``interpret-hardcode`` — a literal ``interpret=True`` call argument
+    outside ``kernels/backend.py``: interpret mode must flow through
+    ``resolve_interpret`` or TPU runs silently execute emulated kernels.
+
+The lint also CATALOGS shared mutable state (module-level mutables and
+per-class attribute guard profiles) for the report mode — the catalog is
+how a reviewer sees what the four threads can actually reach.
+
+Findings fingerprint as ``rule:relpath:scope`` (no line numbers), so a
+baseline entry survives unrelated edits to the file.
+"""
+
+from __future__ import annotations
+
+import ast
+import dataclasses
+from pathlib import Path
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from .findings import Finding
+
+# ---------------------------------------------------------------------------
+# configuration
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class LintConfig:
+    """Scopes are path prefixes (or exact files) relative to the package
+    root ``src/repro``."""
+
+    # modules the four host threads execute; lock-discipline + catalog scope
+    thread_scope: Tuple[str, ...] = (
+        "train/",
+        "pipeline/",
+        "obs/",
+        "checkpoint/",
+        "ft/",
+        "data/",
+        "serve/",
+    )
+    # span/timing code: wall clock is banned here
+    time_scope: Tuple[str, ...] = (
+        "train/",
+        "pipeline/",
+        "obs/",
+        "checkpoint/",
+        "ft/",
+        "serve/",
+        "launch/",
+    )
+    # the step path: host syncs banned outside allowlisted boundary fns
+    sync_scope: Tuple[str, ...] = (
+        "train/loop.py",
+        "pipeline/",
+        "checkpoint/manager.py",
+    )
+    # documented host-sync boundaries (enclosing function names)
+    sync_allow_fns: Tuple[str, ...] = ("_finalize_metrics", "_flatten")
+    # interpret=True may only appear here
+    interpret_allow: Tuple[str, ...] = ("kernels/backend.py",)
+    # attribute-name fragments recognised as locks/conditions
+    lock_fragments: Tuple[str, ...] = ("lock", "_mu", "_cv", "cond")
+
+
+DEFAULT_CONFIG = LintConfig()
+
+
+@dataclasses.dataclass
+class StateEntry:
+    """One piece of shared mutable state the threads can reach."""
+
+    kind: str  # "module" | "instance"
+    where: str  # relpath:name or relpath:Class.attr
+    guarded_writes: int = 0
+    bare_writes: int = 0
+    guards: Tuple[str, ...] = ()
+
+
+@dataclasses.dataclass
+class LintResult:
+    findings: List[Finding]
+    catalog: List[StateEntry]
+
+
+def _in_scope(rel: str, prefixes: Sequence[str]) -> bool:
+    return any(rel == p or rel.startswith(p) for p in prefixes)
+
+
+# ---------------------------------------------------------------------------
+# per-file visitor
+# ---------------------------------------------------------------------------
+
+_MUTABLE_CALLS = {"dict", "list", "set", "defaultdict", "deque", "OrderedDict"}
+
+
+class _FileLint(ast.NodeVisitor):
+    def __init__(self, rel: str, cfg: LintConfig):
+        self.rel = rel
+        self.cfg = cfg
+        self.findings: List[Finding] = []
+        self.catalog: List[StateEntry] = []
+        self._fn_stack: List[str] = []
+        self._class_stack: List[str] = []
+        self._lock_depth = 0
+        self._held_locks: List[str] = []
+        # class -> attr -> [guarded, bare, set-of-guards]
+        self._attr_writes: Dict[str, Dict[str, List]] = {}
+        self._dedup: set = set()
+
+    # -- helpers ------------------------------------------------------------
+
+    def _scope(self) -> str:
+        if self._fn_stack:
+            return ".".join(self._class_stack + [self._fn_stack[-1]])
+        return ".".join(self._class_stack) or "<module>"
+
+    def _emit(self, rule: str, scope: str, message: str, lineno: int) -> None:
+        where = f"{self.rel}:{scope}"
+        if (rule, where) in self._dedup:
+            for f in self.findings:
+                if f.rule == rule and f.where == where:
+                    f.detail["count"] = f.detail.get("count", 1) + 1
+                    f.detail.setdefault("lines", []).append(lineno)
+            return
+        self._dedup.add((rule, where))
+        self.findings.append(
+            Finding(
+                rule=rule,
+                where=where,
+                message=message,
+                detail={"count": 1, "lines": [lineno]},
+            )
+        )
+
+    def _is_lock_attr(self, name: str) -> bool:
+        low = name.lower()
+        return any(frag in low for frag in self.cfg.lock_fragments)
+
+    # -- scopes -------------------------------------------------------------
+
+    def visit_ClassDef(self, node: ast.ClassDef) -> None:
+        self._class_stack.append(node.name)
+        self._attr_writes.setdefault(self._cls_key(), {})
+        self.generic_visit(node)
+        self._class_stack.pop()
+
+    def _cls_key(self) -> str:
+        return ".".join(self._class_stack)
+
+    def visit_FunctionDef(self, node: ast.FunctionDef) -> None:
+        self._fn_stack.append(node.name)
+        self.generic_visit(node)
+        self._fn_stack.pop()
+
+    visit_AsyncFunctionDef = visit_FunctionDef  # type: ignore[assignment]
+
+    def visit_With(self, node: ast.With) -> None:
+        locks = []
+        for item in node.items:
+            expr = item.context_expr
+            if (
+                isinstance(expr, ast.Attribute)
+                and isinstance(expr.value, ast.Name)
+                and expr.value.id == "self"
+                and self._is_lock_attr(expr.attr)
+            ):
+                locks.append(expr.attr)
+        if locks:
+            self._lock_depth += 1
+            self._held_locks.extend(locks)
+        self.generic_visit(node)
+        if locks:
+            self._lock_depth -= 1
+            del self._held_locks[-len(locks):]
+
+    # -- writes -------------------------------------------------------------
+
+    def _record_attr_write(self, target: ast.expr, lineno: int) -> None:
+        if not (
+            isinstance(target, ast.Attribute)
+            and isinstance(target.value, ast.Name)
+            and target.value.id == "self"
+            and self._class_stack
+        ):
+            return
+        attr = target.attr
+        if self._is_lock_attr(attr):
+            return
+        rec = self._attr_writes[self._cls_key()].setdefault(attr, [0, 0, set(), []])
+        in_init = bool(self._fn_stack) and self._fn_stack[0] == "__init__"
+        if self._lock_depth > 0:
+            rec[0] += 1
+            rec[2].update(self._held_locks)
+        elif not in_init:
+            rec[1] += 1
+            rec[3].append(lineno)
+
+    def visit_Assign(self, node: ast.Assign) -> None:
+        for t in node.targets:
+            self._record_attr_write(t, node.lineno)
+            # subscript writes on self attrs count against the attr too
+            if isinstance(t, ast.Subscript):
+                self._record_attr_write(t.value, node.lineno)
+        self._module_state(node)
+        self.generic_visit(node)
+
+    def visit_AugAssign(self, node: ast.AugAssign) -> None:
+        self._record_attr_write(node.target, node.lineno)
+        self.generic_visit(node)
+
+    def _module_state(self, node: ast.Assign) -> None:
+        if self._fn_stack or self._class_stack:
+            return
+        if not _in_scope(self.rel, self.cfg.thread_scope):
+            return
+        for t in node.targets:
+            if not isinstance(t, ast.Name) or t.id.startswith("_"):
+                continue
+            if t.id.isupper():
+                continue  # ALL_CAPS module constants
+            v = node.value
+            mutable = isinstance(v, (ast.List, ast.Dict, ast.Set)) or (
+                isinstance(v, ast.Call)
+                and isinstance(v.func, ast.Name)
+                and v.func.id in _MUTABLE_CALLS
+            )
+            if mutable:
+                self.catalog.append(
+                    StateEntry(kind="module", where=f"{self.rel}:{t.id}")
+                )
+
+    # -- calls --------------------------------------------------------------
+
+    def visit_Call(self, node: ast.Call) -> None:
+        fn = node.func
+        # time.time()
+        if (
+            isinstance(fn, ast.Attribute)
+            and fn.attr == "time"
+            and isinstance(fn.value, ast.Name)
+            and fn.value.id == "time"
+            and _in_scope(self.rel, self.cfg.time_scope)
+        ):
+            self._emit(
+                "time-source",
+                self._scope(),
+                "time.time() in timing code: spans/stall attribution need "
+                "the monotonic perf_counter family",
+                node.lineno,
+            )
+        # host syncs on the step path
+        if _in_scope(self.rel, self.cfg.sync_scope):
+            sync = None
+            if isinstance(fn, ast.Attribute) and fn.attr in (
+                "block_until_ready",
+                "device_get",
+            ):
+                sync = fn.attr
+            elif (
+                isinstance(fn, ast.Attribute)
+                and fn.attr == "asarray"
+                and isinstance(fn.value, ast.Name)
+                and fn.value.id in ("np", "numpy")
+            ):
+                sync = "np.asarray"
+            enclosing = self._fn_stack[-1] if self._fn_stack else "<module>"
+            if sync and enclosing not in self.cfg.sync_allow_fns:
+                self._emit(
+                    "host-sync",
+                    self._scope(),
+                    f"{sync} on the step path outside the documented "
+                    "finalize/checkpoint boundaries",
+                    node.lineno,
+                )
+        # hardcoded interpret=True
+        if not _in_scope(self.rel, self.cfg.interpret_allow):
+            for kw in node.keywords:
+                if (
+                    kw.arg == "interpret"
+                    and isinstance(kw.value, ast.Constant)
+                    and kw.value.value is True
+                ):
+                    self._emit(
+                        "interpret-hardcode",
+                        self._scope(),
+                        "literal interpret=True bypasses kernels/backend.py "
+                        "resolve_interpret (TPU would run the emulated kernel)",
+                        node.lineno,
+                    )
+        self.generic_visit(node)
+
+    # -- wrap-up ------------------------------------------------------------
+
+    def finish(self) -> None:
+        if not _in_scope(self.rel, self.cfg.thread_scope):
+            return
+        for cls, attrs in self._attr_writes.items():
+            for attr, (guarded, bare, guards, bare_lines) in sorted(attrs.items()):
+                if guarded or bare:
+                    self.catalog.append(
+                        StateEntry(
+                            kind="instance",
+                            where=f"{self.rel}:{cls}.{attr}",
+                            guarded_writes=guarded,
+                            bare_writes=bare,
+                            guards=tuple(sorted(guards)),
+                        )
+                    )
+                if guarded and bare:
+                    self.findings.append(
+                        Finding(
+                            rule="lock-discipline",
+                            where=f"{self.rel}:{cls}.{attr}",
+                            message=(
+                                f"written {guarded}x under "
+                                f"{'/'.join(sorted(guards))} and {bare}x bare "
+                                "outside __init__ — one of the sites races"
+                            ),
+                            detail={"bare_lines": bare_lines},
+                        )
+                    )
+
+
+# ---------------------------------------------------------------------------
+# driver
+# ---------------------------------------------------------------------------
+
+
+def lint_file(path: Path, rel: str, cfg: LintConfig = DEFAULT_CONFIG) -> LintResult:
+    tree = ast.parse(path.read_text(), filename=str(path))
+    v = _FileLint(rel, cfg)
+    v.visit(tree)
+    v.finish()
+    return LintResult(v.findings, v.catalog)
+
+
+def lint_package(
+    root: Optional[Path] = None, cfg: LintConfig = DEFAULT_CONFIG
+) -> LintResult:
+    """Lint every module of ``repro`` (default: the package this file
+    belongs to)."""
+    if root is None:
+        root = Path(__file__).resolve().parent.parent  # src/repro
+    findings: List[Finding] = []
+    catalog: List[StateEntry] = []
+    for path in sorted(root.rglob("*.py")):
+        rel = path.relative_to(root).as_posix()
+        if rel.startswith("analysis/"):
+            continue  # the analyzer doesn't run on the four-thread surface
+        res = lint_file(path, rel, cfg)
+        findings.extend(res.findings)
+        catalog.extend(res.catalog)
+    return LintResult(findings, catalog)
+
+
+__all__ = [
+    "LintConfig",
+    "LintResult",
+    "StateEntry",
+    "DEFAULT_CONFIG",
+    "lint_file",
+    "lint_package",
+]

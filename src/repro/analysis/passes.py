@@ -1,0 +1,345 @@
+"""Compiled-program audit passes over Program jaxpr / MLIR / HLO.
+
+Each pass is ``(Program | inputs) -> List[Finding]`` and proves one contract
+the test suite can only sample dynamically:
+
+  * jit-cache        — the compiled-shape set is EXACTLY the contract
+                       (serve: two shapes; trainer: one per ladder bucket)
+  * dtype-promotion  — no silent f32 temporaries on bf16 paths: a
+                       ``convert bf16->f32`` may not feed a dot_general
+                       (use ``preferred_element_type`` — f32 accumulation
+                       WITHOUT materialising f32 operands), and a dot with
+                       bf16 operands may not silently emit f32
+  * donation         — every donated leaf carries ``tf.aliasing_output`` in
+                       the lowered MLIR (absent = XLA will copy, the donated
+                       buffer is NOT elided)
+  * host-transfer    — no callback/infeed/outfeed primitives inside step
+                       programs (a hidden host round-trip on the hot path)
+  * collectives      — per-kind collective bytes in the compiled HLO agree
+                       with the Eq. 15 modeled volume recorded by the
+                       program builder (tolerance covers seg/pos metadata)
+
+Passes skip representations a Program doesn't carry (e.g. Pallas kernels
+are jaxpr-only) rather than fail — the CLI reports coverage per program.
+"""
+
+from __future__ import annotations
+
+import re
+from typing import Dict, Iterable, List, Optional, Sequence
+
+from .findings import Finding
+from .program import Program
+
+# ---------------------------------------------------------------------------
+# jaxpr walking
+# ---------------------------------------------------------------------------
+
+
+def iter_eqns(jaxpr):
+    """Yield every eqn in a (closed) jaxpr, recursing into sub-jaxprs held
+    in eqn params (pjit/call_jaxpr, scan/while/cond bodies, custom_vjp)."""
+    if hasattr(jaxpr, "jaxpr"):  # ClosedJaxpr
+        jaxpr = jaxpr.jaxpr
+    for eqn in jaxpr.eqns:
+        yield eqn
+        for sub in _sub_jaxprs(eqn.params.values()):
+            yield from iter_eqns(sub)
+
+
+def _sub_jaxprs(values: Iterable):
+    for v in values:
+        if hasattr(v, "eqns") or hasattr(v, "jaxpr"):
+            yield v
+        elif isinstance(v, (list, tuple)):
+            yield from _sub_jaxprs(v)
+
+
+def _dtype_of(var) -> Optional[str]:
+    aval = getattr(var, "aval", None)
+    dt = getattr(aval, "dtype", None)
+    return str(dt) if dt is not None else None
+
+
+# ---------------------------------------------------------------------------
+# jit-cache audit
+# ---------------------------------------------------------------------------
+
+
+def audit_jit_cache(
+    observed: Dict[str, int], expected: Dict[str, int]
+) -> List[Finding]:
+    """Compare live jit-cache entry counts against the contract.
+
+    ``observed`` comes from running a reduced episode and reading
+    ``_cache_size()`` per jitted function (``ServeEngine.jit_cache_entries``,
+    trainer micro_grad compiled once per ladder bucket). Any deviation —
+    extra shapes (a silent recompile: a mis-sized chunk, an unladdered
+    bucket) or missing ones — is a finding.
+    """
+    findings = []
+    for name, want in expected.items():
+        got = observed.get(name)
+        if got is None:
+            findings.append(
+                Finding(
+                    rule="jit-cache",
+                    where=name,
+                    message=f"no observed cache entry count (expected {want})",
+                )
+            )
+        elif got != want:
+            kind = "extra compiled shapes" if got > want else "missing shapes"
+            findings.append(
+                Finding(
+                    rule="jit-cache",
+                    where=name,
+                    message=f"{got} compiled shapes, contract says {want} ({kind})",
+                    detail={"observed": got, "expected": want},
+                )
+            )
+    for name in observed:
+        if name not in expected:
+            findings.append(
+                Finding(
+                    rule="jit-cache",
+                    where=name,
+                    message="jitted function outside the audited contract",
+                )
+            )
+    return findings
+
+
+# ---------------------------------------------------------------------------
+# dtype-promotion audit
+# ---------------------------------------------------------------------------
+
+_BF16 = "bfloat16"
+_F32 = "float32"
+
+
+def audit_dtype_promotion(program: Program) -> List[Finding]:
+    """No silent f32 temporaries on bf16 paths.
+
+    Flags a ``dot_general`` whose floating operands are ALL materialised
+    bf16->f32 converts: that matmul could have run on bf16 operands with
+    ``preferred_element_type=f32`` (f32 accumulation WITHOUT the f32 operand
+    buffers in HBM). A dot with ONE converted operand and one natively-f32
+    operand is the online-softmax accumulator pattern (f32 probabilities x
+    bf16 values) — numerically required and allowlisted, as are converts
+    feeding reduce/exp/log arithmetic. Also flags a dot_general with a bf16
+    operand and f32 result that never declared ``preferred_element_type``
+    (implicit promotion outside any convert the source spells out).
+
+    The walk does NOT descend into ``pallas_call`` bodies: an in-kernel
+    ``astype(f32)`` is a VMEM/register upcast feeding the MXU — the flash
+    f32-accumulation pattern — not an HBM temporary, so the rule's memory
+    argument doesn't apply there.
+    """
+    if not program.bf16_path or program.jaxpr is None:
+        return []
+    findings: List[Finding] = []
+    seen: set = set()
+
+    def emit(key: str, message: str) -> None:
+        if (key, program.name) not in seen:
+            seen.add((key, program.name))
+            findings.append(
+                Finding(rule="dtype-promotion", where=program.name, message=message)
+            )
+
+    def walk(jaxpr):
+        if hasattr(jaxpr, "jaxpr"):
+            jaxpr = jaxpr.jaxpr
+        # var id -> True when produced by a bf16->f32 convert at this level
+        upcast: Dict[int, bool] = {}
+        for eqn in jaxpr.eqns:
+            prim = eqn.primitive.name
+            if prim == "convert_element_type":
+                if (
+                    _dtype_of(eqn.invars[0]) == _BF16
+                    and _dtype_of(eqn.outvars[0]) == _F32
+                ):
+                    upcast[id(eqn.outvars[0])] = True
+            elif prim == "dot_general":
+                float_ops = [
+                    v for v in eqn.invars
+                    if (_dtype_of(v) or "").startswith(("float", "bfloat"))
+                ]
+                converted = [v for v in float_ops if upcast.get(id(v))]
+                if float_ops and len(converted) == len(float_ops):
+                    emit(
+                        "materialised-f32-dot",
+                        "dot_general runs on materialised bf16->f32 operands: "
+                        "an f32 temporary per operand on a bf16 path (spell it "
+                        "as bf16 inputs + preferred_element_type=f32)",
+                    )
+                in_dts = {_dtype_of(v) for v in eqn.invars}
+                out_dt = _dtype_of(eqn.outvars[0])
+                if (
+                    _BF16 in in_dts
+                    and out_dt == _F32
+                    and eqn.params.get("preferred_element_type") is None
+                ):
+                    emit(
+                        "silent-f32-dot",
+                        "dot_general promotes bf16 operands to an f32 result "
+                        "without preferred_element_type",
+                    )
+            if prim != "pallas_call":
+                for sub in _sub_jaxprs(eqn.params.values()):
+                    walk(sub)
+
+    walk(program.jaxpr)
+    return findings
+
+
+# ---------------------------------------------------------------------------
+# donation audit
+# ---------------------------------------------------------------------------
+
+_ALIAS_RE = re.compile(r"tf\.aliasing_output\s*=")
+
+
+def audit_donation(program: Program) -> List[Finding]:
+    """Every donated leaf must carry ``tf.aliasing_output`` in the lowered
+    MLIR — jax drops the attr exactly when the donation is unusable (shape/
+    dtype mismatch with every output), which XLA then satisfies with a copy.
+    """
+    if not program.donate_argnums or program.lowered_text is None:
+        return []
+    aliased = len(_ALIAS_RE.findall(program.lowered_text))
+    want = program.n_donatable_leaves
+    if aliased >= want:
+        return []
+    return [
+        Finding(
+            rule="donation",
+            where=program.name,
+            message=(
+                f"{want - aliased} of {want} donated buffers not elided "
+                "(no tf.aliasing_output in lowered MLIR -> XLA copies them)"
+            ),
+            detail={"aliased": aliased, "donatable": want},
+        )
+    ]
+
+
+# ---------------------------------------------------------------------------
+# host-transfer audit
+# ---------------------------------------------------------------------------
+
+_HOST_PRIMS = {
+    "pure_callback",
+    "io_callback",
+    "callback",
+    "debug_callback",
+    "infeed",
+    "outfeed",
+    "host_local_array_to_global_array",
+}
+
+
+def audit_host_transfers(program: Program) -> List[Finding]:
+    """Step programs must be free of host round-trips: any callback/infeed
+    primitive inside the traced program stalls every step on host latency."""
+    if not program.step_program or program.jaxpr is None:
+        return []
+    hits: Dict[str, int] = {}
+    for eqn in iter_eqns(program.jaxpr):
+        if eqn.primitive.name in _HOST_PRIMS:
+            hits[eqn.primitive.name] = hits.get(eqn.primitive.name, 0) + 1
+    return [
+        Finding(
+            rule="host-transfer",
+            where=program.name,
+            message=f"{n}x {prim} inside a step program",
+            detail={"primitive": prim, "count": n},
+        )
+        for prim, n in sorted(hits.items())
+    ]
+
+
+# ---------------------------------------------------------------------------
+# collective inventory + cross-check
+# ---------------------------------------------------------------------------
+
+
+def audit_collectives(program: Program, tolerance: float = 0.10) -> List[Finding]:
+    """Compiled-HLO collective bytes must agree with the program's modeled
+    volume (``meta['modeled_bytes']``, from ``ModelProfile.volume`` on the
+    plan-derived shard) within ``tolerance`` — Eq. 8's comm term and the
+    executable stay in sync. Unmodeled kinds with nonzero bytes are flagged
+    too: a collective the cost model doesn't know about is exactly the
+    regression this pass exists to catch.
+    """
+    from .hlo import collective_inventory
+
+    modeled = program.meta.get("modeled_bytes")
+    if not modeled or program.compiled_text is None:
+        return []
+    inv = collective_inventory(program.compiled_text)
+    findings = []
+    for kind, want in modeled.items():
+        got = inv.get(kind, {}).get("bytes", 0.0)
+        if want <= 0:
+            continue
+        rel = abs(got - want) / want
+        if rel > tolerance:
+            findings.append(
+                Finding(
+                    rule="collectives",
+                    where=f"{program.name}.{kind}",
+                    message=(
+                        f"{kind} bytes {got:.0f} vs modeled {want:.0f} "
+                        f"({rel:+.1%} > {tolerance:.0%} tolerance)"
+                    ),
+                    detail={"actual": got, "modeled": want, "rel_err": rel},
+                )
+            )
+    for kind, row in inv.items():
+        if row["bytes"] > 0 and kind not in modeled:
+            findings.append(
+                Finding(
+                    rule="collectives",
+                    where=f"{program.name}.{kind}",
+                    message=(
+                        f"unmodeled collective: {row['bytes']:.0f} bytes of {kind} "
+                        "absent from the cost model"
+                    ),
+                    detail={"actual": row["bytes"]},
+                )
+            )
+    return findings
+
+
+# ---------------------------------------------------------------------------
+# driver
+# ---------------------------------------------------------------------------
+
+PROGRAM_PASSES = (
+    audit_dtype_promotion,
+    audit_donation,
+    audit_host_transfers,
+    audit_collectives,
+)
+
+
+def run_program_audits(programs: Sequence[Program]) -> List[Finding]:
+    findings: List[Finding] = []
+    for p in programs:
+        for audit in PROGRAM_PASSES:
+            findings.extend(audit(p))
+    return findings
+
+
+__all__ = [
+    "audit_jit_cache",
+    "audit_dtype_promotion",
+    "audit_donation",
+    "audit_host_transfers",
+    "audit_collectives",
+    "run_program_audits",
+    "iter_eqns",
+    "PROGRAM_PASSES",
+]

@@ -1,0 +1,458 @@
+"""Trace/lower the repo's REAL hot paths into auditable Program objects.
+
+A ``Program`` bundles every representation a pass might need:
+
+  * ``jaxpr``        — closed jaxpr (dtype-promotion, host-transfer audits)
+  * ``lowered_text`` — StableHLO MLIR (donation audit: ``tf.aliasing_output``)
+  * ``compiled_text``— post-partitioning HLO (collective inventory)
+
+Builders construct reduced-but-real configurations: the SAME
+``make_micro_grad`` the Trainer jits (one per ladder bucket), the SAME
+``prefill_chunk``/``decode_step`` lambdas the serve engine jits, the SAME
+``flash_attention`` custom_vjp, and the SAME ``ring_attention`` /
+``all_gather_kv`` shard_map bodies the CP executor uses — nothing here is a
+mock, so what the passes prove holds for the production call sites.
+
+Dist programs need a multi-device backend
+(``XLA_FLAGS=--xla_force_host_platform_device_count=N`` before jax import
+— ``launch/analyze.py`` does this); builders raise ``SkippedProgram`` when
+the topology is unavailable so the CLI can report the gap instead of
+silently passing.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Tuple
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from ..core.perf_model import ModelProfile
+from ..data.packing import BucketSpec, bucket_ladder
+from ..models.transformer import CallConfig, init_model
+
+
+class SkippedProgram(RuntimeError):
+    """A program could not be built in this environment (e.g. 1 device)."""
+
+
+@dataclasses.dataclass
+class Program:
+    """One traced/lowered hot-path program plus audit expectations."""
+
+    name: str  # e.g. "trainer.micro_grad[c128+d128]"
+    kind: str  # trainer | serve | kernel | dist
+    jaxpr: Any = None  # jax.core.ClosedJaxpr
+    lowered_text: Optional[str] = None  # StableHLO MLIR
+    compiled_text: Optional[str] = None  # post-partitioning HLO
+    donate_argnums: Tuple[int, ...] = ()
+    n_donatable_leaves: int = 0  # array leaves under donated argnums
+    bf16_path: bool = False  # dtype-promotion audit applies
+    step_program: bool = False  # host-transfer audit applies
+    meta: Dict[str, Any] = dataclasses.field(default_factory=dict)
+
+
+# ---------------------------------------------------------------------------
+# Reduced configurations (mirror tests/conftest.py tiny_dense)
+# ---------------------------------------------------------------------------
+
+
+def reduced_arch(**over) -> ArchConfig:
+    kw = dict(
+        name="analysis-tiny",
+        family="dense",
+        modality="text",
+        n_layers=2,
+        d_model=64,
+        n_heads=4,
+        kv_heads=2,
+        d_ff=128,
+        vocab=256,
+        head_dim=16,
+    )
+    kw.update(over)
+    return ArchConfig(**kw)
+
+
+def reduced_call(dtype=jnp.bfloat16, **over) -> CallConfig:
+    kw = dict(attention_impl="chunked", remat="none", kv_chunk=64, dtype=dtype)
+    kw.update(over)
+    return CallConfig(**kw)
+
+
+def _count_leaves(tree) -> int:
+    return len(jax.tree.leaves(tree))
+
+
+def _lower_text(jitted, *args) -> str:
+    return jitted.lower(*args).as_text()
+
+
+# ---------------------------------------------------------------------------
+# Trainer: one micro_grad program per ladder bucket + the donated accumulator
+# ---------------------------------------------------------------------------
+
+
+def trainer_bucket_buffers(spec: BucketSpec, ws: int = 1) -> Dict[str, jnp.ndarray]:
+    """Zero-token buffers in the exact packed-bucket layout (shapes are all
+    that matter for trace/lower)."""
+    out: Dict[str, jnp.ndarray] = {}
+    for region, cap in (("loc", spec.c_loc), ("dist", spec.c_dist)):
+        for field in ("tokens", "segs", "pos", "labels"):
+            out[f"{region}_{field}"] = jnp.zeros((ws, spec.n_cp, cap), jnp.int32)
+    return out
+
+
+def build_trainer_programs(
+    cfg: Optional[ArchConfig] = None,
+    call: Optional[CallConfig] = None,
+    c_budget: int = 256,
+    n_cp: int = 1,
+    ws: int = 1,
+) -> List[Program]:
+    """One Program per ladder bucket (the jit-cache contract: the trainer
+    compiles exactly this set) plus the donated accumulate program."""
+    from ..train.step import make_accumulate, make_micro_grad
+
+    cfg = cfg or reduced_arch()
+    call = call or reduced_call()
+    params = init_model(jax.random.PRNGKey(0), cfg)
+    ladder = bucket_ladder(c_budget, n_cp)
+    denom = jnp.float32(1.0)
+    bf16 = call.dtype == jnp.bfloat16
+
+    programs: List[Program] = []
+    micro = make_micro_grad(cfg, call)
+    for spec in ladder:
+        buffers = trainer_bucket_buffers(spec, ws)
+        jitted = jax.jit(micro)
+        lowered = jitted.lower(params, buffers, denom)
+        programs.append(
+            Program(
+                name=f"trainer.micro_grad[c{spec.c_loc}+d{spec.c_dist}]",
+                kind="trainer",
+                jaxpr=jax.make_jaxpr(micro)(params, buffers, denom),
+                lowered_text=lowered.as_text(),
+                bf16_path=bf16,
+                step_program=True,
+                meta={"bucket": (spec.n_cp, spec.c_loc, spec.c_dist)},
+            )
+        )
+
+    # the sync-free accumulator — donated argnums (0, 1, 2) exactly as the
+    # Trainer declares them off-CPU (train/loop.py)
+    grads, _ = jax.eval_shape(lambda p, b, d: micro(p, b, d), params,
+                              trainer_bucket_buffers(ladder[0], ws), denom)
+    acc = jax.tree.map(lambda s: jnp.zeros(s.shape, jnp.float32), grads)
+    g0 = jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), grads)
+    metrics = {"loss_sum": jnp.float32(0.0), "valid": jnp.int32(0)}
+    accum = jax.jit(make_accumulate(), donate_argnums=(0, 1, 2))
+    lowered = accum.lower(acc, jnp.float32(0.0), jnp.int32(0), g0, metrics)
+    programs.append(
+        Program(
+            name="trainer.accumulate",
+            kind="trainer",
+            jaxpr=jax.make_jaxpr(make_accumulate())(
+                acc, jnp.float32(0.0), jnp.int32(0), g0, metrics
+            ),
+            lowered_text=lowered.as_text(),
+            donate_argnums=(0, 1, 2),
+            n_donatable_leaves=_count_leaves(acc) + 2,
+            step_program=True,
+            meta={"ladder_len": len(ladder)},
+        )
+    )
+    return programs
+
+
+def trainer_expected_cache_size(c_budget: int = 256, n_cp: int = 1) -> int:
+    """The jit-cache contract: one compiled micro_grad per ladder bucket."""
+    return len(bucket_ladder(c_budget, n_cp))
+
+
+# ---------------------------------------------------------------------------
+# Serve: the engine's ONLY two jitted shapes
+# ---------------------------------------------------------------------------
+
+
+def build_serve_programs(
+    cfg: Optional[ArchConfig] = None,
+    call: Optional[CallConfig] = None,
+    max_slots: int = 2,
+    max_len: int = 64,
+    chunk: int = 32,
+) -> List[Program]:
+    """Lower the serve engine's prefill-chunk and batched-decode programs
+    with the exact argument trees ``ServeEngine`` feeds its two jitted
+    functions (one slot's caches for prefill; the full batched cache tree
+    plus the active mask for decode)."""
+    from ..serve.sequence_buffer import SequenceBuffer
+    from ..train.serve import decode_step, prefill_chunk
+
+    cfg = cfg or reduced_arch()
+    call = call or reduced_call()
+    params = init_model(jax.random.PRNGKey(0), cfg)
+    buffer = SequenceBuffer(
+        params, cfg, max_slots, max_len,
+        dtype=call.dtype, kv_cache_dtype=call.kv_cache_dtype,
+    )
+    bf16 = call.dtype == jnp.bfloat16
+
+    def chunk_fn(p, t, start, n, caches):
+        return prefill_chunk(p, cfg, call, t, start, n, caches)
+
+    def decode_fn(p, tok, lens, caches, act):
+        return decode_step(p, cfg, call, tok, lens, caches, act)
+
+    chunk_args = (
+        params,
+        jnp.zeros((1, chunk), jnp.int32),
+        jnp.int32(0),
+        jnp.int32(chunk),
+        buffer.slot_caches(0),
+    )
+    decode_args = (
+        params,
+        jnp.zeros((max_slots,), jnp.int32),
+        jnp.zeros((max_slots,), jnp.int32),
+        buffer.caches,
+        jnp.zeros((max_slots,), bool),
+    )
+    programs = []
+    for name, fn, args in (
+        ("serve.prefill_chunk", chunk_fn, chunk_args),
+        ("serve.decode", decode_fn, decode_args),
+    ):
+        jitted = jax.jit(fn)
+        programs.append(
+            Program(
+                name=name,
+                kind="serve",
+                jaxpr=jax.make_jaxpr(fn)(*args),
+                lowered_text=jitted.lower(*args).as_text(),
+                bf16_path=bf16,
+                step_program=True,
+                meta={"chunk": chunk, "max_slots": max_slots},
+            )
+        )
+    return programs
+
+
+# ---------------------------------------------------------------------------
+# Kernels: flash fwd/bwd (jaxpr only — Pallas lowers via interpret on CPU)
+# ---------------------------------------------------------------------------
+
+
+def build_flash_programs(
+    t: int = 128, s: int = 128, hq: int = 4, hkv: int = 2, d: int = 16,
+    dtype=jnp.bfloat16,
+) -> List[Program]:
+    """Trace flash fwd and bwd. Jaxpr-level only: the audits that apply to a
+    Pallas program (dtype discipline inside the wrapper, host transfers) all
+    read the jaxpr; HLO of an interpret-mode kernel would audit the
+    emulation, not the kernel."""
+    from ..kernels.ops import flash_attention
+
+    q = jnp.zeros((t, hq, d), dtype)
+    k = jnp.zeros((s, hkv, d), dtype)
+    v = jnp.zeros((s, hkv, d), dtype)
+    q_seg = jnp.ones((t,), jnp.int32)
+    kv_seg = jnp.ones((s,), jnp.int32)
+    q_pos = jnp.arange(t, dtype=jnp.int32)
+    kv_pos = jnp.arange(s, dtype=jnp.int32)
+
+    def fwd(q, k, v):
+        return flash_attention(q, k, v, q_seg, kv_seg, q_pos, kv_pos)
+
+    def bwd(q, k, v):
+        return jax.grad(lambda *a: fwd(*a).astype(jnp.float32).sum(), argnums=(0, 1, 2))(
+            q, k, v
+        )
+
+    bf16 = dtype == jnp.bfloat16
+    return [
+        Program(
+            name="kernel.flash_fwd", kind="kernel",
+            jaxpr=jax.make_jaxpr(fwd)(q, k, v), bf16_path=bf16,
+        ),
+        Program(
+            name="kernel.flash_bwd", kind="kernel",
+            jaxpr=jax.make_jaxpr(bwd)(q, k, v), bf16_path=bf16,
+        ),
+    ]
+
+
+# ---------------------------------------------------------------------------
+# Dist: CP-ring step + gathered-KV, compiled to HLO on a reduced topology
+# ---------------------------------------------------------------------------
+
+
+def _profile_for(cfg: ArchConfig, dtype) -> ModelProfile:
+    prof = cfg.to_profile()
+    return dataclasses.replace(prof, dtype_bytes=jnp.dtype(dtype).itemsize)
+
+
+def build_dist_programs(
+    cfg: Optional[ArchConfig] = None,
+    n_cp: int = 4,
+    tokens_per_rank: int = 128,
+    dtype=jnp.float32,
+) -> List[Program]:
+    """Compile gathered-KV and ring-attention shard_map programs over a
+    ``n_cp``-device "model" mesh axis and record the Eq. 15 modeled volume
+    (``ModelProfile.volume``) for the collective cross-check.
+
+    ``tokens_per_rank`` is the per-rank dist shard C — callers derive it
+    from a lowered ``dist/plan.ExecutionPlan`` (see
+    ``dist_shard_from_plan``) so the modeled side is literally what the
+    scheduler promised.
+
+    Default dtype is f32: the CPU backend lowers bf16 collectives by
+    upcasting to f32 around the op (visible as convert/all-gather(f32)/
+    convert in the compiled HLO), which would double the measured bytes
+    for reasons that have nothing to do with repo code. f32 passes through
+    collectives unchanged on every backend, so the byte cross-check stays
+    meaningful on the reduced host topology.
+    """
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    from ..dist.collectives import all_gather_kv, ring_attention
+
+    cfg = cfg or reduced_arch()
+    if len(jax.devices()) < n_cp:
+        raise SkippedProgram(
+            f"dist programs need {n_cp} devices, have {len(jax.devices())} "
+            "(set XLA_FLAGS=--xla_force_host_platform_device_count before jax import)"
+        )
+    mesh = jax.make_mesh((n_cp,), ("model",))
+    hkv, d = cfg.kv_heads, cfg.head_dim_
+    hq = cfg.n_heads
+    c = tokens_per_rank
+    s_total = c * n_cp
+    prof = _profile_for(cfg, dtype)
+
+    k = jnp.zeros((s_total, hkv, d), dtype)
+    v = jnp.zeros((s_total, hkv, d), dtype)
+    q = jnp.zeros((s_total, hq, d), dtype)
+    seg = jnp.ones((s_total,), jnp.int32)
+    pos = jnp.arange(s_total, dtype=jnp.int32)
+
+    def gather_body(ks, vs):
+        return all_gather_kv(ks, "model"), all_gather_kv(vs, "model")
+
+    gather = shard_map(
+        gather_body, mesh=mesh,
+        in_specs=(P("model"), P("model")),
+        out_specs=(P(), P()),
+        check_rep=False,
+    )
+
+    def ring_body(qs, ks, vs, qseg, kseg, qpos, kpos):
+        return ring_attention(
+            qs, ks, vs, qseg, kseg, qpos, kpos,
+            axis_name="model", axis_size=n_cp,
+        )
+
+    ring = shard_map(
+        ring_body, mesh=mesh,
+        in_specs=(P("model"),) * 7,
+        out_specs=P("model"),
+        check_rep=False,
+    )
+
+    programs = []
+    spec_g = jax.jit(gather)
+    lowered_g = spec_g.lower(k, v)
+    programs.append(
+        Program(
+            name="dist.gather_kv",
+            kind="dist",
+            jaxpr=jax.make_jaxpr(gather)(k, v),
+            lowered_text=lowered_g.as_text(),
+            compiled_text=lowered_g.compile().as_text(),
+            bf16_path=dtype == jnp.bfloat16,
+            meta={
+                # per-rank all-gather result bytes = full K+V = Eq. 15 volume
+                "modeled_bytes": {"all-gather": prof.volume(s_total)},
+                "n_cp": n_cp,
+                "tokens_per_rank": c,
+            },
+        )
+    )
+    spec_r = jax.jit(ring)
+    lowered_r = spec_r.lower(q, k, v, seg, seg, pos, pos)
+    programs.append(
+        Program(
+            name="dist.ring_step",
+            kind="dist",
+            jaxpr=jax.make_jaxpr(ring)(q, k, v, seg, seg, pos, pos),
+            lowered_text=lowered_r.as_text(),
+            compiled_text=lowered_r.compile().as_text(),
+            bf16_path=dtype == jnp.bfloat16,
+            meta={
+                # (n-1) rotations of this rank's C-token KV stripe
+                # = (n-1)/n of the Eq. 15 volume; seg/pos int32 metadata
+                # rides along (8 bytes/token vs 2*kv_dim*dtype_bytes)
+                "modeled_bytes": {
+                    "collective-permute": prof.volume(s_total) * (n_cp - 1) / n_cp
+                },
+                "n_cp": n_cp,
+                "tokens_per_rank": c,
+            },
+        )
+    )
+    return programs
+
+
+def dist_shard_from_plan(
+    ws: int = 1, n_cp: int = 4, c_budget: int = 256, seed: int = 0
+) -> int:
+    """Per-rank dist-shard token count from a REAL lowered schedule.
+
+    Runs the Skrull scheduler (GDS+DACP) on a synthetic long-tail batch,
+    lowers it with ``dist/plan.lower_schedule`` on an abstract mesh, and
+    returns the largest per-rank dist shard — the C the collective
+    cross-check builds its programs at, so the modeled side of the audit is
+    the scheduler's own accounting, not a hand-picked shape.
+    """
+    from ..core.gds import schedule_global_batch
+    from ..dist.plan import lower_schedule
+
+    rng = np.random.default_rng(seed)
+    # long-tail mix: half short, half requiring distribution across CP
+    short = rng.integers(16, c_budget // 2, size=8)
+    long_ = rng.integers(c_budget + 1, c_budget * n_cp, size=4)
+    lengths = np.concatenate([short, long_]).tolist()
+    sched = schedule_global_batch(lengths, ws=ws, n_cp=n_cp, bucket_size=c_budget)
+
+    class _AbstractMesh:
+        # duck-types dist/sharding.mesh_axis_sizes without allocating devices
+        axis_names = ("data", "model")
+        devices = np.empty((ws, n_cp), dtype=object)
+
+    plan = lower_schedule(sched, _AbstractMesh())
+    shards = [int(st.dist_tokens.max()) for st in plan.steps]
+    best = max(shards) if shards else 0
+    if best <= 0:
+        raise SkippedProgram("schedule produced no distributed sequences")
+    return best
+
+
+__all__ = [
+    "Program",
+    "SkippedProgram",
+    "reduced_arch",
+    "reduced_call",
+    "trainer_bucket_buffers",
+    "build_trainer_programs",
+    "trainer_expected_cache_size",
+    "build_serve_programs",
+    "build_flash_programs",
+    "build_dist_programs",
+    "dist_shard_from_plan",
+]

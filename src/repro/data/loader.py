@@ -217,19 +217,24 @@ class SkrullDataLoader:
         return rng.permutation(len(self.dataset))
 
     def _next_indices(self) -> np.ndarray:
-        perm = self._permutation(self._state.epoch)
-        out: List[int] = []
-        cursor = self._state.cursor
-        epoch = self._state.epoch
-        while len(out) < self.global_batch:
-            if cursor >= len(perm):
-                epoch += 1
-                cursor = 0
-                perm = self._permutation(epoch)
-            out.append(int(perm[cursor]))
-            cursor += 1
-        self._state = LoaderState(epoch=epoch, cursor=cursor, seed=self._state.seed)
-        return np.asarray(out, dtype=np.int64)
+        # re-acquires the (reentrant) lock so the cursor advance is safe even
+        # if a future call site forgets the guard next_iteration provides
+        with self._mu:
+            perm = self._permutation(self._state.epoch)
+            out: List[int] = []
+            cursor = self._state.cursor
+            epoch = self._state.epoch
+            while len(out) < self.global_batch:
+                if cursor >= len(perm):
+                    epoch += 1
+                    cursor = 0
+                    perm = self._permutation(epoch)
+                out.append(int(perm[cursor]))
+                cursor += 1
+            self._state = LoaderState(
+                epoch=epoch, cursor=cursor, seed=self._state.seed
+            )
+            return np.asarray(out, dtype=np.int64)
 
     def scheduling_context(self) -> SchedulingContext:
         return SchedulingContext(

@@ -100,7 +100,7 @@ def merge_softmax_partials(
 
 def _ring_step_xla(
     carry: Carry,
-    qg: jnp.ndarray,  # (T, Hkv, G, D) f32
+    qg: jnp.ndarray,  # (T, Hkv, G, D) native dtype; scores accumulate f32
     kc: jnp.ndarray,  # (C, Hkv, D)
     vc: jnp.ndarray,
     q_seg: jnp.ndarray,  # (T,)
@@ -111,7 +111,12 @@ def _ring_step_xla(
     scale: float,
 ) -> Carry:
     m_prev, l_prev, acc = carry
-    scores = jnp.einsum("thgd,shd->thgs", qg, kc.astype(jnp.float32)) * scale
+    # bf16 operands with f32 accumulation: no materialised f32 q/k temporary
+    # (exact for f32 inputs — the bit-exactness tests see identical numerics)
+    scores = (
+        jnp.einsum("thgd,shd->thgs", qg, kc, preferred_element_type=jnp.float32)
+        * scale
+    )
     mask = _mask(q_seg, kc_seg, q_pos, kc_pos, window)  # (T, C)
     scores = jnp.where(mask[:, None, None], scores, _NEG)
     m_new = jnp.maximum(m_prev, scores.max(axis=-1))
@@ -254,7 +259,9 @@ def ring_attention(
     hkv = k.shape[1]
     g = hq // hkv
     scale = 1.0 / math.sqrt(d)
-    qg = q.reshape(t, hkv, g, d).astype(jnp.float32)
+    # native-dtype queries: the scores einsum accumulates in f32 via
+    # preferred_element_type, so no (T, Hq, D) f32 copy lives in HBM
+    qg = q.reshape(t, hkv, g, d)
 
     perm = [(j, (j + 1) % n) for j in range(n)]
     carry = _init_carry(t, hkv, g, d)
@@ -315,7 +322,7 @@ def ring_attention_rows(
         out = jnp.where(l[..., None] > 0, acc / jnp.maximum(l[..., None], 1e-30), 0.0)
         return out.transpose(1, 0, 2).reshape(r, c, hq, d).astype(q.dtype)
 
-    qg = q.reshape(t, hkv, g, d).astype(jnp.float32)
+    qg = q.reshape(t, hkv, g, d)
 
     def body(carry, stripe):
         kc, vc, ks, kp = stripe

@@ -1,0 +1,215 @@
+"""Static-analysis CLI: compiled-program audits + concurrency lint as a gate.
+
+Runs both pass families of ``repro.analysis`` on reduced-but-real
+configurations and reports findings against a checked-in baseline:
+
+  program family
+    * trainer micro_grad traced/lowered per ladder bucket, the donated
+      accumulator, serve prefill-chunk + batched decode, flash fwd/bwd
+      (jaxpr), and the CP ring/gather collectives compiled on a forced
+      8-host-device topology
+    * LIVE jit-cache audit: a reduced serve episode must leave exactly two
+      compiled shapes; driving one micro_grad through every ladder bucket
+      must leave exactly one entry per bucket
+    * collective bytes cross-checked against the Eq. 15 modeled volume on a
+      shard size taken from a real lowered schedule (dist/plan)
+
+  lint family
+    * AST concurrency + discipline lint over the four-host-thread surface
+
+Exit status with ``--check``: non-zero iff there are findings absent from
+the baseline, or stale baseline entries (the allowlist may never rot).
+
+Usage:
+  python -m repro.launch.analyze --check
+  python -m repro.launch.analyze --report           # human-readable detail
+  python -m repro.launch.analyze --check --no-dist  # single-device env
+"""
+
+import os
+
+# before any jax import: the dist programs compile real collectives over 8
+# forced host devices (same pattern as launch/dryrun.py)
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import argparse
+import sys
+from pathlib import Path
+from typing import List, Optional, Tuple
+
+DEFAULT_BASELINE = Path(__file__).resolve().parent.parent / "analysis" / "baseline.json"
+
+
+def _build_programs(include_dist: bool, notes: List[str]):
+    from repro.analysis.program import (
+        SkippedProgram,
+        build_dist_programs,
+        build_flash_programs,
+        build_serve_programs,
+        build_trainer_programs,
+        dist_shard_from_plan,
+    )
+
+    programs: list = []
+    programs += build_trainer_programs()
+    programs += build_serve_programs()
+    programs += build_flash_programs()
+    if include_dist:
+        try:
+            shard = dist_shard_from_plan()
+            programs += build_dist_programs(n_cp=4, tokens_per_rank=shard)
+            notes.append(f"dist programs built at plan-derived shard C={shard}")
+        except SkippedProgram as e:
+            notes.append(f"dist programs SKIPPED: {e}")
+    else:
+        notes.append("dist programs skipped (--no-dist)")
+    return programs
+
+
+def _live_jit_cache(notes: List[str]):
+    """Drive the real jit caches on reduced configs and audit the counts."""
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.analysis.passes import audit_jit_cache
+    from repro.analysis.program import (
+        reduced_arch,
+        reduced_call,
+        trainer_bucket_buffers,
+    )
+    from repro.data.packing import bucket_ladder
+    from repro.models.transformer import init_model
+    from repro.serve.engine import ServeEngine
+    from repro.serve.request import Request
+    from repro.train.step import make_micro_grad
+
+    cfg = reduced_arch()
+    # f32 serve episode: fast, association-order-stable on CPU
+    call = reduced_call(dtype=jnp.float32, attention_impl="dense")
+    params = init_model(jax.random.PRNGKey(0), cfg)
+
+    engine = ServeEngine(
+        params, cfg, call, max_slots=2, max_len=48, prefill_chunk_size=16
+    )
+    rng = np.random.default_rng(0)
+    engine.run(
+        [
+            Request(rid=0, prompt=rng.integers(1, 255, size=20), max_new_tokens=4),
+            Request(rid=1, prompt=rng.integers(1, 255, size=7), max_new_tokens=3),
+        ]
+    )
+    observed = engine.jit_cache_entries()
+    expected = {"serve.prefill_chunk": 1, "serve.decode": 1}
+    notes.append(f"serve episode compiled shapes: {observed}")
+
+    c_budget, n_cp = 256, 1
+    ladder = bucket_ladder(c_budget, n_cp)
+    micro = jax.jit(make_micro_grad(cfg, reduced_call()))
+    denom = jnp.float32(64.0)
+    for spec in ladder:
+        micro(params, trainer_bucket_buffers(spec), denom)
+    observed["trainer.micro_grad"] = micro._cache_size()
+    expected["trainer.micro_grad"] = len(ladder)
+    notes.append(
+        f"trainer compiled shapes: {micro._cache_size()} "
+        f"(ladder has {len(ladder)} buckets)"
+    )
+    return audit_jit_cache(observed, expected)
+
+
+def run_analysis(
+    families: Tuple[str, ...] = ("program", "lint"),
+    include_dist: bool = True,
+    live_cache: bool = True,
+):
+    """Returns (findings, notes, catalog). Importable for tests."""
+    findings: list = []
+    notes: List[str] = []
+    catalog: list = []
+    if "program" in families:
+        from repro.analysis.passes import run_program_audits
+
+        programs = _build_programs(include_dist, notes)
+        notes.append(f"audited {len(programs)} programs: "
+                     + ", ".join(p.name for p in programs))
+        findings.extend(run_program_audits(programs))
+        if live_cache:
+            findings.extend(_live_jit_cache(notes))
+    if "lint" in families:
+        from repro.analysis.lint import lint_package
+
+        res = lint_package()
+        findings.extend(res.findings)
+        catalog = res.catalog
+        notes.append(
+            f"lint: {len(res.findings)} findings over {len(res.catalog)} "
+            "cataloged mutable-state entries"
+        )
+    return findings, notes, catalog
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--check", action="store_true",
+                    help="exit non-zero on unbaselined findings")
+    ap.add_argument("--baseline", type=Path, default=DEFAULT_BASELINE,
+                    help=f"allowlist JSON (default {DEFAULT_BASELINE})")
+    ap.add_argument("--families", default="program,lint",
+                    help="comma list: program,lint")
+    ap.add_argument("--no-dist", action="store_true",
+                    help="skip multi-device collective programs")
+    ap.add_argument("--no-live-cache", action="store_true",
+                    help="skip the live jit-cache episode")
+    ap.add_argument("--report", action="store_true",
+                    help="print the mutable-state catalog and accepted findings")
+    args = ap.parse_args(argv)
+
+    from repro.analysis.findings import Baseline
+
+    families = tuple(f.strip() for f in args.families.split(",") if f.strip())
+    findings, notes, catalog = run_analysis(
+        families=families,
+        include_dist=not args.no_dist,
+        live_cache=not args.no_live_cache,
+    )
+    baseline = Baseline.load(args.baseline)
+    new, accepted, stale = baseline.split(findings)
+
+    for n in notes:
+        print(f"[analyze] {n}")
+    if args.report and catalog:
+        print("\n== shared mutable state (four-thread surface) ==")
+        for e in catalog:
+            guard = (
+                f" guards={'/'.join(e.guards)} ({e.guarded_writes} guarded, "
+                f"{e.bare_writes} bare)" if e.kind == "instance" else ""
+            )
+            print(f"  [{e.kind}] {e.where}{guard}")
+    if accepted:
+        print("\n== baselined findings (accepted) ==")
+        for f in accepted:
+            print(f"  {f.render()}")
+            print(f"    justification: {baseline.entries[f.fingerprint]}")
+    if new:
+        print("\n== NEW findings ==")
+        for f in new:
+            print(f"  {f.render()}")
+    if stale:
+        print("\n== STALE baseline entries (no longer matched) ==")
+        for fp in stale:
+            print(f"  {fp}: {baseline.entries[fp]}")
+
+    ok = not new and not stale
+    print(
+        f"\n[analyze] {len(findings)} findings "
+        f"({len(new)} new, {len(accepted)} baselined, {len(stale)} stale entries)"
+        + (" — PASS" if ok else " — FAIL")
+    )
+    if args.check and not ok:
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -29,7 +29,6 @@ from functools import partial
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from ..configs.base import SHAPES, ArchConfig, ShapeSpec, supports_long_context
@@ -193,12 +192,12 @@ def lower_cell(cfg: ArchConfig, shape: ShapeSpec, mesh, mesh_name: str):
         args = [state_sds.params, token, lengths, caches]
         extra = {}
 
-    t0 = time.time()
+    t0 = time.perf_counter()
     lowered = fn.lower(*args)
-    t_lower = time.time() - t0
-    t0 = time.time()
+    t_lower = time.perf_counter() - t0
+    t0 = time.perf_counter()
     compiled = lowered.compile()
-    t_compile = time.time() - t0
+    t_compile = time.perf_counter() - t0
 
     rec = {"lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1), **extra}
     try:

@@ -1,242 +1,25 @@
-"""Roofline-term extraction from partitioned, scheduled HLO text.
+"""Thin re-export: HLO roofline-term extraction moved to ``repro.analysis``.
 
-XLA's ``compiled.cost_analysis()`` counts a while-loop body ONCE, so any
-scan-over-layers model under-reports FLOPs/bytes/collectives by the trip
-count. This module re-derives honest per-device numbers from the HLO text:
-
-  1. per computation: dot FLOPs (result shape x contracted size via a symbol
-     table of op result shapes) and collective bytes (all-gather / all-reduce
-     / reduce-scatter / all-to-all / collective-permute),
-  2. call graph (fusion ``calls=``, ``to_apply=``, while body/condition,
-     conditional branches),
-  3. while trip counts from ``backend_config={"known_trip_count":{"n":...}}``
-     (fallback: largest scalar constant in the condition computation),
-  4. multiplier propagation from ENTRY.
-
-Shapes in partitioned HLO are per-device, so totals line up with per-chip
-roofline denominators. Cross-checked against analytic 6*N*D model FLOPs in
-benchmarks/roofline.py.
+The implementation grew into the static-analysis pass framework
+(``repro.analysis.hlo``) where the collective-inventory pass extends it
+with per-kind reduce-scatter/collective-permute byte accounting. This
+module keeps the historical import path stable for callers and tests.
 """
 
 from __future__ import annotations
 
-import re
-from collections import defaultdict
-from typing import Dict, List, Optional, Tuple
-
-_DTYPE_BYTES = {
-    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
-    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
-    "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1, "u4": 1, "s4": 1,
-}
-
-_COLLECTIVES = (
-    "all-gather",
-    "all-reduce",
-    "reduce-scatter",
-    "all-to-all",
-    "collective-permute",
+from repro.analysis.hlo import (
+    HloStats,
+    analyze_hlo,
+    collective_bytes,
+    collective_inventory,
+    per_computation_report,
 )
 
-_SHAPE_RE = re.compile(r"\b([a-z0-9]+)\[([0-9,]*)\]")
-_OP_RE = re.compile(r"^\s*(?:ROOT\s+)?%([\w\.\-]+)\s*=\s*(.*)$")
-
-
-def _bytes_of(dtype: str, dims: List[int]) -> int:
-    b = _DTYPE_BYTES.get(dtype, 0)
-    n = 1
-    for x in dims:
-        n *= x
-    return n * b
-
-
-def _first_shape(rhs: str) -> Optional[Tuple[str, List[int]]]:
-    m = _SHAPE_RE.search(rhs)
-    if not m:
-        return None
-    dims = [int(x) for x in m.group(2).split(",")] if m.group(2) else []
-    return m.group(1), dims
-
-
-def _dims_list(rhs: str, attr: str) -> List[int]:
-    m = re.search(rf"{attr}=\{{([0-9,]*)\}}", rhs)
-    if not m or not m.group(1):
-        return []
-    return [int(x) for x in m.group(1).split(",")]
-
-
-class HloStats:
-    def __init__(self, text: str):
-        self.flops: Dict[str, float] = defaultdict(float)
-        self.coll: Dict[str, Dict[str, float]] = defaultdict(lambda: defaultdict(float))
-        self.calls: Dict[str, List[str]] = defaultdict(list)
-        # comp -> list of (body, cond, trip_count or None)
-        self.whiles: Dict[str, List[Tuple[str, str, Optional[int]]]] = defaultdict(list)
-        self.cond_consts: Dict[str, List[int]] = defaultdict(list)
-        self.entry: Optional[str] = None
-        self._parse(text)
-
-    def _parse(self, text: str) -> None:
-        comp = None
-        shapes: Dict[str, Tuple[str, List[int]]] = {}
-        for raw in text.splitlines():
-            line = raw.rstrip()
-            stripped = line.strip()
-            if stripped.endswith("{") and "->" in stripped and " = " not in stripped:
-                m = re.match(r"^(ENTRY\s+)?%?([\w\.\-]+)", stripped)
-                if m:
-                    comp = m.group(2)
-                    if m.group(1):
-                        self.entry = comp
-                continue
-            if comp is None or not stripped or stripped.startswith("}"):
-                continue
-            om = _OP_RE.match(line)
-            if not om:
-                continue
-            name, rhs = om.group(1), om.group(2)
-            fs = _first_shape(rhs)
-            if fs:
-                shapes[name] = fs
-
-            for m in re.finditer(r"constant\((\d+)\)", rhs):
-                self.cond_consts[comp].append(int(m.group(1)))
-
-            if re.search(r"\bdot\(", rhs):
-                self._add_dot(comp, rhs, shapes)
-                continue
-
-            hit = None
-            for c in _COLLECTIVES:
-                if re.search(rf"\b{c}(-start)?\(", rhs):
-                    hit = c
-                    break
-            if hit:
-                result_b = _bytes_of(*fs) if fs else 0
-                operand_b = 0
-                am = re.search(r"\(([^)]*)\)", rhs[rhs.index(hit):])
-                if am:
-                    for op_name in re.findall(r"%([\w\.\-]+)", am.group(1)):
-                        if op_name in shapes:
-                            operand_b = max(operand_b, _bytes_of(*shapes[op_name]))
-                moved = max(result_b, operand_b) if hit == "reduce-scatter" else result_b
-                self.coll[comp][hit] += moved
-                self.coll[comp]["count"] += 1
-
-            if "while(" in rhs:
-                body = re.search(r"body=%?([\w\.\-]+)", rhs)
-                cond = re.search(r"condition=%?([\w\.\-]+)", rhs)
-                tc = None
-                tcm = re.search(r'"known_trip_count":\{"n":"(\d+)"\}', rhs)
-                if tcm:
-                    tc = int(tcm.group(1))
-                if body and cond:
-                    self.whiles[comp].append((body.group(1), cond.group(1), tc))
-            else:
-                for m in re.finditer(r"(?:calls|to_apply)=\{?%?([\w\.\-]+)\}?", rhs):
-                    self.calls[comp].append(m.group(1))
-                bm = re.search(r"branch_computations=\{([^}]*)\}", rhs)
-                if bm:
-                    for b in bm.group(1).split(","):
-                        self.calls[comp].append(b.strip().lstrip("%"))
-
-    def _add_dot(self, comp: str, rhs: str, shapes) -> None:
-        fs = _first_shape(rhs)
-        if not fs:
-            return
-        result_elems = 1
-        for x in fs[1]:
-            result_elems *= x
-        lcd = _dims_list(rhs, "lhs_contracting_dims")
-        k = 1
-        am = re.search(r"\bdot\(([^)]*)\)", rhs)
-        if am:
-            ops = re.findall(r"%([\w\.\-]+)", am.group(1))
-            if ops and ops[0] in shapes:
-                lhs_dims = shapes[ops[0]][1]
-                for i in lcd:
-                    if i < len(lhs_dims):
-                        k *= lhs_dims[i]
-        self.flops[comp] += 2.0 * result_elems * k
-
-    def _trip_count(self, cond: str, known: Optional[int]) -> int:
-        if known:
-            return known
-        usable = [c for c in self.cond_consts.get(cond, []) if 0 < c < 1_000_000]
-        return max(usable) if usable else 1
-
-    def totals(self) -> Dict[str, object]:
-        mult: Dict[str, float] = defaultdict(float)
-        stack = set()
-
-        def visit(comp: str, m: float):
-            if comp in stack:
-                return
-            mult[comp] += m
-            stack.add(comp)
-            for callee in self.calls.get(comp, []):
-                visit(callee, m)
-            for body, cond, tc in self.whiles.get(comp, []):
-                n = self._trip_count(cond, tc)
-                visit(body, m * n)
-                visit(cond, m * (n + 1))
-            stack.discard(comp)
-
-        if self.entry:
-            visit(self.entry, 1.0)
-        flops = sum(self.flops[c] * mult.get(c, 0.0) for c in self.flops)
-        coll: Dict[str, float] = defaultdict(float)
-        for c, d in self.coll.items():
-            for k, v in d.items():
-                coll[k] += v * mult.get(c, 0.0)
-        coll["total"] = sum(coll[c] for c in _COLLECTIVES)
-        return {"dot_flops": flops, "collectives": {k: float(v) for k, v in coll.items()}}
-
-
-def analyze_hlo(text: str) -> Dict[str, object]:
-    return HloStats(text).totals()
-
-
-def per_computation_report(text: str, top: int = 10) -> List[dict]:
-    """Debug view: computations ranked by multiplied collective bytes."""
-    st = HloStats(text)
-    mult: Dict[str, float] = defaultdict(float)
-    stack = set()
-
-    def visit(comp: str, m: float):
-        if comp in stack:
-            return
-        mult[comp] += m
-        stack.add(comp)
-        for callee in st.calls.get(comp, []):
-            visit(callee, m)
-        for body, cond, tc in st.whiles.get(comp, []):
-            n = st._trip_count(cond, tc)
-            visit(body, m * n)
-            visit(cond, m * (n + 1))
-        stack.discard(comp)
-
-    if st.entry:
-        visit(st.entry, 1.0)
-    rows = []
-    for c, d in st.coll.items():
-        per_visit = sum(v for k, v in d.items() if k != "count")
-        rows.append(
-            {
-                "comp": c,
-                "mult": mult.get(c, 0.0),
-                "per_visit_bytes": per_visit,
-                "total_bytes": per_visit * mult.get(c, 0.0),
-                "breakdown": {k: v for k, v in d.items()},
-            }
-        )
-    rows.sort(key=lambda r: -r["total_bytes"])
-    return rows[:top]
-
-
-def collective_bytes(hlo_text: str) -> Dict[str, int]:
-    t = analyze_hlo(hlo_text)["collectives"]
-    return {k: int(v) for k, v in t.items()}
-
-
-__all__ = ["analyze_hlo", "collective_bytes", "HloStats"]
+__all__ = [
+    "analyze_hlo",
+    "collective_bytes",
+    "collective_inventory",
+    "per_computation_report",
+    "HloStats",
+]

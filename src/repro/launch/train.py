@@ -13,7 +13,6 @@ coordinator from the environment. On this CPU container it runs single-host
 from __future__ import annotations
 
 import argparse
-import os
 
 
 def main():

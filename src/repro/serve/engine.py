@@ -190,6 +190,17 @@ class ServeEngine:
     def n_outstanding(self) -> int:
         return len(self._pending) + len(self._waiting) + len(self._live)
 
+    def jit_cache_entries(self) -> Dict[str, int]:
+        """Compiled-entry count per jitted function, for the jit-cache audit
+        (repro.analysis): after any episode the contract is exactly
+        ``{"serve.prefill_chunk": 1, "serve.decode": 1}`` — a second entry
+        under either key means some call site broke the fixed-shape promise
+        (e.g. a mis-sized chunk) and paid a silent recompile."""
+        return {
+            "serve.prefill_chunk": self._chunk_fn._cache_size(),
+            "serve.decode": self._decode_fn._cache_size(),
+        }
+
     # -- step ----------------------------------------------------------------
 
     def step(self) -> ServeStepReport:

@@ -1,0 +1,325 @@
+"""Unit tests for the repro.analysis compiled-program audit passes.
+
+Each pass is exercised on a synthetic program small enough to reason about
+by hand, plus the serve-engine jit-cache regression the pass framework
+exists to pin: a reduced episode leaves EXACTLY two compiled shapes, and an
+intentionally mis-sized prefill chunk shows up as a finding.
+"""
+
+import json
+import warnings
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.analysis.findings import Baseline, Finding
+from repro.analysis.hlo import collective_inventory
+from repro.analysis.passes import (
+    audit_collectives,
+    audit_donation,
+    audit_dtype_promotion,
+    audit_host_transfers,
+    audit_jit_cache,
+)
+from repro.analysis.program import Program
+
+# ---------------------------------------------------------------------------
+# jit-cache audit (pure logic)
+# ---------------------------------------------------------------------------
+
+
+def test_jit_cache_audit_exact_match_passes():
+    assert audit_jit_cache({"a": 1, "b": 2}, {"a": 1, "b": 2}) == []
+
+
+def test_jit_cache_audit_flags_mismatch_missing_and_unknown():
+    findings = audit_jit_cache({"a": 3, "c": 1}, {"a": 1, "b": 2})
+    assert all(f.rule == "jit-cache" for f in findings)
+    # a: 3 shapes vs contract 1; b: never observed; c: outside the contract
+    assert sorted(f.where for f in findings) == ["a", "b", "c"]
+    by_where = {f.where: f for f in findings}
+    assert "extra compiled shapes" in by_where["a"].message
+
+
+# ---------------------------------------------------------------------------
+# dtype-promotion audit
+# ---------------------------------------------------------------------------
+
+
+def _bf16_program(fn, *args, name="p"):
+    return Program(
+        name=name, kind="test", jaxpr=jax.make_jaxpr(fn)(*args), bf16_path=True
+    )
+
+
+def test_dtype_audit_flags_materialised_f32_dot():
+    a = jnp.zeros((8, 8), jnp.bfloat16)
+
+    def bad(x, y):
+        return x.astype(jnp.float32) @ y.astype(jnp.float32)
+
+    findings = audit_dtype_promotion(_bf16_program(bad, a, a))
+    assert [f.rule for f in findings] == ["dtype-promotion"]
+    assert "materialised" in findings[0].message
+
+
+def test_dtype_audit_allows_preferred_element_type():
+    a = jnp.zeros((8, 8), jnp.bfloat16)
+
+    def good(x, y):
+        return jax.lax.dot_general(
+            x, y, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+        )
+
+    assert audit_dtype_promotion(_bf16_program(good, a, a)) == []
+
+
+def test_dtype_audit_allows_single_convert_accumulator():
+    # f32 probabilities x upcast bf16 values: the online-softmax accumulator
+    # pattern — numerically required, must NOT be flagged
+    probs = jnp.zeros((8, 8), jnp.float32)
+    vals = jnp.zeros((8, 8), jnp.bfloat16)
+
+    def acc(p, v):
+        return p @ v.astype(jnp.float32)
+
+    assert audit_dtype_promotion(_bf16_program(acc, probs, vals)) == []
+
+
+def test_dtype_audit_skips_non_bf16_programs():
+    a = jnp.zeros((8, 8), jnp.bfloat16)
+
+    def bad(x, y):
+        return x.astype(jnp.float32) @ y.astype(jnp.float32)
+
+    prog = Program(name="p", kind="test", jaxpr=jax.make_jaxpr(bad)(a, a))
+    assert audit_dtype_promotion(prog) == []
+
+
+def test_dtype_audit_excludes_pallas_kernel_bodies():
+    # flash does astype(f32) INSIDE the kernel (VMEM upcast feeding the MXU,
+    # not an HBM temporary) — the walk must not descend into pallas_call
+    from repro.analysis.program import build_flash_programs
+
+    for prog in build_flash_programs():
+        assert audit_dtype_promotion(prog) == []
+
+
+# ---------------------------------------------------------------------------
+# donation audit
+# ---------------------------------------------------------------------------
+
+
+def test_donation_audit_passes_when_buffers_alias():
+    fn = jax.jit(lambda acc, x: acc + x, donate_argnums=(0,))
+    text = fn.lower(jnp.zeros(4), jnp.zeros(4)).as_text()
+    prog = Program(
+        name="d",
+        kind="test",
+        lowered_text=text,
+        donate_argnums=(0,),
+        n_donatable_leaves=1,
+    )
+    assert audit_donation(prog) == []
+
+
+def test_donation_audit_flags_unusable_donation():
+    # output shape differs from every input: jax drops tf.aliasing_output and
+    # XLA satisfies the "donation" with a copy — exactly what the pass catches
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore")
+        fn = jax.jit(lambda acc: acc.sum(), donate_argnums=(0,))
+        text = fn.lower(jnp.zeros((8,), jnp.float32)).as_text()
+    prog = Program(
+        name="d",
+        kind="test",
+        lowered_text=text,
+        donate_argnums=(0,),
+        n_donatable_leaves=1,
+    )
+    findings = audit_donation(prog)
+    assert [f.rule for f in findings] == ["donation"]
+    assert findings[0].detail == {"aliased": 0, "donatable": 1}
+
+
+# ---------------------------------------------------------------------------
+# host-transfer audit
+# ---------------------------------------------------------------------------
+
+
+def test_host_transfer_audit_catches_pure_callback():
+    def f(x):
+        return jax.pure_callback(
+            lambda a: np.asarray(a) * 2, jax.ShapeDtypeStruct((4,), jnp.float32), x
+        )
+
+    prog = Program(
+        name="h", kind="test", jaxpr=jax.make_jaxpr(f)(jnp.zeros(4)),
+        step_program=True,
+    )
+    findings = audit_host_transfers(prog)
+    assert len(findings) == 1
+    assert findings[0].rule == "host-transfer"
+    assert "pure_callback" in findings[0].message
+
+
+def test_host_transfer_audit_clean_program():
+    prog = Program(
+        name="h", kind="test", jaxpr=jax.make_jaxpr(lambda x: x * 2)(jnp.zeros(4)),
+        step_program=True,
+    )
+    assert audit_host_transfers(prog) == []
+
+
+# ---------------------------------------------------------------------------
+# collective inventory + cross-check (synthetic HLO)
+# ---------------------------------------------------------------------------
+
+_AG_HLO = """\
+HloModule synthetic
+
+ENTRY %main (p0: f32[16]) -> f32[64] {
+  %p0 = f32[16]{0} parameter(0)
+  ROOT %ag = f32[64]{0} all-gather(%p0), replica_groups={{0,1,2,3}}, dimensions={0}
+}
+"""
+
+_AG_CP_HLO = """\
+HloModule synthetic
+
+ENTRY %main (p0: f32[16]) -> f32[64] {
+  %p0 = f32[16]{0} parameter(0)
+  %cp = f32[16]{0} collective-permute(%p0), source_target_pairs={{0,1},{1,0}}
+  ROOT %ag = f32[64]{0} all-gather(%cp), replica_groups={{0,1,2,3}}, dimensions={0}
+}
+"""
+
+_TUPLE_CP_HLO = """\
+HloModule synthetic
+
+ENTRY %main (p0: f32[8], p1: f32[8]) -> (f32[8], f32[8]) {
+  %p0 = f32[8]{0} parameter(0)
+  %p1 = f32[8]{0} parameter(1)
+  ROOT %cp = (f32[8]{0}, f32[8]{0}) collective-permute(%p0, %p1), source_target_pairs={{0,1},{1,0}}
+}
+"""
+
+
+def _dist_program(modeled, text=_AG_HLO):
+    return Program(
+        name="dist.x", kind="dist", compiled_text=text,
+        meta={"modeled_bytes": modeled},
+    )
+
+
+def test_collectives_within_tolerance_passes():
+    # all-gather result f32[64] = 256 bytes, modeled exactly
+    assert audit_collectives(_dist_program({"all-gather": 256.0})) == []
+
+
+def test_collectives_beyond_tolerance_flags():
+    findings = audit_collectives(_dist_program({"all-gather": 512.0}))
+    assert [f.rule for f in findings] == ["collectives"]
+    assert findings[0].where == "dist.x.all-gather"
+
+
+def test_collectives_flags_unmodeled_kind():
+    findings = audit_collectives(
+        _dist_program({"all-gather": 256.0}, text=_AG_CP_HLO)
+    )
+    assert [f.where for f in findings] == ["dist.x.collective-permute"]
+    assert "unmodeled" in findings[0].message
+
+
+def test_inventory_sums_tuple_collective_results():
+    inv = collective_inventory(_TUPLE_CP_HLO)
+    # a tuple permute moves the SUM of its element bytes: 2 x f32[8] = 64
+    assert inv["collective-permute"]["bytes"] == 64.0
+    assert inv["collective-permute"]["count"] == 1.0
+
+
+# ---------------------------------------------------------------------------
+# baseline
+# ---------------------------------------------------------------------------
+
+
+def test_baseline_split_new_accepted_stale():
+    f_known = Finding(rule="r", where="a", message="m")
+    f_new = Finding(rule="r", where="b", message="m")
+    bl = Baseline(entries={"r:a": "known issue", "r:gone": "was fixed"})
+    new, accepted, stale = bl.split([f_known, f_new])
+    assert [f.where for f in new] == ["b"]
+    assert [f.where for f in accepted] == ["a"]
+    assert stale == ["r:gone"]
+
+
+def test_baseline_load_requires_justification(tmp_path):
+    p = tmp_path / "baseline.json"
+    p.write_text(json.dumps({"accepted": [{"fingerprint": "r:x"}]}))
+    with pytest.raises(ValueError, match="justification"):
+        Baseline.load(p)
+
+
+def test_baseline_round_trip(tmp_path):
+    p = tmp_path / "baseline.json"
+    Baseline(entries={"r:x": "why"}, path=p).save()
+    assert Baseline.load(p).entries == {"r:x": "why"}
+
+
+# ---------------------------------------------------------------------------
+# serve-engine jit-cache regression (the contract the audit exists to pin)
+# ---------------------------------------------------------------------------
+
+_SERVE_CONTRACT = {"serve.prefill_chunk": 1, "serve.decode": 1}
+
+
+@pytest.fixture(scope="module")
+def serve_episode_engine():
+    from repro.analysis.program import reduced_arch, reduced_call
+    from repro.models.transformer import init_model
+    from repro.serve.engine import ServeEngine
+    from repro.serve.request import Request
+
+    cfg = reduced_arch()
+    call = reduced_call(dtype=jnp.float32, attention_impl="dense")
+    params = init_model(jax.random.PRNGKey(0), cfg)
+    engine = ServeEngine(
+        params, cfg, call, max_slots=2, max_len=48, prefill_chunk_size=16
+    )
+    rng = np.random.default_rng(0)
+    engine.run(
+        [
+            Request(rid=0, prompt=rng.integers(1, 255, size=20), max_new_tokens=4),
+            Request(rid=1, prompt=rng.integers(1, 255, size=7), max_new_tokens=3),
+        ]
+    )
+    return engine
+
+
+def test_serve_episode_compiles_exactly_two_shapes(serve_episode_engine):
+    # mixed prompt lengths, chunked prefill, batched decode — still exactly
+    # one compiled shape per jitted function
+    observed = serve_episode_engine.jit_cache_entries()
+    assert observed == _SERVE_CONTRACT
+    assert audit_jit_cache(observed, _SERVE_CONTRACT) == []
+
+
+def test_mis_sized_chunk_triggers_jit_cache_finding(serve_episode_engine):
+    # NOTE: mutates the module-scoped engine's jit cache — must run after
+    # test_serve_episode_compiles_exactly_two_shapes (definition order)
+    engine = serve_episode_engine
+    bad_chunk = jnp.zeros((1, 24), jnp.int32)  # not the configured 16
+    engine._chunk_fn(
+        engine.params,
+        bad_chunk,
+        jnp.int32(0),
+        jnp.int32(8),
+        engine.buffer.slot_caches(0),
+    )
+    findings = audit_jit_cache(engine.jit_cache_entries(), _SERVE_CONTRACT)
+    assert [f.rule for f in findings] == ["jit-cache"]
+    assert findings[0].where == "serve.prefill_chunk"
+    assert "extra compiled shapes" in findings[0].message
